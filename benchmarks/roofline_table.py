@@ -1,0 +1,44 @@
+"""Aggregate the dry-run matrix (results/dryrun/*.json) into the roofline
+table (EXPERIMENTS.md §Roofline).  Rows appear as cells complete; missing
+cells are reported as pending."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import row
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def run() -> list[str]:
+    rows = []
+    if not DRYRUN_DIR.exists():
+        return [row("roofline.status", "no results yet",
+                    "run: python -m repro.launch.dryrun")]
+    cells = sorted(DRYRUN_DIR.glob("*.json"))
+    n_ok = n_fail = n_skip = 0
+    for path in cells:
+        d = json.loads(path.read_text())
+        name = f"{d['arch']}/{d['shape']}/{d['mesh']}"
+        if d["status"] == "skip":
+            n_skip += 1
+            continue
+        if d["status"] == "fail":
+            n_fail += 1
+            rows.append(row(f"roofline.{name}", "FAIL",
+                            d.get("error", "")[:120]))
+            continue
+        n_ok += 1
+        r = d["roofline"]
+        frac = d.get("useful_flops_frac")
+        rows.append(row(
+            f"roofline.{name}",
+            f"{r['step_s_lower_bound']:.4f}s",
+            f"dom={r['dominant']};c={r['compute_s']:.3f};m={r['memory_s']:.3f};"
+            f"coll={r['collective_s']:.3f};peak_gb={d['mem']['peak_gb']:.1f};"
+            f"useful={frac:.2f}" if frac else "",
+        ))
+    rows.insert(0, row("roofline.cells", f"{n_ok}ok/{n_fail}fail/{n_skip}skip",
+                       f"of {len(cells)} attempted"))
+    return rows

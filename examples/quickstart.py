@@ -1,0 +1,62 @@
+"""Quickstart: the paper's pipeline end-to-end in ~a minute on CPU.
+
+1. build the binary KWS CNN (reduced width),
+2. QAT-train it briefly on the synthetic speech-commands corpus,
+3. export ternary weights + SA thresholds,
+4. compile to the PSCNN instruction set,
+5. execute on the cycle-accurate CIM simulator and compare with QAT.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compiler, isa
+from repro.core.executor import Executor
+from repro.data import gscd
+from repro.models import kws
+from repro.train import optimizer as opt_lib
+
+STEPS, BATCH, IN_LEN, WIDTH = 20, 16, 2000, 16
+
+
+def main() -> None:
+    spec = kws.build_kws_spec(in_len=IN_LEN, width=WIDTH)
+    print(f"model: {spec.total_weights} ternary weights "
+          f"({spec.model_size_kb:.0f}Kb), {spec.total_macs/1e6:.1f}M MACs")
+
+    params = kws.init_kws_params(jax.random.PRNGKey(0), spec)
+    ocfg = opt_lib.OptConfig(lr=2e-3)
+    state = opt_lib.init_opt_state(ocfg, params)
+
+    @jax.jit
+    def step(state, params, x, y):
+        loss, grads = jax.value_and_grad(kws.kws_loss)(params, x, y, spec)
+        state, _ = opt_lib.update(ocfg, state, grads)
+        return state, opt_lib.cast_params_like(state["master"], params), loss
+
+    for i in range(STEPS):
+        xb, yb = gscd.batch(seed=0, step=i, batch_size=BATCH, n=IN_LEN)
+        state, params, loss = step(state, params, jnp.array(xb), jnp.array(yb))
+        if i % 5 == 0:
+            print(f"  step {i:3d}  loss {float(loss):.4f}")
+
+    weights, thresholds = kws.export_kws(params, spec)
+    prog = compiler.compile_model(spec, weights, thresholds)
+    print(f"\ncompiled program: {len(prog.words)} instructions")
+    print(prog.disassemble()[:600], "...\n")
+
+    x, y = gscd.batch(seed=9, step=0, batch_size=1, n=IN_LEN)
+    rep = Executor(prog).run(x[0][:, None])
+    qat = np.asarray(kws.kws_forward(params, jnp.array(x[0]), spec))
+    print("CIM logits:", rep.output.ravel())
+    print("QAT logits:", qat.astype(int))
+    print("bit-exact:", np.array_equal(rep.output.ravel().astype(float), qat))
+    s = rep.ledger.summary()
+    print(f"latency {s['latency_us']:.0f}us | {s['gops']:.1f} GOPS | "
+          f"{s['tops_per_w']:.0f} TOPS/W | {s['energy_uj']*1000:.1f} nJ/inf")
+
+
+if __name__ == "__main__":
+    main()

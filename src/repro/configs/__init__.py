@@ -1,0 +1,11 @@
+from repro.configs.base import (
+    ArchConfig,
+    MoEConfig,
+    ShapeConfig,
+    SHAPES,
+    arch_names,
+    get_arch,
+)
+
+__all__ = ["ArchConfig", "MoEConfig", "ShapeConfig", "SHAPES",
+           "arch_names", "get_arch"]

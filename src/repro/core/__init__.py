@@ -1,0 +1,21 @@
+"""PSCNN core: the paper's contribution as composable subsystems.
+
+quant     — binary/ternary STE quantizers + bit-packing
+twm       — ternary weight mapping + sense-amplifier model (Fig. 3)
+macro     — 1Mb CIM macro simulator (1024x1024, 128 SAs)
+isa       — 32-bit MAC/WREP/PTR/HALT instruction set (Fig. 2)
+cnn_spec  — declarative binary 1-D CNN model description
+compiler  — spec -> placement + weight SRAM plan + instruction stream
+executor  — controller: runs programs against simulated hardware state
+pwb       — pooling write-back unit (Fig. 6)
+pingpong  — flexible 4x64Kb ping-pong feature SRAM (Fig. 5)
+energy    — cycle/energy model calibrated to Table I
+"""
+from repro.core import quant, twm, macro, isa, cnn_spec, pwb, pingpong, energy
+from repro.core.compiler import compile_model, CompiledProgram
+from repro.core.executor import Executor, ExecutionReport
+
+__all__ = [
+    "quant", "twm", "macro", "isa", "cnn_spec", "pwb", "pingpong", "energy",
+    "compile_model", "CompiledProgram", "Executor", "ExecutionReport",
+]

@@ -1,0 +1,152 @@
+"""Flexible ping-pong feature SRAM (paper §II-F, Fig. 5).
+
+Four 64Kb single-port SRAM banks form one flat 8192-word (32b) space.  Unlike
+a conventional ping-pong buffer (two fixed halves), the IFM read pointer and
+OFM write pointer are set *per layer* by PTR instructions, so allocation is
+fully flexible: a large feature map may span banks (Fig. 5c), and banks not
+addressed by the current layer are powered off (Fig. 5d).
+
+The simulator owns the actual words (the executor reads/writes through it),
+checks single-port discipline at layer granularity (IFM region and OFM
+region must not share a bank — a shared bank would stall every cycle), and
+keeps read/write/energy counters for the power model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import isa
+
+WORDS = isa.MAX_ADDR           # 8192 x 32b = 256Kb total
+BANK_WORDS = isa.BANK_WORDS    # 2048
+N_BANKS = isa.N_BANKS          # 4
+
+
+def banks_of(addr: int, n_words: int) -> set[int]:
+    if n_words <= 0:
+        return set()
+    first = addr // BANK_WORDS
+    last = (addr + n_words - 1) // BANK_WORDS
+    return set(range(first, last + 1))
+
+
+@dataclasses.dataclass
+class FmapRef:
+    """A feature map stored in the ping-pong space.
+
+    Flat stream layout (position-major, channel-minor):
+      fmt='bits': (length, channels) binary, 32 values per word
+      fmt='u8'  : (length, channels) 8-bit unsigned, 4 per word
+    """
+
+    addr: int
+    length: int
+    channels: int
+    fmt: str = "bits"
+
+    @property
+    def n_bits(self) -> int:
+        per = 1 if self.fmt == "bits" else 8
+        return self.length * self.channels * per
+
+    @property
+    def n_words(self) -> int:
+        return (self.n_bits + 31) // 32
+
+    @property
+    def banks(self) -> set[int]:
+        return banks_of(self.addr, self.n_words)
+
+
+class PingPongSRAM:
+    def __init__(self) -> None:
+        self.mem = np.zeros(WORDS, dtype=np.uint32)
+        self.reads_bits = 0
+        self.writes_bits = 0
+        self.bank_active_cycles = np.zeros(N_BANKS, dtype=np.int64)
+
+    # -- layer-level discipline checks --------------------------------------
+
+    @staticmethod
+    def check_layer(ifm: FmapRef, ofm: FmapRef) -> None:
+        """IFM and OFM must fit, not overlap, and not share a bank
+        (single-port: one side reads while the other writes)."""
+        for ref, name in ((ifm, "IFM"), (ofm, "OFM")):
+            if ref.addr < 0 or ref.addr + ref.n_words > WORDS:
+                raise MemoryError(
+                    f"{name} [{ref.addr}, {ref.addr + ref.n_words}) exceeds "
+                    f"{WORDS}-word ping-pong space"
+                )
+        a0, a1 = ifm.addr, ifm.addr + ifm.n_words
+        b0, b1 = ofm.addr, ofm.addr + ofm.n_words
+        if max(a0, b0) < min(a1, b1):
+            raise MemoryError(f"IFM {a0}:{a1} overlaps OFM {b0}:{b1}")
+        shared = ifm.banks & ofm.banks
+        if shared:
+            raise MemoryError(
+                f"single-port violation: IFM banks {sorted(ifm.banks)} and "
+                f"OFM banks {sorted(ofm.banks)} share {sorted(shared)}"
+            )
+
+    def active_banks(self, ifm: FmapRef, ofm: FmapRef) -> set[int]:
+        return ifm.banks | ofm.banks
+
+    def account_layer(self, ifm: FmapRef, ofm: FmapRef, cycles: int) -> None:
+        """Charge bank-active cycles for a layer (idle banks powered off)."""
+        for b in self.active_banks(ifm, ofm):
+            self.bank_active_cycles[b] += cycles
+
+    # -- storage -------------------------------------------------------------
+
+    def write_bits(self, ref: FmapRef, bits: np.ndarray) -> None:
+        """bits: (length, channels) 0/1 -> flat packed words at ref.addr."""
+        assert ref.fmt == "bits" and bits.shape == (ref.length, ref.channels)
+        flat = np.zeros(ref.n_words * 32, dtype=np.uint32)
+        flat[: bits.size] = bits.reshape(-1).astype(np.uint32)
+        grouped = flat.reshape(ref.n_words, 32)
+        shifts = np.arange(32, dtype=np.uint32)
+        words = (grouped << shifts).sum(axis=-1, dtype=np.uint64).astype(np.uint32)
+        self.mem[ref.addr : ref.addr + ref.n_words] = words
+        self.writes_bits += bits.size
+
+    def read_bits(self, ref: FmapRef) -> np.ndarray:
+        assert ref.fmt == "bits"
+        words = self.mem[ref.addr : ref.addr + ref.n_words]
+        shifts = np.arange(32, dtype=np.uint32)
+        bits = ((words[:, None] >> shifts) & np.uint32(1)).reshape(-1)
+        self.reads_bits += ref.length * ref.channels
+        return bits[: ref.length * ref.channels].reshape(ref.length, ref.channels)
+
+    def write_u8(self, ref: FmapRef, vals: np.ndarray) -> None:
+        assert ref.fmt == "u8" and vals.shape == (ref.length, ref.channels)
+        flat = np.zeros(ref.n_words * 4, dtype=np.uint32)
+        flat[: vals.size] = vals.reshape(-1).astype(np.uint32) & 0xFF
+        grouped = flat.reshape(ref.n_words, 4)
+        shifts = np.arange(4, dtype=np.uint32) * 8
+        words = (grouped << shifts).sum(axis=-1, dtype=np.uint64).astype(np.uint32)
+        self.mem[ref.addr : ref.addr + ref.n_words] = words
+        self.writes_bits += vals.size * 8
+
+    def read_u8(self, ref: FmapRef) -> np.ndarray:
+        assert ref.fmt == "u8"
+        words = self.mem[ref.addr : ref.addr + ref.n_words]
+        shifts = np.arange(4, dtype=np.uint32) * 8
+        vals = ((words[:, None] >> shifts) & np.uint32(0xFF)).reshape(-1)
+        self.reads_bits += ref.length * ref.channels * 8
+        return vals[: ref.length * ref.channels].reshape(ref.length, ref.channels)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPingPong:
+    """Conventional baseline (Fig. 5a): two fixed 128Kb halves.
+
+    Used by the Fig. 5 benchmark to show layers that the fixed scheme cannot
+    host but the flexible scheme can.
+    """
+
+    half_words: int = WORDS // 2
+
+    def fits(self, ifm: FmapRef, ofm: FmapRef) -> bool:
+        return ifm.n_words <= self.half_words and ofm.n_words <= self.half_words

@@ -1,0 +1,178 @@
+"""Quantization primitives for the PSCNN binary/ternary regime.
+
+The paper's arithmetic domain (Section II-D):
+  * activations are binary  {+1, 0}   (one SRAM wordline is either driven or not)
+  * weights     are ternary {+1, 0, -1} (one cell pair under TWM)
+
+Training uses straight-through estimators (STE) so the binarized network is
+trainable with ordinary SGD/Adam (Hubara et al., "Binarized Neural
+Networks", the paper's ref [6], extended to ternary weights a la TWN).
+
+Bit-packing: the TPU kernels consume activations and weight planes packed
+32-lanes-per-uint32 along the contraction axis — the digital analogue of the
+paper's 1024-wordline bitline (1024 bits = 32 packed words).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PACK = 32  # bits per packed word (uint32 lanes)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimators
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def binarize_act(x: jax.Array) -> jax.Array:
+    """Binary activation {1, 0}: the sense-amplifier decision of eq. (1).
+
+    Forward: 1 if x >= 0 else 0.  Backward: clipped straight-through
+    (gradient passes where |x| <= 1, the standard BNN hard-tanh window).
+    """
+    return (x >= 0).astype(x.dtype)
+
+
+def _binarize_act_fwd(x):
+    return binarize_act(x), x
+
+
+def _binarize_act_bwd(x, g):
+    pass_through = (jnp.abs(x) <= 1.0).astype(g.dtype)
+    return (g * pass_through,)
+
+
+binarize_act.defvjp(_binarize_act_fwd, _binarize_act_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def ternarize_weight(w: jax.Array, threshold_scale: float = 0.05) -> jax.Array:
+    """Ternary weight {-1, 0, +1} with a per-tensor magnitude threshold.
+
+    delta = threshold_scale * mean(|w|)   (TWN-style symmetric threshold).
+    Backward: identity STE (full pass-through; weights live in fp32 shadow).
+    """
+    delta = threshold_scale * jnp.mean(jnp.abs(w))
+    return (jnp.sign(w) * (jnp.abs(w) > delta)).astype(w.dtype)
+
+
+def _ternarize_fwd(w, threshold_scale):
+    return ternarize_weight(w, threshold_scale), None
+
+
+def _ternarize_bwd(threshold_scale, _res, g):
+    return (g,)
+
+
+ternarize_weight.defvjp(_ternarize_fwd, _ternarize_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Plane decomposition (TWM view of a ternary tensor)
+# ---------------------------------------------------------------------------
+
+def ternary_planes(w_t: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split ternary {-1,0,1} into (positive, negative) 0/1 planes.
+
+    This is exactly the paper's TWM cell-pair assignment: ``w=+1`` programs
+    the positive cell, ``w=-1`` the negative cell, ``w=0`` neither
+    (Fig. 3(b)).
+    """
+    pos = (w_t > 0).astype(jnp.uint32)
+    neg = (w_t < 0).astype(jnp.uint32)
+    return pos, neg
+
+
+def planes_to_ternary(pos: jax.Array, neg: jax.Array) -> jax.Array:
+    return pos.astype(jnp.int32) - neg.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Bit packing along the contraction axis
+# ---------------------------------------------------------------------------
+
+def pack_bits(bits: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack a 0/1 array into uint32 words along ``axis``.
+
+    ``bits.shape[axis]`` must be a multiple of 32 (pad with zeros first —
+    zero lanes contribute nothing to popcount MACs, exactly like inactive
+    wordlines in the macro).
+    """
+    bits = jnp.asarray(bits)
+    axis = axis % bits.ndim
+    n = bits.shape[axis]
+    if n % PACK != 0:
+        raise ValueError(f"pack axis length {n} not a multiple of {PACK}")
+    moved = jnp.moveaxis(bits, axis, -1).astype(jnp.uint32)
+    grouped = moved.reshape(*moved.shape[:-1], n // PACK, PACK)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    packed = jnp.sum(grouped << shifts, axis=-1, dtype=jnp.uint32)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def unpack_bits(packed: jax.Array, axis: int = -1, n: int | None = None) -> jax.Array:
+    """Inverse of :func:`pack_bits`; returns uint32 0/1 array."""
+    packed = jnp.asarray(packed)
+    axis = axis % packed.ndim
+    moved = jnp.moveaxis(packed, axis, -1)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    bits = (moved[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(*moved.shape[:-1], moved.shape[-1] * PACK)
+    if n is not None:
+        bits = bits[..., :n]
+    return jnp.moveaxis(bits, -1, axis)
+
+
+def pad_to_multiple(x: jax.Array, multiple: int, axis: int) -> jax.Array:
+    """Zero-pad ``axis`` up to the next multiple (inactive wordlines)."""
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+# ---------------------------------------------------------------------------
+# Folded batch-norm threshold (the "theta" the SA compares against)
+# ---------------------------------------------------------------------------
+
+def fold_bn_to_threshold(gamma, beta, mean, var, eps: float = 1e-5):
+    """Fold BN + sign into an integer-valued popcount threshold.
+
+    For a pre-activation integer s (popcount difference) the binarized output
+    is ``sign(gamma * (s - mean)/sqrt(var+eps) + beta)``.  With gamma>0 this
+    is ``s >= mean - beta*sqrt(var+eps)/gamma``; gamma<0 flips the compare.
+    Returns (threshold, flip) so inference needs no floating point — the SA
+    compares popcount currents against a programmable offset, which is how a
+    real CIM macro absorbs BN.
+    """
+    std = jnp.sqrt(var + eps)
+    thr = mean - beta * std / jnp.where(gamma == 0, 1e-9, gamma)
+    flip = gamma < 0
+    return thr, flip
+
+
+@functools.partial(jax.jit, static_argnames=())
+def apply_threshold(s: jax.Array, thr: jax.Array, flip: jax.Array) -> jax.Array:
+    """Binary output of the SA given popcount difference ``s``."""
+    ge = s >= thr
+    return jnp.where(flip, ~ge, ge).astype(jnp.uint32)
+
+
+def np_pack_bits(bits: np.ndarray, axis: int = -1) -> np.ndarray:
+    """NumPy twin of :func:`pack_bits` for host-side weight preparation."""
+    axis = axis % bits.ndim
+    n = bits.shape[axis]
+    assert n % PACK == 0, f"pack axis length {n} not a multiple of {PACK}"
+    moved = np.moveaxis(bits, axis, -1).astype(np.uint32)
+    grouped = moved.reshape(*moved.shape[:-1], n // PACK, PACK)
+    shifts = np.arange(PACK, dtype=np.uint32)
+    packed = (grouped << shifts).sum(axis=-1).astype(np.uint32)
+    return np.moveaxis(packed, -1, axis)

@@ -1,0 +1,123 @@
+"""Ternary Weight Mapping (TWM) semantics and the sense-amplifier model.
+
+Paper Section II-D / Fig. 3.  Under BWM a bitline current is compared with a
+reference bitline; under TWM each ternary weight occupies a *pair* of cells
+and the SA compares the positive-popcount current with the negative-popcount
+current directly.  Two consequences reproduced here:
+
+  1. functional:   out = SA(pop(x & w+) - pop(x & w-) - theta)
+  2. reliability:  the worst-case sensing margin doubles (Fig. 3c).  We model
+     the SA as comparing (I+ - I-) with additive Gaussian noise of sigma
+     cells; BWM's margin is 1 cell-current unit, TWM's is 2.
+
+The functional path is what the TPU kernels implement; the noisy path drives
+the Fig. 3(c) reproduction benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+@dataclasses.dataclass(frozen=True)
+class SAModel:
+    """Sense-amplifier behavioural model.
+
+    noise_sigma: std-dev of the current-difference sampling noise, in units
+    of one cell current (the paper's "sensing variation").  0.0 = ideal
+    digital behaviour.
+    """
+
+    noise_sigma: float = 0.0
+
+    def decide(self, diff: jax.Array, key: jax.Array | None = None) -> jax.Array:
+        """Eq. (1): Dout = 1 iff diff >= 0 (with optional sampling noise)."""
+        if self.noise_sigma > 0.0:
+            if key is None:
+                raise ValueError("noisy SA needs a PRNG key")
+            diff = diff + self.noise_sigma * jax.random.normal(
+                key, diff.shape, dtype=jnp.float32
+            )
+        return (diff >= 0).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Functional TWM MAC (dense form; the kernels implement the packed form)
+# ---------------------------------------------------------------------------
+
+def twm_mac(x_bits: jax.Array, w_ternary: jax.Array) -> jax.Array:
+    """Popcount-difference MAC: x_bits (…, K) in {0,1}, w (K, N) in {-1,0,1}.
+
+    Returns the raw integer bitline-pair difference (…, N) — the quantity the
+    SA senses.  Equivalent to ``x_bits @ w`` but written as the two popcount
+    planes to mirror the hardware exactly.
+    """
+    pos, neg = quant.ternary_planes(w_ternary)
+    xi = x_bits.astype(jnp.int32)
+    return xi @ pos.astype(jnp.int32) - xi @ neg.astype(jnp.int32)
+
+
+def bwm_mac(x_bits: jax.Array, w_binary: jax.Array, n_ref: jax.Array | None = None):
+    """Binary-weight-mapping MAC against a reference bitline (Fig. 3a).
+
+    w_binary in {-1,+1} maps to a single cell: +1 programs the cell, -1
+    leaves it off; the SA compares against a reference current equal to half
+    of the active wordlines.  diff = pop(x & w+) - ref.
+    """
+    wp = (w_binary > 0).astype(jnp.int32)
+    xi = x_bits.astype(jnp.int32)
+    pop = xi @ wp
+    active = jnp.sum(xi, axis=-1, keepdims=True)
+    ref = active.astype(jnp.float32) / 2.0 if n_ref is None else n_ref
+    return pop.astype(jnp.float32) - ref
+
+
+def sensing_margin_twm() -> float:
+    """Worst-case margin (cell-current units) for TWM: a ±1 weight flip moves
+    the differential current by 2 units (one cell on each bitline)."""
+    return 2.0
+
+
+def sensing_margin_bwm() -> float:
+    """Worst-case margin for BWM: 1 unit against the reference."""
+    return 1.0
+
+
+def flip_rate_under_noise(
+    key: jax.Array,
+    x_bits: jax.Array,
+    w_ternary: jax.Array,
+    sigma: float,
+    mapping: str = "twm",
+    trials: int = 32,
+) -> jax.Array:
+    """Monte-Carlo SA decision flip-rate vs the ideal decision (Fig. 3c).
+
+    For the BWM arm, zero weights are randomly rounded to ±1 (BWM cannot
+    represent 0) — exactly the representational handicap the paper cites.
+    """
+    sa = SAModel(noise_sigma=sigma)
+    if mapping == "twm":
+        diff = twm_mac(x_bits, w_ternary).astype(jnp.float32)
+        # margin-doubling: differential sensing sees 2 units per LSB
+        diff = diff * 2.0
+    elif mapping == "bwm":
+        kb, key = jax.random.split(key)
+        rnd = jax.random.rademacher(kb, w_ternary.shape, dtype=jnp.int32)
+        w_b = jnp.where(w_ternary == 0, rnd, w_ternary)
+        diff = bwm_mac(x_bits, w_b)
+    else:
+        raise ValueError(mapping)
+
+    ideal = (diff >= 0)
+    keys = jax.random.split(key, trials)
+
+    def one(k):
+        noisy = sa.decide(diff, k).astype(bool)
+        return jnp.mean(noisy != ideal)
+
+    return jnp.mean(jax.vmap(one)(keys))

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the PSCNN popcount arithmetic.
+
+Kernel files follow the repo convention: <name>.py holds the pallas_call +
+BlockSpec, ops.py the jit'd public wrappers, ref.py the pure-jnp oracles.
+"""
+from repro.kernels.ops import (
+    twm_linear,
+    twm_linear_mxu,
+    bnn_conv1d,
+    bitserial_conv1d,
+    pick_path,
+)
+
+__all__ = [
+    "twm_linear",
+    "twm_linear_mxu",
+    "bnn_conv1d",
+    "bitserial_conv1d",
+    "pick_path",
+]

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: binary 1-D convolution with fused SA + pooling (PWB).
+
+Reproduces the PSCNN dataflow (paper §II-E, Fig. 4): the K-tap convolution is
+computed as K *shifted* popcount GEMMs accumulated in VMEM — the digital twin
+of "shift the IFM downward in the line buffer and activate wordline groups
+alternately".  Because the accumulation covers the whole (Cin x K) receptive
+field inside one grid cell, each cell emits *finished* activations in IFM
+order, which is exactly what lets the paper bolt pooling onto the write-back
+path (PWB, §II-H): here the max-pool (an OR on binary data) runs in-register
+before the tile is written — the OFM tile that leaves the kernel is already
+pooled, so the pooled layer costs zero extra HBM traffic.
+
+Layouts (host side prepares these via ``ops.shifted_strided_views``):
+  xs  : (K, L_out, Cw) uint32 — tap-shifted strided views, channel-packed
+  wp  : (K, Cw, Cout) uint32  — positive plane per tap
+  wn  : (K, Cw, Cout) uint32  — negative plane
+  thr : (1, Cout) float32, flip : (1, Cout) int32
+
+Grid: (L_out / bl, Cout / bn).  Output: (L_out / pool, Cout).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BL = 512
+DEFAULT_BN = 128
+
+
+def _conv_tile(xs, wp, wn, k: int, cw: int):
+    """Accumulate K shifted popcount GEMM taps -> (bl, bn) int32."""
+    bl = xs.shape[1]
+    bn = wp.shape[2]
+    acc = jnp.zeros((bl, bn), jnp.int32)
+    for tap in range(k):
+        for c in range(cw):
+            xa = xs[tap, :, c][:, None]  # (bl, 1)
+            p = jax.lax.population_count(jnp.bitwise_and(xa, wp[tap, c][None, :]))
+            n = jax.lax.population_count(jnp.bitwise_and(xa, wn[tap, c][None, :]))
+            acc = acc + p.astype(jnp.int32) - n.astype(jnp.int32)
+    return acc
+
+
+def _kernel(
+    xs_ref, wp_ref, wn_ref, thr_ref, flip_ref, o_ref, *, k: int, cw: int, pool: int
+):
+    diff = _conv_tile(xs_ref[...], wp_ref[...], wn_ref[...], k, cw)
+    ge = diff.astype(jnp.float32) >= thr_ref[0, :][None, :]
+    flip = flip_ref[0, :][None, :] != 0
+    y = jnp.where(flip, ~ge, ge).astype(jnp.uint32)
+    if pool > 1:
+        bl, bn = y.shape
+        # PWB: OR-reduce the window before write-back (binary max-pool).
+        y = jnp.max(y.reshape(bl // pool, pool, bn), axis=1)
+    o_ref[...] = y
+
+
+def _kernel_raw(xs_ref, wp_ref, wn_ref, o_ref, *, k: int, cw: int):
+    o_ref[...] = _conv_tile(xs_ref[...], wp_ref[...], wn_ref[...], k, cw)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pool", "bl", "bn", "mode", "interpret")
+)
+def bnn_conv1d_packed(
+    xs: jax.Array,
+    wp: jax.Array,
+    wn: jax.Array,
+    thr: jax.Array | None = None,
+    flip: jax.Array | None = None,
+    *,
+    pool: int = 1,
+    bl: int = DEFAULT_BL,
+    bn: int = DEFAULT_BN,
+    mode: str = "sa",
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused conv1d -> SA -> pool on pre-shifted packed views.
+
+    L_out must divide into bl blocks and bl into pool windows (pad L_out with
+    dead positions first; they pool to whatever the pad computes and are
+    sliced off by the caller).
+    """
+    k, l_out, cw = xs.shape
+    k2, cw2, n = wp.shape
+    assert k == k2 and cw == cw2 and wn.shape == wp.shape
+    bl = min(bl, l_out)
+    bn = min(bn, n)
+    assert l_out % bl == 0 and n % bn == 0, (l_out, bl, n, bn)
+    assert bl % pool == 0, (bl, pool)
+    grid = (l_out // bl, n // bn)
+
+    xs_spec = pl.BlockSpec((k, bl, cw), lambda i, j: (0, i, 0))
+    w_spec = pl.BlockSpec((k, cw, bn), lambda i, j: (0, 0, j))
+    v_spec = pl.BlockSpec((1, bn), lambda i, j: (0, j))
+
+    if mode == "sa":
+        assert thr is not None and flip is not None
+        o_spec = pl.BlockSpec((bl // pool, bn), lambda i, j: (i, j))
+        return pl.pallas_call(
+            functools.partial(_kernel, k=k, cw=cw, pool=pool),
+            grid=grid,
+            in_specs=[xs_spec, w_spec, w_spec, v_spec, v_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((l_out // pool, n), jnp.uint32),
+            interpret=interpret,
+        )(xs, wp, wn, thr.reshape(1, n), flip.astype(jnp.int32).reshape(1, n))
+    elif mode == "raw":
+        assert pool == 1, "raw mode has no SA output to pool"
+        o_spec = pl.BlockSpec((bl, bn), lambda i, j: (i, j))
+        return pl.pallas_call(
+            functools.partial(_kernel_raw, k=k, cw=cw),
+            grid=grid,
+            in_specs=[xs_spec, w_spec, w_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((l_out, n), jnp.int32),
+            interpret=interpret,
+        )(xs, wp, wn)
+    raise ValueError(f"mode {mode!r}")

@@ -1,0 +1,236 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These handle host-visible concerns the kernels do not: bit-packing, padding
+to block multiples (padding = inactive wordlines / unused bitline pairs, so
+it is numerically inert), tap-shift view construction, and the
+popcount-vs-MXU dispatch heuristic (DESIGN.md §2.4).
+
+On this CPU container every kernel runs with ``interpret=True``; on TPU the
+same call sites compile to real Mosaic kernels (``interpret=False`` via
+``default_interpret``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.kernels import bnn_conv1d as _conv
+from repro.kernels import twm_matmul as _mm
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x, mult, axis):
+    return quant.pad_to_multiple(x, mult, axis)
+
+
+# ---------------------------------------------------------------------------
+# Packing / view helpers (host side of the kernel contract)
+# ---------------------------------------------------------------------------
+
+def pack_activations(x_bits: jax.Array) -> jax.Array:
+    """(..., C) {0,1} -> (..., ceil(C/32)) uint32."""
+    x = _pad_axis(x_bits.astype(jnp.uint32), quant.PACK, -1)
+    return quant.pack_bits(x, axis=-1)
+
+
+def pack_weight_planes(w_t: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Ternary (Cin, Cout) or (K, Cin, Cout) -> packed planes along Cin."""
+    pos, neg = quant.ternary_planes(w_t)
+    axis = -2
+    pos = _pad_axis(pos, quant.PACK, axis)
+    neg = _pad_axis(neg, quant.PACK, axis)
+    return quant.pack_bits(pos, axis=axis), quant.pack_bits(neg, axis=axis)
+
+
+def shifted_strided_views(
+    x_packed: jax.Array, k: int, stride: int, pad: int
+) -> jax.Array:
+    """(L, Cw) packed -> (K, L_out, Cw) tap views (line-buffer mirror)."""
+    l = x_packed.shape[0]
+    xp = jnp.pad(x_packed, ((pad, pad), (0, 0)))
+    l_out = (l + 2 * pad - k) // stride + 1
+    taps = [xp[t : t + (l_out - 1) * stride + 1 : stride] for t in range(k)]
+    return jnp.stack(taps, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Dense layer entry points
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def twm_linear(
+    x_bits: jax.Array,
+    w_t: jax.Array,
+    thr: jax.Array | None = None,
+    flip: jax.Array | None = None,
+    *,
+    mode: str = "sa",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Binary-activation ternary-weight dense layer via the popcount kernel.
+
+    x_bits (M, K) {0,1}; w_t (K, N) {-1,0,1}.  Returns (M, N): uint32 bits in
+    ``sa`` mode, int32 popcount diff in ``raw`` mode.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    m, kdim = x_bits.shape
+    n = w_t.shape[1]
+    xq = pack_activations(x_bits)
+    wp, wn = pack_weight_planes(w_t)
+
+    bm = _pick_block(m, _mm.DEFAULT_BM)
+    bn = _pick_block(n, _mm.DEFAULT_BN)
+    xq = _pad_axis(xq, bm, 0)
+    wp = _pad_axis(wp, bn, 1)
+    wn = _pad_axis(wn, bn, 1)
+    if mode == "sa":
+        thr_p = _pad_axis(thr.astype(jnp.float32), bn, 0)
+        flip_p = _pad_axis(flip.astype(jnp.int32), bn, 0)
+        out = _mm.twm_matmul(
+            xq, wp, wn, thr_p, flip_p, bm=bm, bn=bn, mode="sa", interpret=interpret
+        )
+    else:
+        out = _mm.twm_matmul(xq, wp, wn, bm=bm, bn=bn, mode="raw", interpret=interpret)
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def twm_linear_mxu(
+    x_bits: jax.Array,
+    w_t: jax.Array,
+    thr: jax.Array,
+    flip: jax.Array,
+    *,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """MXU int8 path with identical semantics (beyond-paper, compute-bound)."""
+    interpret = default_interpret() if interpret is None else interpret
+    m, kdim = x_bits.shape
+    n = w_t.shape[1]
+    bm = _pick_block(m, 256)
+    bn = _pick_block(n, 256)
+    x8 = _pad_axis(x_bits.astype(jnp.int8), bm, 0)
+    w8 = _pad_axis(w_t.astype(jnp.int8), bn, 1)
+    thr_p = _pad_axis(thr.astype(jnp.float32), bn, 0)
+    flip_p = _pad_axis(flip.astype(jnp.int32), bn, 0)
+    out = _mm.twm_matmul_mxu(x8, w8, thr_p, flip_p, bm=bm, bn=bn, interpret=interpret)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Conv layer entry point (PWB-fused)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "pad", "pool", "mode", "interpret")
+)
+def bnn_conv1d(
+    x_bits: jax.Array,
+    w_t: jax.Array,
+    thr: jax.Array | None = None,
+    flip: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    pool: int = 1,
+    mode: str = "sa",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused binary conv1d -> SA -> max-pool (the paper's conv+PWB pipeline).
+
+    x_bits (L, Cin) {0,1}; w_t (K, Cin, Cout).  Output (L_out//pool, Cout)
+    uint32 bits (or (L_out, Cout) int32 when mode='raw').
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    k, cin, cout = w_t.shape
+    l = x_bits.shape[0]
+    l_out = (l + 2 * pad - k) // stride + 1
+
+    xq = pack_activations(x_bits)  # (L, Cw)
+    xs = shifted_strided_views(xq, k, stride, pad)  # (K, L_out, Cw)
+    wp, wn = pack_weight_planes(w_t)  # (K, Cw, Cout)
+
+    bn = _pick_block(cout, _conv.DEFAULT_BN)
+    # block length: multiple of pool, divides padded L_out
+    bl = _pick_block(l_out, _conv.DEFAULT_BL, step=pool)
+    xs = _pad_axis(xs, bl, 1)
+    wp = _pad_axis(wp, bn, 2)
+    wn = _pad_axis(wn, bn, 2)
+
+    if mode == "sa":
+        thr_p = _pad_axis(thr.astype(jnp.float32), bn, 0)
+        flip_p = _pad_axis(flip.astype(jnp.int32), bn, 0)
+        out = _conv.bnn_conv1d_packed(
+            xs, wp, wn, thr_p, flip_p,
+            pool=pool, bl=bl, bn=bn, mode="sa", interpret=interpret,
+        )
+        return out[: l_out // pool, :cout]
+    out = _conv.bnn_conv1d_packed(
+        xs, wp, wn, pool=1, bl=bl, bn=bn, mode="raw", interpret=interpret
+    )
+    return out[:l_out, :cout]
+
+
+def bitserial_conv1d(
+    x_u: jax.Array,
+    w_t: jax.Array,
+    bits: int,
+    offset: int = 0,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Multi-bit-input conv as `bits` kernel passes (first-layer path).
+
+    Spatial padding uses the offset code (see kernels/ref.py)."""
+    acc = None
+    x_u = x_u.astype(jnp.uint32)
+    if pad:
+        x_u = jnp.pad(x_u, ((pad, pad), (0, 0)), constant_values=offset)
+        pad = 0
+    for b in range(bits):
+        plane = ((x_u >> b) & 1).astype(jnp.uint32)
+        d = bnn_conv1d(
+            plane, w_t, stride=stride, pad=pad, mode="raw", interpret=interpret
+        )
+        acc = d * (1 << b) if acc is None else acc + d * (1 << b)
+    if offset:
+        wsum = jnp.sum(w_t.astype(jnp.int32), axis=(0, 1))
+        acc = acc - offset * wsum[None, :]
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Dispatch heuristic: popcount (bandwidth) vs MXU (compute)
+# ---------------------------------------------------------------------------
+
+def pick_path(m: int, k: int, n: int) -> str:
+    """Choose kernel path from arithmetic intensity on v5e constants.
+
+    popcount path: bytes = m*k/8 + 2*k*n/8, "flops" = m*k*n VPU ops at
+    ~4e12 ops/s effective; MXU path: bytes = m*k + k*n (int8),
+    197e12/2 int8 macs/s.  Pick the lower predicted time.
+    """
+    t_pop = max((m * k / 8 + 2 * k * n / 8) / 819e9, (m * k * n) / 4e12)
+    t_mxu = max((m * k + k * n) / 819e9, (m * k * n) / 98e12)
+    return "popcount" if t_pop <= t_mxu else "mxu"
+
+
+def _pick_block(dim: int, preferred: int, step: int = 1) -> int:
+    """Largest block <= preferred that is a multiple of ``step`` and keeps
+    padding overhead small; dim is padded up to a block multiple anyway."""
+    b = min(preferred, max(step, _round_up(dim, step)))
+    b = _round_up(b, step)
+    return b
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

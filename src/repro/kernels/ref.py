@@ -1,0 +1,176 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for kernel tests and the functional backend of the
+cycle-level executor (`repro.core.executor`).  Everything here is exact
+integer arithmetic — the digital semantics of the PSCNN macro.
+
+Conventions
+-----------
+* binary activations are 0/1 arrays (uint32) laid out ``(..., L, C)``
+* ternary weights are {-1,0,+1} int32 arrays; conv weights are ``(K, Cin,
+  Cout)``; linear weights ``(Cin, Cout)``
+* ``thr``/``flip`` come from ``repro.core.quant.fold_bn_to_threshold``
+* pooling on binary activations is max-pool = OR over the window, matching
+  the PWB's OR-tree
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+# ---------------------------------------------------------------------------
+# Dense (FC) layer
+# ---------------------------------------------------------------------------
+
+def ref_twm_matmul(x_bits: jax.Array, w_t: jax.Array) -> jax.Array:
+    """Raw popcount difference: (M, K) {0,1} x (K, N) {-1,0,1} -> (M, N) int32."""
+    pos, neg = quant.ternary_planes(w_t)
+    xi = x_bits.astype(jnp.int32)
+    return xi @ pos.astype(jnp.int32) - xi @ neg.astype(jnp.int32)
+
+
+def ref_twm_matmul_sa(
+    x_bits: jax.Array, w_t: jax.Array, thr: jax.Array, flip: jax.Array
+) -> jax.Array:
+    """Popcount difference followed by the SA threshold (binary output)."""
+    s = ref_twm_matmul(x_bits, w_t)
+    return quant.apply_threshold(s.astype(jnp.float32), thr, flip)
+
+
+# ---------------------------------------------------------------------------
+# 1-D convolution (binary activations, ternary weights)
+# ---------------------------------------------------------------------------
+
+def _shifted_views(x_bits: jax.Array, k: int, stride: int, pad: int) -> jax.Array:
+    """Stack of K strided views: out[tap, t, c] = x_pad[t*stride + tap, c].
+
+    This is the host-side mirror of the paper's line-buffer shifting ("shift
+    the IFM downward, activate wordlines alternately") and the exact layout
+    the Pallas conv kernel consumes.
+    """
+    L, C = x_bits.shape
+    x_pad = jnp.pad(x_bits, ((pad, pad), (0, 0)))
+    l_out = (L + 2 * pad - k) // stride + 1
+    taps = [x_pad[tap : tap + (l_out - 1) * stride + 1 : stride, :] for tap in range(k)]
+    return jnp.stack(taps, axis=0)  # (K, L_out, C)
+
+
+def conv1d_out_len(length: int, k: int, stride: int, pad: int) -> int:
+    return (length + 2 * pad - k) // stride + 1
+
+
+def ref_bnn_conv1d(
+    x_bits: jax.Array,
+    w_t: jax.Array,
+    stride: int = 1,
+    pad: int = 0,
+) -> jax.Array:
+    """Raw conv popcount difference.
+
+    x_bits: (L, Cin) {0,1};  w_t: (K, Cin, Cout) {-1,0,1} -> (L_out, Cout) int32.
+    """
+    k = w_t.shape[0]
+    xs = _shifted_views(x_bits, k, stride, pad).astype(jnp.int32)  # (K,Lo,Ci)
+    wt = w_t.astype(jnp.int32)
+    return jnp.einsum("klc,kcn->ln", xs, wt)
+
+
+def ref_bnn_conv1d_sa(
+    x_bits: jax.Array,
+    w_t: jax.Array,
+    thr: jax.Array,
+    flip: jax.Array,
+    stride: int = 1,
+    pad: int = 0,
+    pool: int = 1,
+) -> jax.Array:
+    """Conv -> SA threshold -> (optional) fused max-pool (the PWB path)."""
+    s = ref_bnn_conv1d(x_bits, w_t, stride, pad)
+    y = quant.apply_threshold(s.astype(jnp.float32), thr, flip)
+    if pool > 1:
+        y = ref_maxpool1d(y, pool)
+    return y
+
+
+def ref_maxpool1d(y_bits: jax.Array, pool: int) -> jax.Array:
+    """Binary max-pool = OR over non-overlapping windows (drops remainder)."""
+    l = (y_bits.shape[0] // pool) * pool
+    y = y_bits[:l].reshape(l // pool, pool, *y_bits.shape[1:])
+    return jnp.max(y, axis=1)
+
+
+def ref_gap_counts(y_bits: jax.Array) -> jax.Array:
+    """Global-average-pool as integer counts (PWB bypass + popcount counter)."""
+    return jnp.sum(y_bits.astype(jnp.int32), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Bit-serial multi-bit input (first layer: 8-bit audio; FC after GAP counts)
+# ---------------------------------------------------------------------------
+
+def ref_bitserial_conv1d(
+    x_u: jax.Array,
+    w_t: jax.Array,
+    bits: int,
+    offset: int = 0,
+    stride: int = 1,
+    pad: int = 0,
+) -> jax.Array:
+    """Multi-bit-input conv as `bits` binary passes with 2^b weighting.
+
+    x_u: (L, Cin) unsigned integers < 2**bits (offset-binary; ``offset`` is
+    subtracted after accumulation: x = x_u - offset).  The offset term equals
+    ``offset * sum_k w_k`` per output channel and folds into the threshold —
+    exactly how the hardware absorbs it.  Spatial padding uses the *offset
+    code* (the line buffer resets to the zero-level, not to code 0, which
+    would mean -offset).  Returns raw int32 (L_out, Cout).
+    """
+    x_u = x_u.astype(jnp.uint32)
+    if pad:
+        x_u = jnp.pad(x_u, ((pad, pad), (0, 0)), constant_values=offset)
+        pad = 0
+    acc = None
+    for b in range(bits):
+        plane = ((x_u >> b) & 1).astype(jnp.uint32)
+        d = ref_bnn_conv1d(plane, w_t, stride, pad)
+        acc = d * (1 << b) if acc is None else acc + d * (1 << b)
+    if offset:
+        wsum = jnp.sum(w_t.astype(jnp.int32), axis=(0, 1))  # (Cout,)
+        acc = acc - offset * wsum[None, :]
+    return acc
+
+
+def ref_bitserial_matmul(
+    x_u: jax.Array, w_t: jax.Array, bits: int, offset: int = 0
+) -> jax.Array:
+    """Bit-serial dense layer: (M, K) uints x (K, N) ternary -> int32."""
+    x_u = x_u.astype(jnp.uint32)
+    acc = None
+    for b in range(bits):
+        plane = ((x_u >> b) & 1).astype(jnp.uint32)
+        d = ref_twm_matmul(plane, w_t)
+        acc = d * (1 << b) if acc is None else acc + d * (1 << b)
+    if offset:
+        wsum = jnp.sum(w_t.astype(jnp.int32), axis=0)
+        acc = acc - offset * wsum[None, :]
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Packed-domain oracles (operate on the exact uint32 buffers the kernels see)
+# ---------------------------------------------------------------------------
+
+def ref_popcount_gemm_packed(
+    x_packed: jax.Array, wp_packed: jax.Array, wn_packed: jax.Array
+) -> jax.Array:
+    """(M, Kw) u32, (Kw, N) u32 planes -> (M, N) int32 popcount difference."""
+    pp = jax.lax.population_count(
+        jnp.bitwise_and(x_packed[:, :, None], wp_packed[None, :, :])
+    ).astype(jnp.int32)
+    pn = jax.lax.population_count(
+        jnp.bitwise_and(x_packed[:, :, None], wn_packed[None, :, :])
+    ).astype(jnp.int32)
+    return jnp.sum(pp - pn, axis=1)

@@ -1,0 +1,370 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds ShapeDtypeStruct stand-ins (never allocates the
+full model), lowers the appropriate step function with explicit shardings,
+compiles it for the production mesh, and records:
+
+  * memory_analysis()      — proves the cell fits per-device HBM
+  * cost_analysis()        — per-device FLOPs / bytes for §Roofline
+  * collective inventory   — parsed from the post-SPMD HLO
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k --multi-pod both --out results/dryrun
+Exit code is non-zero if any requested cell fails — the CI gate.
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, arch_names, get_arch
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.sharding import act
+from repro.sharding import specs as sh
+from repro.train import loop as tl
+from repro.train import optimizer as opt_lib
+from repro.utils.logging import get_logger
+
+log = get_logger("dryrun")
+
+
+ACT_BUDGET_BYTES = 5e9  # scan-saved activations per device, per microbatch
+
+
+def pick_microbatches(cfg, shape, mesh, profile: str = "megatron") -> int:
+    """Grad-accum count so the scan-saved residual stream fits HBM."""
+    per_dev_seqs = max(shape.global_batch // sh.dp_total(mesh, profile), 1)
+    act_per_seq = cfg.n_layers * shape.seq_len * cfg.d_model * 2
+    need = max(1, -(-int(per_dev_seqs * act_per_seq) // int(ACT_BUDGET_BYTES)))
+    for m in range(need, per_dev_seqs + 1):
+        if per_dev_seqs % m == 0:
+            return m
+    return per_dev_seqs
+
+
+def pick_optimizer(cfg) -> str:
+    """AdamW where its 12 B/param state fits; Adafactor beyond ~50B params."""
+    return "adafactor" if api.param_count(cfg) > 50e9 else "adamw"
+
+
+def _train_cell(cfg, shape, mesh, report, profile="megatron",
+                remat="block", compression="none"):
+    """Lower the full train step (fwd+bwd+optimizer) for this cell."""
+    micro = pick_microbatches(cfg, shape, mesh, profile)
+    tcfg = tl.TrainConfig(
+        opt=opt_lib.OptConfig(name=pick_optimizer(cfg)),
+        microbatches=micro, remat=remat, compression=compression,
+    )
+    loss = api.loss_fn(cfg, remat=tcfg.remat)
+    step = tl.make_train_step(cfg, tcfg, loss)
+
+    params_s = jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    state_s = jax.eval_shape(lambda p: tl.init_train_state(tcfg, p), params_s)
+    batch_s = dict(cfg.input_specs(shape))
+    if micro > 1:
+        batch_s = {
+            k: jax.ShapeDtypeStruct(
+                (micro, v.shape[0] // micro, *v.shape[1:]), v.dtype
+            )
+            for k, v in batch_s.items()
+        }
+
+    state_sh = sh.params_shardings(state_s, mesh, cfg, report)
+    batch_sh = sh.batch_shardings(batch_s, mesh, report, micro=micro > 1,
+                                  profile=profile)
+    metrics_sh = jax.tree_util.tree_map(
+        lambda _: sh.scalar_sharding(mesh),
+        {"loss": 0, "grad_norm": 0, "lr": 0},
+    )
+    fn = jax.jit(
+        step,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        donate_argnums=(0,),
+    )
+    return fn.lower(state_s, batch_s)
+
+
+def _prefill_cell(cfg, shape, mesh, report, profile="megatron",
+                  shard_prefill_out=True, **_):
+    prefill = api.prefill_fn(cfg)
+    params_s = jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    batch_s = dict(cfg.input_specs(shape))
+    params_sh = sh.params_shardings(params_s, mesh, cfg, report)
+    batch_sh = sh.batch_shardings(batch_s, mesh, report, profile=profile)
+    out_sh = None
+    if shard_prefill_out:
+        # exported caches dominate prefill memory (62L x 2 x B x 32k x Hk x
+        # Dh can be 16+ GB/dev if GSPMD replicates them) — pin them to the
+        # decode-state layout.
+        out_s = jax.eval_shape(prefill, params_s, batch_s)
+        out_sh = sh.decode_state_shardings(out_s, mesh, cfg, report)
+    fn = jax.jit(prefill, in_shardings=(params_sh, batch_sh),
+                 out_shardings=out_sh)
+    return fn.lower(params_s, batch_s)
+
+
+def _decode_cell(cfg, shape, mesh, report, profile="megatron",
+                 kv_replication=0, **_):
+    decode = api.decode_fn(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    if kv_replication == 0:
+        # default: replicate kv heads up to the TP degree for zero-comm GQA
+        # attention (bounded by 4x cache growth)
+        tp = mesh.shape["model"]
+        kv_replication = (min(tp // cfg.n_kv_heads, 4)
+                          if cfg.family != "encdec" and tp > cfg.n_kv_heads
+                          else 1)
+    params_s = jax.eval_shape(
+        lambda: api.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    state_s = jax.eval_shape(
+        lambda: api.init_decode_state(cfg, b, s,
+                                      kv_replication=kv_replication))
+    tok_s = cfg.input_specs(shape)["tokens"]
+    params_sh = sh.params_shardings(params_s, mesh, cfg, report)
+    state_sh = sh.decode_state_shardings(state_s, mesh, cfg, report)
+    tok_sh = sh.batch_shardings(tok_s, mesh, report)
+    fn = jax.jit(
+        decode,
+        in_shardings=(params_sh, state_sh, tok_sh),
+        out_shardings=(sh.logits_sharding(mesh, b), state_sh),
+        donate_argnums=(1,),
+    )
+    return fn.lower(params_s, state_s, tok_s)
+
+
+_LOWER = {"train": _train_cell, "prefill": _prefill_cell, "decode": _decode_cell}
+
+
+def _reduced_cfg(cfg, n_super: int):
+    """Same arch with depth = first_k_dense + n_super superblocks."""
+    first_k = cfg.moe.first_k_dense if cfg.moe else 0
+    pat = len(cfg.superblock) if cfg.superblock else 1
+    kw = {"n_layers": first_k + n_super * pat}
+    if cfg.family == "encdec":
+        kw["n_enc_layers"] = n_super
+    return dataclasses.replace(cfg, **kw)
+
+
+def _full_repeats(cfg) -> int:
+    first_k = cfg.moe.first_k_dense if cfg.moe else 0
+    pat = len(cfg.superblock) if cfg.superblock else 1
+    return (cfg.n_layers - first_k) // pat
+
+
+def cost_extrapolate(cfg, shape, mesh, **overrides) -> dict:
+    """Per-device costs via unrolled reduced-depth lowerings.
+
+    XLA's cost_analysis() does not multiply while-loop bodies by trip count,
+    so costs are measured on fully-unrolled 1- and 2-superblock variants and
+    extrapolated linearly: total(R) = c1 + (R-1) * (c2 - c1).  Exact for
+    scan-homogeneous stacks (every repeat is the same HLO).
+    """
+    from repro.models import attention as attn_mod
+    from repro.models import scan_utils as stk
+
+    stk.SCAN_UNROLL = True
+    # widen flash-attention chunks: unrolled block count drops 1024 -> ~16
+    # at 32k with identical total FLOPs (chunking only affects memory)
+    old_q, old_kv = attn_mod.QUERY_CHUNK, attn_mod.KV_CHUNK
+    attn_mod.QUERY_CHUNK = attn_mod.KV_CHUNK = 8192
+    try:
+        meas = []
+        for n in (1, 2):
+            lowered = _LOWER[shape.kind](
+                _reduced_cfg(cfg, n), shape, mesh, sh.ShardingReport(),
+                **overrides
+            )
+            comp = lowered.compile()
+            ca = comp.cost_analysis()
+            roof = rl.analyze(comp)
+            meas.append(
+                {
+                    "flops": float(ca.get("flops", 0.0)),
+                    "bytes": float(ca.get("bytes accessed", 0.0)),
+                    "coll": roof.coll_bytes,
+                    "colls": roof.collectives,
+                }
+            )
+    finally:
+        stk.SCAN_UNROLL = False
+        attn_mod.QUERY_CHUNK, attn_mod.KV_CHUNK = old_q, old_kv
+    r = _full_repeats(cfg)
+    c1, c2 = meas
+
+    def lin(a, b):
+        return a + (r - 1) * (b - a)
+
+    kinds = set(c1["colls"]) | set(c2["colls"])
+    colls = {}
+    for k in kinds:
+        n1, b1 = c1["colls"].get(k, (0, 0))
+        n2, b2 = c2["colls"].get(k, (0, 0))
+        colls[k] = (int(max(lin(n1, n2), 0)), float(max(lin(b1, b2), 0.0)))
+    return {
+        "flops_per_dev": max(lin(c1["flops"], c2["flops"]), c1["flops"]),
+        "hbm_bytes_per_dev": max(lin(c1["bytes"], c2["bytes"]), c1["bytes"]),
+        "coll_bytes_per_dev": max(lin(c1["coll"], c2["coll"]), 0.0),
+        "collectives": colls,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             profile: str = "megatron", no_cost: bool = False,
+             **overrides) -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "profile": profile, **({"overrides": overrides} if overrides else {})}
+    if not cfg.supports(shape):
+        cell["status"] = "skip"
+        cell["reason"] = "full-attention arch: long_500k needs sub-quadratic attention (DESIGN.md)"
+        return cell
+    t0 = time.monotonic()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp_axes = (("pod", "data", "model") if multi_pod else ("data", "model")) \
+        if profile == "dp_only" else (("pod", "data") if multi_pod else "data")
+    act.set_policy(mesh, dp_axes,
+                   tp_axis=None if profile == "dp_only" else "model")
+    report = sh.ShardingReport()
+    try:
+        # 1) full-depth scanned compile: the runnability proof + memory
+        lowered = _LOWER[shape.kind](cfg, shape, mesh, report,
+                                     profile=profile, **overrides)
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        # 2) cost extraction: unrolled reduced-depth extrapolation.
+        # --no-cost: compile+memory proof only (recurrent archs whose
+        # unrolled cost lowering exceeds this container's CPU compile budget)
+        if no_cost:
+            costs = {"flops_per_dev": 0.0, "hbm_bytes_per_dev": 0.0,
+                     "coll_bytes_per_dev": 0.0, "collectives": {}}
+        else:
+            costs = cost_extrapolate(cfg, shape, mesh, profile=profile,
+                                     **overrides)
+        n_dev = mesh.size
+        # sLSTM layers run a per-token scan that can't be unrolled; add the
+        # analytic flop term (w_in + r_in matmuls = 16*D^2/token, x3 for bwd)
+        n_slstm = (cfg.superblock.count("s") * _full_repeats(cfg)
+                   if cfg.superblock else 0)
+        if n_slstm:
+            toks = shape.global_batch * (
+                shape.seq_len if shape.kind != "decode" else 1
+            )
+            mult = 3.0 if shape.kind == "train" else 1.0
+            costs["flops_per_dev"] += (
+                n_slstm * toks * 16.0 * cfg.d_model**2 * mult / n_dev
+            )
+        roof = rl.Roofline(
+            flops=costs["flops_per_dev"],
+            hbm_bytes=costs["hbm_bytes_per_dev"],
+            coll_bytes=costs["coll_bytes_per_dev"],
+            collectives=costs["collectives"],
+        )
+        tokens = shape.global_batch * (
+            shape.seq_len if shape.kind != "decode" else 1
+        )
+        n_active = api.active_param_count(cfg)
+        model_fl = (
+            rl.model_flops_train(n_active, tokens)
+            if shape.kind == "train"
+            else rl.model_flops_infer(n_active, tokens)
+        )
+        if no_cost:
+            cell["cost_note"] = "compile+memory proof only (--no-cost)"
+        cell.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            mem={
+                "args_gb": mem.argument_size_in_bytes / 1e9,
+                "out_gb": mem.output_size_in_bytes / 1e9,
+                "temp_gb": mem.temp_size_in_bytes / 1e9,
+                "alias_gb": mem.alias_size_in_bytes / 1e9,
+                "peak_gb": (
+                    mem.argument_size_in_bytes
+                    + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes
+                    - mem.alias_size_in_bytes
+                ) / 1e9,
+            },
+            roofline=roof.summary(),
+            model_flops_per_dev=model_fl / n_dev,
+            useful_flops_frac=(
+                (model_fl / n_dev) / roof.flops if roof.flops else None
+            ),
+            degraded=report.degraded,
+        )
+        log.info(
+            "%s/%s/%s ok: compile %.0fs, peak %.2f GB/dev, dominant=%s",
+            arch, shape_name, mesh_name, t_compile,
+            cell["mem"]["peak_gb"], roof.dominant,
+        )
+    except Exception as e:  # noqa: BLE001 — report, don't crash the matrix
+        cell["status"] = "fail"
+        cell["error"] = f"{type(e).__name__}: {e}"
+        cell["traceback"] = traceback.format_exc()[-2000:]
+        log.error("%s/%s/%s FAILED: %s", arch, shape_name, mesh_name,
+                  cell["error"])
+    finally:
+        act.clear_policy()
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-cost", action="store_true",
+                    help="compile+memory proof only (skip cost extraction)")
+    args = ap.parse_args()
+
+    archs = arch_names() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.multi_pod
+    ]
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                name = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                path = outdir / f"{name}.json"
+                if path.exists():
+                    prev = json.loads(path.read_text())
+                    if prev.get("status") in ("ok", "skip"):
+                        log.info("skip cached %s", name)
+                        continue
+                cell = run_cell(arch, shape, mp, no_cost=args.no_cost)
+                path.write_text(json.dumps(cell, indent=2, default=str))
+                n_fail += cell["status"] == "fail"
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb driver: re-lower one dry-run cell under named variants and
+print the roofline deltas (EXPERIMENTS.md §Perf methodology).
+
+  PYTHONPATH=src python -m repro.launch.hillclimb \
+      --arch qwen3-0.6b --shape train_4k --mesh 16x16 \
+      --variant dp_only:profile=dp_only \
+      --variant dots:remat=dots
+
+Each variant's full cell JSON lands in results/hillclimb/.
+"""
+import argparse
+import json
+import pathlib
+
+from repro.launch import dryrun
+from repro.utils.logging import get_logger
+
+log = get_logger("hillclimb")
+
+
+def parse_variant(s: str):
+    name, _, kvs = s.partition(":")
+    kw = {}
+    for kv in filter(None, kvs.split(",")):
+        k, v = kv.split("=")
+        kw[k] = int(v) if v.isdigit() else v
+    return name, kw
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=["16x16", "2x16x16"], default="16x16")
+    ap.add_argument("--variant", action="append", default=[],
+                    help="name:key=val,key=val  (keys: profile, remat, "
+                         "compression)")
+    ap.add_argument("--baseline", action="store_true",
+                    help="also re-run the baseline with current code")
+    ap.add_argument("--out", default="results/hillclimb")
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    multi = args.mesh == "2x16x16"
+    variants = [("baseline", {})] if args.baseline else []
+    variants += [parse_variant(v) for v in args.variant]
+
+    rows = []
+    for name, kw in variants:
+        profile = kw.pop("profile", "megatron")
+        cell = dryrun.run_cell(args.arch, args.shape, multi,
+                               profile=profile, **kw)
+        tag = f"{args.arch}__{args.shape}__{args.mesh}__{name}"
+        (outdir / f"{tag}.json").write_text(
+            json.dumps(cell, indent=2, default=str))
+        if cell["status"] == "ok":
+            r = cell["roofline"]
+            rows.append((name, r["compute_s"], r["memory_s"],
+                         r["collective_s"], r["dominant"],
+                         cell["mem"]["peak_gb"]))
+            log.info("%s: c=%.3f m=%.3f coll=%.3f dom=%s peak=%.1fGB",
+                     name, r["compute_s"], r["memory_s"], r["collective_s"],
+                     r["dominant"], cell["mem"]["peak_gb"])
+        else:
+            log.error("%s FAILED: %s", name, cell.get("error"))
+            rows.append((name, None, None, None, "FAIL", None))
+
+    print("\nvariant,compute_s,memory_s,collective_s,dominant,peak_gb")
+    for row in rows:
+        print(",".join(str(x) for x in row))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Render results/dryrun/*.json into the EXPERIMENTS.md §Roofline markdown
+table.
+
+  PYTHONPATH=src python -m repro.launch.report [results/dryrun]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+
+def fmt_s(x: float) -> str:
+    return f"{x*1e3:.1f}ms" if x < 1 else f"{x:.2f}s"
+
+
+def main() -> None:
+    d = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    cells = []
+    for p in sorted(d.glob("*.json")):
+        cells.append(json.loads(p.read_text()))
+
+    print("| arch | shape | mesh | peak GB/dev | compute | memory | "
+          "collective | dominant | useful | status |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    n_ok = n_fail = n_skip = 0
+    for c in cells:
+        if c["status"] == "skip":
+            n_skip += 1
+            print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — "
+                  f"| — | — | — | skip (full-attn @500k) |")
+            continue
+        if c["status"] == "fail":
+            n_fail += 1
+            print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — "
+                  f"| — | — | — | FAIL: {c.get('error','')[:60]} |")
+            continue
+        n_ok += 1
+        r, m = c["roofline"], c["mem"]
+        uf = c.get("useful_flops_frac")
+        if c.get("cost_note"):
+            print(f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+                  f"| {m['peak_gb']:.1f} | — | — | — | — | — "
+                  f"| ok (compile+memory proof; cost pass skipped) |")
+            continue
+        print(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {m['peak_gb']:.1f} | {fmt_s(r['compute_s'])} "
+            f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+            f"| **{r['dominant']}** | {uf:.2f} | ok |" if uf else
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {m['peak_gb']:.1f} | {fmt_s(r['compute_s'])} "
+            f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+            f"| **{r['dominant']}** | — | ok |"
+        )
+    print(f"\n{n_ok} ok / {n_fail} fail / {n_skip} skip "
+          f"of {len(cells)} recorded cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Roofline-term extraction from compiled dry-run artifacts (DESIGN.md §7).
+
+Inputs per cell: ``compiled.cost_analysis()`` (per-partition FLOPs + bytes)
+and the post-SPMD HLO text (``compiled.as_text()``), from which collective
+traffic is parsed: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction's operand/result sizes, with
+per-op byte-movement rules on the v5e ring ICI.
+
+Hardware constants (the brief): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(([^)]*)\)"
+)
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+?)\s+[a-z]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Collective:
+    kind: str
+    operand_bytes: int
+    result_bytes: int
+
+    @property
+    def moved_bytes(self) -> int:
+        """Per-device ICI bytes under ring algorithms."""
+        if self.kind == "all-gather":
+            return max(self.result_bytes - self.operand_bytes, 0)
+        if self.kind == "reduce-scatter":
+            return max(self.operand_bytes - self.result_bytes, 0)
+        if self.kind == "all-reduce":
+            return 2 * self.operand_bytes
+        return self.operand_bytes  # all-to-all / collective-permute
+
+
+def parse_collectives(hlo_text: str) -> list[Collective]:
+    # first pass: instruction name -> result-type bytes
+    sizes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            sizes[m.group(1)] = _type_bytes(m.group(2))
+    out: list[Collective] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        _, result_type, kind, operands = m.groups()
+        rb = _type_bytes(result_type)
+        ob = 0
+        for op in operands.split(","):
+            op = op.strip().lstrip("%")
+            ob += sizes.get(op, 0)
+        if ob == 0:
+            ob = rb  # operand not resolvable; conservative
+        out.append(Collective(kind, ob, rb))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float              # per device
+    hbm_bytes: float          # per device
+    coll_bytes: float         # per device, ring-adjusted
+    collectives: dict         # kind -> (count, bytes)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time: dominant term (perfect overlap model)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def summary(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_s_lower_bound": self.step_s,
+            "collectives": self.collectives,
+        }
+
+
+def analyze(compiled) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returned [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    colls = parse_collectives(compiled.as_text())
+    agg: dict[str, list] = {}
+    total = 0
+    for c in colls:
+        k = agg.setdefault(c.kind, [0, 0])
+        k[0] += 1
+        k[1] += c.moved_bytes
+        total += c.moved_bytes
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=float(total),
+        collectives={k: tuple(v) for k, v in agg.items()},
+    )
+
+
+def model_flops_train(n_active_params: int, tokens: int) -> float:
+    """6*N*D rule (fwd 2ND + bwd 4ND)."""
+    return 6.0 * n_active_params * tokens
+
+
+def model_flops_infer(n_active_params: int, tokens: int) -> float:
+    return 2.0 * n_active_params * tokens

@@ -1,0 +1,91 @@
+"""Model zoo entry points, dispatched on ArchConfig.family.
+
+The launcher, dry-run, trainer and server import only this module:
+
+  init_params(cfg, key)                 parameter pytree
+  loss_fn(cfg)(params, batch)           training loss (batch dict)
+  prefill_fn(cfg)(params, batch)        logits + cache/state
+  decode_fn(cfg)(params, state, tok)    one-token step
+  init_decode_state(cfg, batch, seq)    zeroed cache/state pytree
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, stack
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    if cfg.family == "encdec":
+        return encdec.init_params(cfg, key)
+    return stack.init_params(cfg, key)
+
+
+def loss_fn(cfg: ArchConfig, remat: str = "block"):
+    if cfg.family == "encdec":
+        def loss(params, batch):
+            return encdec.lm_loss(cfg, params, batch["tokens"],
+                                  batch["labels"], batch["frontend"],
+                                  remat=remat)
+        return loss
+
+    def loss(params, batch):
+        return stack.lm_loss(cfg, params, batch["tokens"], batch["labels"],
+                             frontend=batch.get("frontend"), remat=remat)
+    return loss
+
+
+def prefill_fn(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        def prefill(params, batch):
+            return encdec.forward(cfg, params, batch["tokens"],
+                                  batch["frontend"], mode="prefill")
+        return prefill
+
+    def prefill(params, batch):
+        return stack.forward(cfg, params, batch["tokens"],
+                             frontend=batch.get("frontend"), mode="prefill")
+    return prefill
+
+
+def decode_fn(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        def step(params, state, tokens):
+            return encdec.decode_step(cfg, params, state, tokens)
+        return step
+
+    def step(params, state, tokens):
+        return stack.decode_step(cfg, params, state, tokens)
+    return step
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int,
+                      kv_replication: int = 1):
+    if cfg.family == "encdec":
+        return encdec.init_decode_state(cfg, batch, max_seq, max_seq)
+    return stack.init_decode_state(cfg, batch, max_seq,
+                                   kv_replication=kv_replication)
+
+
+def param_count(cfg: ArchConfig) -> int:
+    """Analytic parameter count (no allocation) for roofline MODEL_FLOPS."""
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    import numpy as np
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(shapes)))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Active params per token (MoE: top_k + shared experts only)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    reps = stack.n_repeats(cfg)
+    struct = stack.block_structure(cfg)
+    n_moe_layers = sum(1 for _, f in struct if f == "moe") * reps
+    per_expert = 3 * cfg.d_model * m.d_expert
+    inactive = n_moe_layers * (m.n_experts - m.top_k) * per_expert
+    return total - inactive

@@ -1,0 +1,248 @@
+"""Grouped-query attention with qk-norm, RoPE, KV cache, and cross-attention.
+
+Shapes: x (B, S, D); q heads H, kv heads Hk (H % Hk == 0); d_head Dh.
+Causal masking is implicit via position comparison so the same kernel serves
+train (full causal), prefill (causal + cache write) and decode (single query
+against a cache).  Softmax runs in fp32.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.scan_utils import maybe_unrolled_scan
+from repro.models.layers import COMPUTE_DTYPE, apply_linear, apply_rope, dense_init
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   d_head: int, qk_norm: bool = False) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, d_model, n_heads * d_head),
+        "wk": dense_init(k2, d_model, n_kv_heads * d_head),
+        "wv": dense_init(k3, d_model, n_kv_heads * d_head),
+        "wo": dense_init(k4, n_heads * d_head, d_model),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((d_head,), jnp.float32)
+        p["k_norm"] = jnp.ones((d_head,), jnp.float32)
+    return p
+
+
+def _qkv(p, x, n_heads, n_kv_heads, d_head, positions, rope_theta, quant_mode):
+    b, s, _ = x.shape
+    q = apply_linear(x, p["wq"], quant_mode).reshape(b, s, n_heads, d_head)
+    k = apply_linear(x, p["wk"], quant_mode).reshape(b, s, n_kv_heads, d_head)
+    v = apply_linear(x, p["wv"], quant_mode).reshape(b, s, n_kv_heads, d_head)
+    if "q_norm" in p:
+        q = layers.rmsnorm(q, p["q_norm"])
+        k = layers.rmsnorm(k, p["k_norm"])
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+QUERY_CHUNK = 1024
+KV_CHUNK = 1024
+
+
+def _sdpa_block(q, k, v, q_pos, k_pos, causal):
+    """Unchunked reference block: q (B,Sq,H,Dh), k/v (B,Sk,Hk,Dh).
+
+    The logits constraint pins the decode-path strategy (§Perf iteration
+    #5): kv-head TP when heads divide the axis, otherwise keep logits
+    *sequence-sharded* — k/v never move (sequence-parallel attention) and
+    the softmax adds only tiny cross-shard max/sum reductions.  Without
+    this GSPMD all-gathers the whole KV cache per layer (~GB/step)."""
+    from repro.sharding import act
+
+    b, sq, h, dh = q.shape
+    hk = k.shape[2]
+    g = h // hk
+    q = q.reshape(b, sq, hk, g, dh)
+    scale = 1.0 / math.sqrt(dh)
+    logits = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", q.astype(COMPUTE_DTYPE), k.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    tp = act.axis_size("tp")
+    if tp and hk % tp == 0:
+        logits = act.constrain(logits, "dp", "tp", None, None, None)
+    else:
+        logits = act.constrain(logits, "dp", None, None, None, "tp")
+    if causal:
+        mask = q_pos[:, None] >= k_pos[None, :]  # (Sq, Sk)
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(COMPUTE_DTYPE))
+    return out.reshape(b, sq, h, dh)
+
+
+def _sdpa_flash(q, k, v, q_pos, k_pos, causal: bool = True,
+                q_chunk: int | None = None, kv_chunk: int | None = None):
+    """Online-softmax attention: never materializes (Sq, Sk) logits.
+
+    This is the TPU-native memory discipline of flash attention expressed in
+    lax scans (the XLA path MaxText used before splash kernels): an outer
+    checkpointed scan over query chunks, an inner scan over KV chunks
+    carrying the running (max, denom, acc).  fp32 accumulators.
+    """
+    # chunk sizes read at trace time so the dry-run cost pass can widen them
+    # (total attention FLOPs are chunk-independent; only memory changes, and
+    # the cost pass doesn't measure memory — launch/dryrun.py)
+    q_chunk = q_chunk or QUERY_CHUNK
+    kv_chunk = kv_chunk or KV_CHUNK
+    b, sq, h, dh = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    scale = 1.0 / math.sqrt(dh)
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, sk)
+    if sq % qc:
+        qc = sq
+    if sk % kc:
+        kc = sk
+    nq, nk = sq // qc, sk // kc
+
+    qs = jnp.moveaxis(
+        q.reshape(b, nq, qc, hk, g, dh), 1, 0
+    ).astype(COMPUTE_DTYPE)                               # (Nq,B,qc,Hk,G,Dh)
+    qps = q_pos.reshape(nq, qc)
+    ks = jnp.moveaxis(k.reshape(b, nk, kc, hk, dh), 1, 0).astype(COMPUTE_DTYPE)
+    vs = jnp.moveaxis(v.reshape(b, nk, kc, hk, dh), 1, 0).astype(COMPUTE_DTYPE)
+    kps = k_pos.reshape(nk, kc)
+
+    def q_step(_, xq):
+        q_blk, qp = xq
+
+        def kv_step(carry, xkv):
+            m, l, acc = carry
+            k_blk, v_blk, kp = xkv
+            logits = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            if causal:
+                mask = qp[:, None] >= kp[None, :]
+                logits = jnp.where(mask[None, None, None], logits, -1e30)
+            m_blk = jnp.max(logits, axis=-1)
+            m_new = jnp.maximum(m, m_blk)
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(COMPUTE_DTYPE), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hk, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, hk, g, qc, dh), jnp.float32)
+        (m, l, acc), _ = maybe_unrolled_scan(kv_step, (m0, l0, a0), (ks, vs, kps))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = jnp.moveaxis(out, 3, 1).reshape(b, qc, hk * g, dh)
+        return None, out.astype(COMPUTE_DTYPE)
+
+    step = jax.checkpoint(q_step, prevent_cse=False) if nq > 1 else q_step
+    _, outs = maybe_unrolled_scan(step, None, (qs, qps))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, dh)
+
+
+def _sdpa(q, k, v, q_pos, k_pos, causal: bool = True):
+    """q (B,Sq,H,Dh), k/v (B,Sk,Hk,Dh) -> (B,Sq,H,Dh); GQA via head groups.
+
+    Dispatch: tiny problems use the unchunked block (cheap, simple HLO);
+    anything that would materialize a big logits tensor goes flash.
+    Activations are constrained to batch-DP x head-TP (falling back to
+    query-sequence TP when heads don't divide the axis) — see sharding/act.
+    """
+    from repro.sharding import act
+
+    q = act.constrain(q, "dp", None, "tp", None)
+    k = act.constrain(k, "dp", None, "tp", None)
+    v = act.constrain(v, "dp", None, "tp", None)
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    if sq * sk <= QUERY_CHUNK * KV_CHUNK:
+        out = _sdpa_block(q, k, v, q_pos, k_pos, causal)
+    else:
+        out = _sdpa_flash(q, k, v, q_pos, k_pos, causal)
+    return act.constrain(out, "dp", None, "tp", None)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def attention_train(p, x, *, n_heads, n_kv_heads, d_head, rope_theta=10000.0,
+                    qk_norm=False, quant_mode="none", causal=True):
+    """Full-sequence self-attention (train / encoder)."""
+    del qk_norm  # presence of q_norm in params decides
+    b, s, _ = x.shape
+    pos = jnp.arange(s)
+    q, k, v = _qkv(p, x, n_heads, n_kv_heads, d_head, pos[None, :], rope_theta,
+                   quant_mode)
+    o = _sdpa(q, k, v, pos, pos, causal=causal)
+    return apply_linear(o.reshape(b, s, n_heads * d_head), p["wo"], quant_mode)
+
+
+def attention_prefill(p, x, *, n_heads, n_kv_heads, d_head, rope_theta=10000.0,
+                      quant_mode="none"):
+    """Causal attention that also returns the (k, v) cache to install."""
+    b, s, _ = x.shape
+    pos = jnp.arange(s)
+    q, k, v = _qkv(p, x, n_heads, n_kv_heads, d_head, pos[None, :], rope_theta,
+                   quant_mode)
+    o = _sdpa(q, k, v, pos, pos, causal=True)
+    out = apply_linear(o.reshape(b, s, n_heads * d_head), p["wo"], quant_mode)
+    return out, (k, v)
+
+
+def attention_decode(p, x, cache_kv, cache_len, *, n_heads, n_kv_heads, d_head,
+                     rope_theta=10000.0, quant_mode="none"):
+    """One-token decode: x (B,1,D), cache (k,v) each (B,Smax,Hk_eff,Dh).
+
+    cache_len: scalar int32 — number of valid cache positions.  The new
+    token is written at cache_len; masking hides unwritten tail slots.
+
+    Hk_eff may exceed n_kv_heads: KV-head *replication* for TP (each rank
+    stores the kv heads its q-heads need locally — zero-comm GQA attention
+    at the cost of r x cache memory; §Perf iteration #5).  The replication
+    factor is read off the cache shape; new k/v are tiled to match.
+    """
+    b = x.shape[0]
+    k_cache, v_cache = cache_kv
+    s_max = k_cache.shape[1]
+    pos = jnp.full((b, 1), cache_len, dtype=jnp.int32)
+    q, k_new, v_new = _qkv(p, x, n_heads, n_kv_heads, d_head, pos, rope_theta,
+                           quant_mode)
+    hk_eff = k_cache.shape[2]
+    if hk_eff != n_kv_heads:
+        rep = hk_eff // n_kv_heads
+        k_new = jnp.repeat(k_new, rep, axis=2)
+        v_new = jnp.repeat(v_new, rep, axis=2)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), cache_len, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), cache_len, axis=1)
+    k_pos = jnp.arange(s_max)
+    # mask: positions <= cache_len are attendable (q_pos = cache_len)
+    o = _sdpa(q, k_cache, v_cache, jnp.array([cache_len]), k_pos, causal=True)
+    out = apply_linear(o.reshape(b, 1, n_heads * d_head), p["wo"], quant_mode)
+    return out, (k_cache, v_cache)
+
+
+def cross_attention(p, x, memory, *, n_heads, n_kv_heads, d_head,
+                    quant_mode="none"):
+    """Decoder->encoder attention (no RoPE, no causal mask)."""
+    b, sq, _ = x.shape
+    sk = memory.shape[1]
+    q = apply_linear(x, p["wq"], quant_mode).reshape(b, sq, n_heads, d_head)
+    k = apply_linear(memory, p["wk"], quant_mode).reshape(b, sk, n_kv_heads, d_head)
+    v = apply_linear(memory, p["wv"], quant_mode).reshape(b, sk, n_kv_heads, d_head)
+    o = _sdpa(q, k, v, jnp.arange(sq), jnp.arange(sk), causal=False)
+    return apply_linear(o.reshape(b, sq, n_heads * d_head), p["wo"], quant_mode)

@@ -1,0 +1,187 @@
+"""Encoder-decoder stack (seamless-m4t backbone; modality frontend is a stub
+per the brief — ``input_specs`` supplies precomputed frame embeddings).
+
+Encoder: non-causal self-attention blocks over frame embeddings.
+Decoder: causal self-attention + cross-attention + MLP blocks.
+Both stacks scan over stacked layer params like models/stack.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import layers
+from repro.models.layers import COMPUTE_DTYPE, dense_init, embed_init
+from repro.models.stack import _scan, chunked_ce_loss
+
+
+def _init_enc_layer(cfg: ArchConfig, key) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": attn.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim),
+        "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+        "mlp": layers.init_mlp(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _init_dec_layer(cfg: ArchConfig, key) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+        "self_attn": attn.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.head_dim),
+        "norm_x": jnp.ones((cfg.d_model,), jnp.float32),
+        "cross_attn": attn.init_attention(k2, cfg.d_model, cfg.n_heads,
+                                          cfg.n_kv_heads, cfg.head_dim),
+        "norm2": jnp.ones((cfg.d_model,), jnp.float32),
+        "mlp": layers.init_mlp(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def stack(init_fn, k, n):
+        ps = [init_fn(cfg, ki) for ki in jax.random.split(k, n)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ps)
+
+    return {
+        "embed": embed_init(k1, cfg.padded_vocab, cfg.d_model),
+        "enc_blocks": stack(_init_enc_layer, k2, cfg.n_enc_layers),
+        "dec_blocks": stack(_init_dec_layer, k3, cfg.n_layers),
+        "enc_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "out_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "lm_head": dense_init(k4, cfg.d_model, cfg.padded_vocab),
+    }
+
+
+def encode(cfg: ArchConfig, params, frames) -> jax.Array:
+    """frames (B,S,D) -> encoder memory (B,S,D)."""
+    kw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+              d_head=cfg.head_dim, rope_theta=cfg.rope_theta,
+              quant_mode=cfg.quant_mode)
+
+    def block(h, p):
+        h = h + attn.attention_train(p["attn"], layers.rmsnorm(h, p["norm1"]),
+                                     causal=False, **kw)
+        h = h + layers.apply_mlp(p["mlp"], layers.rmsnorm(h, p["norm2"]),
+                                 cfg.quant_mode)
+        return h, None
+
+    h, _ = _scan(block, frames.astype(COMPUTE_DTYPE),
+                        params["enc_blocks"])
+    return layers.rmsnorm(h, params["enc_norm"])
+
+
+def _dec_block(cfg: ArchConfig, p, h, memory, mode, cache=None, cache_len=None):
+    kw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+              d_head=cfg.head_dim, rope_theta=cfg.rope_theta,
+              quant_mode=cfg.quant_mode)
+    hn = layers.rmsnorm(h, p["norm1"])
+    if mode == "train":
+        h = h + attn.attention_train(p["self_attn"], hn, **kw)
+        new_cache = None
+    elif mode == "prefill":
+        o, new_cache = attn.attention_prefill(p["self_attn"], hn, **kw)
+        h = h + o
+    else:
+        o, new_cache = attn.attention_decode(p["self_attn"], hn, cache,
+                                             cache_len, **kw)
+        h = h + o
+    h = h + attn.cross_attention(
+        p["cross_attn"], layers.rmsnorm(h, p["norm_x"]), memory,
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, d_head=cfg.head_dim,
+        quant_mode=cfg.quant_mode,
+    )
+    h = h + layers.apply_mlp(p["mlp"], layers.rmsnorm(h, p["norm2"]),
+                             cfg.quant_mode)
+    return h, new_cache
+
+
+def forward_hidden(cfg: ArchConfig, params, tokens, frontend,
+                   mode: str = "train", remat: str = "block"):
+    """Encoder + decoder blocks, no output head. -> (h, caches, memory)."""
+    memory = encode(cfg, params, frontend)
+    h = params["embed"][tokens].astype(COMPUTE_DTYPE)
+    policy = layers.RematPolicy(remat)
+
+    def block(h, p):
+        h, cache = _dec_block(cfg, p, h, memory, mode)
+        return h, cache
+
+    blk = policy.wrap(block) if mode == "train" else block
+    h, caches = _scan(blk, h, params["dec_blocks"])
+    return h, caches, memory
+
+
+def forward(cfg: ArchConfig, params, tokens, frontend, mode: str = "train",
+            remat: str = "block"):
+    """tokens (B,St), frontend frames (B,Sa,D)."""
+    h, caches, memory = forward_hidden(cfg, params, tokens, frontend, mode,
+                                       remat)
+    h = layers.rmsnorm(h, params["out_norm"])
+    logits = jax.lax.dot_general(
+        h, params["lm_head"].astype(COMPUTE_DTYPE), (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    if mode == "prefill":
+        return logits, {"self": caches, "memory": memory}
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int,
+                      mem_seq: int) -> dict:
+    kv = lambda: jnp.zeros(
+        (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+        jnp.bfloat16,
+    )
+    return {
+        "cache_len": jnp.zeros((), jnp.int32),
+        "self": (kv(), kv()),
+        "memory": jnp.zeros((batch, mem_seq, cfg.d_model), jnp.bfloat16),
+    }
+
+
+def decode_step(cfg: ArchConfig, params, state, tokens):
+    h = params["embed"][tokens].astype(COMPUTE_DTYPE)
+    memory = state["memory"]
+    cache_len = state["cache_len"]
+
+    def block(h, xs):
+        p, cache = xs
+        h, new_cache = _dec_block(cfg, p, h, memory, "decode",
+                                  cache=cache, cache_len=cache_len)
+        return h, new_cache
+
+    h, new_caches = _scan(
+        block, h, (params["dec_blocks"], state["self"])
+    )
+    h = layers.rmsnorm(h, params["out_norm"])
+    logits = jax.lax.dot_general(
+        h, params["lm_head"].astype(COMPUTE_DTYPE), (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return logits, {
+        "cache_len": cache_len + 1,
+        "self": new_caches,
+        "memory": memory,
+    }
+
+
+def lm_loss(cfg: ArchConfig, params, tokens, labels, frontend,
+            remat: str = "block", loss_chunk: int = 512):
+    h, _, _ = forward_hidden(cfg, params, tokens, frontend, remat=remat)
+
+    def project(hc):
+        hc = layers.rmsnorm(hc, params["out_norm"])
+        return jax.lax.dot_general(
+            hc, params["lm_head"].astype(COMPUTE_DTYPE),
+            (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+
+    return chunked_ce_loss(project, h, labels, cfg.vocab, cfg.padded_vocab,
+                           chunk=loss_chunk)

@@ -1,0 +1,217 @@
+"""The paper's binary keyword-spotting model (Fig. 7) — QAT graph + export.
+
+Fig. 7 is not machine-readable in the source, so the topology is
+reconstructed to satisfy every stated constraint simultaneously
+(DESIGN.md §9.2).  The reconstruction, with its arithmetic:
+
+  input   16,000 samples (1 s @ 16 kHz), 8-bit offset-binary
+  l0   conv( 1->64,  K19, S8, pad9) bitser-8      out 2000   W   1,216  MAC   2.432M
+  b1   conv(64->128, K3,  S1, pad1) +pool2        out 1000   W  24,576  MAC  49.152M
+  b2   conv(128->256,K5,  S1, pad2) +pool2        out  500   W 163,840  MAC 163.840M
+  b3   conv(256->352,K3,  S1, pad1) +pool2        out  250   W 294,912  MAC 135.168M
+  gap  250x352 -> 8-bit counts
+  fc1  352->512, bitser-8, SA binary                         W 180,224  MAC 180,224
+  fc2  512->12, raw logits (row-split 2x256)                 W   6,144  MAC   6,144
+
+  totals: 646,336 weights (631.2Kb, paper: 652Kb, -3.2%)
+          350,778,368 MACs (paper: ~350M, +0.2%)
+  rotation (weight SRAM): b3.c1, b3.c2, fc1.c2, fc1.c3
+          = 262,144 weights = 512Kb = exactly the weight SRAM capacity
+
+QAT recipe (Hubara et al. [6] + TWN-style ternary weights):
+  * fp32 shadow weights, ternarized forward with identity STE
+  * binary activations {1,0} with clipped STE
+  * per-channel affine (a, b) before binarization — the foldable stand-in
+    for BN; exported as SA thresholds thr=-b/a, flip=(a<0)
+  * final logits are the raw popcount counts (scaled by a scalar
+    temperature for the CE loss only, so argmax is preserved exactly)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.cnn_spec import CNN1DSpec, Conv1DSpec, FCSpec, GAPSpec
+
+N_CLASSES = 12
+IN_LEN = 16000
+IN_OFFSET = 128
+
+ROTATE_HINTS = ("b3.c1", "b3.c2", "fc1.c2", "fc1.c3")
+ROWSPLIT_HINTS = {"fc2": 2}
+
+
+def build_kws_spec(
+    in_len: int = IN_LEN,
+    width: int = 64,
+    n_classes: int = N_CLASSES,
+) -> CNN1DSpec:
+    """The Fig. 7 reconstruction.  ``width`` scales channels (64 = paper)."""
+    w = width
+    return CNN1DSpec(
+        in_len=in_len,
+        in_channels=1,
+        in_bits=8,
+        name="pscnn_kws",
+        layers=(
+            Conv1DSpec(1, w, k=19, stride=8, pad=9, in_bits=8,
+                       in_offset=IN_OFFSET, name="l0"),
+            Conv1DSpec(w, 2 * w, k=3, stride=1, pad=1, pool=2, name="b1"),
+            Conv1DSpec(2 * w, 4 * w, k=5, stride=1, pad=2, pool=2, name="b2"),
+            Conv1DSpec(4 * w, int(5.5 * w), k=3, stride=1, pad=1, pool=2, name="b3"),
+            GAPSpec(int(5.5 * w), name="gap"),
+            FCSpec(int(5.5 * w), 8 * w, in_bits=8, name="fc1"),
+            FCSpec(8 * w, n_classes, out_raw=True, name="fc2"),
+        ),
+    )
+
+
+def build_kws_smoke_spec() -> CNN1DSpec:
+    """Reduced config for CPU smoke tests (same family, tiny)."""
+    return build_kws_spec(in_len=800, width=16)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_kws_params(key: jax.Array, spec: CNN1DSpec) -> dict:
+    params: dict = {}
+    for li, lspec in enumerate(spec.layers):
+        if isinstance(lspec, Conv1DSpec):
+            key, k1 = jax.random.split(key)
+            fan_in = lspec.k * lspec.cin
+            w = jax.random.normal(k1, (lspec.k, lspec.cin, lspec.cout)) * (
+                1.0 / math.sqrt(fan_in)
+            )
+        elif isinstance(lspec, FCSpec):
+            key, k1 = jax.random.split(key)
+            fan_in = lspec.cin
+            w = jax.random.normal(k1, (lspec.cin, lspec.cout)) * (
+                1.0 / math.sqrt(fan_in)
+            )
+        else:
+            continue
+        entry = {"w": w.astype(jnp.float32)}
+        if not getattr(lspec, "out_raw", False):
+            # affine-before-sign (folded-BN stand-in); a>0 at init, scaled so
+            # a*s lands inside the STE pass-through window |x|<=1: the
+            # pre-activation std is ~sqrt(fan_in)*input_scale (input_scale
+            # ~73 for 8-bit offset-binary audio, ~L/8 for GAP counts, ~0.6
+            # for binary activations)
+            in_bits = getattr(lspec, "in_bits", 1)
+            if in_bits > 1:
+                input_scale = 74.0 if isinstance(lspec, Conv1DSpec) else 32.0
+            else:
+                input_scale = 0.6
+            entry["a"] = jnp.full(
+                (lspec.cout,), 1.0 / (math.sqrt(fan_in) * input_scale),
+                jnp.float32,
+            )
+            entry["b"] = jnp.zeros((lspec.cout,), jnp.float32)
+        params[f"layer{li}"] = entry
+    # CE logit scale (learnable; argmax-invariant). 0.3 puts raw-count
+    # logits in a useful softmax range from step 0 — at 0.05 the first
+    # ~150 steps are spent just growing it (single-batch probe, §III-A).
+    params["temp"] = jnp.asarray(0.3, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# QAT forward (single example; vmap for batches)
+# ---------------------------------------------------------------------------
+
+def _conv1d(x: jax.Array, w: jax.Array, stride: int, pad: int) -> jax.Array:
+    """(L, Cin) x (K, Cin, Cout) -> (L_out, Cout), float32 exact-int math."""
+    lhs = x.T[None]  # (1, Cin, L)
+    rhs = jnp.transpose(w, (2, 1, 0))  # (Cout, Cin, K)
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=(stride,), padding=[(pad, pad)]
+    )
+    return out[0].T  # (L_out, Cout)
+
+
+def _maxpool(x: jax.Array, p: int) -> jax.Array:
+    l = (x.shape[0] // p) * p
+    return jnp.max(x[:l].reshape(l // p, p, x.shape[1]), axis=1)
+
+
+def kws_forward(params: dict, x_u8: jax.Array, spec: CNN1DSpec) -> jax.Array:
+    """x_u8: (L,) uint8 offset-binary audio -> (n_classes,) raw-count logits."""
+    h = (x_u8.astype(jnp.float32) - IN_OFFSET)[:, None]  # (L, 1) integer-valued
+    binary = False  # first layer input is multi-bit
+    for li, lspec in enumerate(spec.layers):
+        p = params.get(f"layer{li}")
+        if isinstance(lspec, Conv1DSpec):
+            w_t = quant.ternarize_weight(p["w"])
+            s = _conv1d(h, w_t, lspec.stride, lspec.pad)
+            h = quant.binarize_act(p["a"][None, :] * s + p["b"][None, :])
+            if lspec.pool > 1:
+                h = _maxpool(h, lspec.pool)
+            binary = True
+        elif isinstance(lspec, GAPSpec):
+            h = jnp.sum(h, axis=0, keepdims=True)  # counts (PWB counters)
+        elif isinstance(lspec, FCSpec):
+            w_t = quant.ternarize_weight(p["w"])
+            s = h.reshape(1, -1) @ w_t
+            if getattr(lspec, "out_raw", False):
+                h = s  # raw logits
+            else:
+                h = quant.binarize_act(p["a"][None, :] * s + p["b"][None, :])
+    return h[0]
+
+
+def kws_loss(params: dict, batch_x: jax.Array, batch_y: jax.Array,
+             spec: CNN1DSpec) -> jax.Array:
+    logits = jax.vmap(lambda x: kws_forward(params, x, spec))(batch_x)
+    logits = logits * params["temp"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, batch_y[:, None], axis=-1))
+
+
+def kws_accuracy(params: dict, batch_x: jax.Array, batch_y: jax.Array,
+                 spec: CNN1DSpec) -> jax.Array:
+    logits = jax.vmap(lambda x: kws_forward(params, x, spec))(batch_x)
+    return jnp.mean(jnp.argmax(logits, -1) == batch_y)
+
+
+# ---------------------------------------------------------------------------
+# Export: QAT params -> (ternary weights, SA thresholds) for the compiler
+# ---------------------------------------------------------------------------
+
+def export_kws(params: dict, spec: CNN1DSpec) -> tuple[dict, dict]:
+    """Fold BN-affines into *integer* SA thresholds (quant.py docs).
+
+    Pre-activations s are integers, so ``a*s+b >= 0`` is exactly
+    ``s >= ceil(-b/a)`` (a>0) / ``s <= floor(-b/a)`` (a<0, flip).  Exporting
+    the integer threshold makes hardware execution bit-exact with the QAT
+    forward — no knife-edge float disagreements.
+    """
+    weights: dict[int, np.ndarray] = {}
+    thresholds: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+    for li, lspec in enumerate(spec.layers):
+        p = params.get(f"layer{li}")
+        if p is None:
+            continue
+        w_t = np.asarray(quant.ternarize_weight(p["w"]), dtype=np.int8)
+        weights[li] = w_t
+        if "a" in p:
+            a = np.asarray(p["a"], np.float64)
+            b = np.asarray(p["b"], np.float64)
+            safe_a = np.where(a == 0, 1.0, a)
+            t = -b / safe_a
+            thr = np.where(a > 0, np.ceil(t), np.floor(t) + 1)
+            # a == 0: output is constant sign(b)
+            thr = np.where(a == 0, np.where(b >= 0, -np.inf, np.inf), thr)
+            flip = a < 0
+            thresholds[li] = (thr.astype(np.float64), flip)
+        else:
+            thresholds[li] = (
+                np.zeros(lspec.cout, np.float64),
+                np.zeros(lspec.cout, bool),
+            )
+    return weights, thresholds

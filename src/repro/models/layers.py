@@ -1,0 +1,156 @@
+"""Shared building blocks for the LM-family architectures (pure JAX).
+
+Everything is functional: ``init_*`` builds parameter pytrees, ``apply``-style
+functions consume them.  Weights are stored in ``param_dtype`` (bf16 by
+default — the fp32 master copy lives in the optimizer, ZeRO-style), compute
+runs in bf16 with fp32 accumulations where it matters.
+
+TernaryLinear is the paper's technique lifted into the LM stack: BitNet-style
+QAT linears whose weights ternarize {-1,0,+1} with an identity STE and a
+per-tensor scale.  At serve time they can execute on the TWM popcount
+kernels (packed planes); in training / dry-run they run as masked-sign
+matmuls on the MXU (DESIGN.md §2.4 explains when each path wins).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+PARAM_DTYPE = jnp.bfloat16
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=PARAM_DTYPE) -> jax.Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=PARAM_DTYPE) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear (+ ternary QAT mode)
+# ---------------------------------------------------------------------------
+
+def linear(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jax.lax.dot_general(
+        x.astype(COMPUTE_DTYPE),
+        w.astype(COMPUTE_DTYPE),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=COMPUTE_DTYPE,
+    )
+
+
+def ternary_linear(x: jax.Array, w: jax.Array) -> jax.Array:
+    """PSCNN/BitNet-style ternary QAT linear (the paper's arithmetic regime).
+
+    w ternarizes with identity STE; a per-tensor scale keeps magnitudes.
+    The matmul stays on the MXU (int-like values in bf16); the serve-time
+    packed-popcount path lives in repro.kernels.
+    """
+    w32 = w.astype(jnp.float32)
+    scale = jnp.mean(jnp.abs(w32)) + 1e-8
+    w_t = quant.ternarize_weight(w32) * scale
+    return jax.lax.dot_general(
+        x.astype(COMPUTE_DTYPE),
+        w_t.astype(COMPUTE_DTYPE),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=COMPUTE_DTYPE,
+    )
+
+
+def apply_linear(x: jax.Array, w: jax.Array, quant_mode: str = "none") -> jax.Array:
+    if quant_mode == "ternary":
+        return ternary_linear(x, w)
+    return linear(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, jnp.float32) / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)  # (Dh/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,Dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., 0::2], x32[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, d_model, d_ff),
+        "wi_up": dense_init(k2, d_model, d_ff),
+        "wo": dense_init(k3, d_ff, d_model),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, quant_mode: str = "none") -> jax.Array:
+    g = apply_linear(x, p["wi_gate"], quant_mode)
+    u = apply_linear(x, p["wi_up"], quant_mode)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(COMPUTE_DTYPE) * u
+    return apply_linear(h, p["wo"], quant_mode)
+
+
+@dataclasses.dataclass(frozen=True)
+class RematPolicy:
+    """Activation checkpointing policy selector for the train loop."""
+
+    mode: str = "block"  # 'none' | 'block' | 'dots'
+
+    def wrap(self, fn):
+        if self.mode == "none":
+            return fn
+        if self.mode == "block":
+            return jax.checkpoint(fn, prevent_cse=False)
+        if self.mode == "dots":
+            return jax.checkpoint(
+                fn,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+                prevent_cse=False,
+            )
+        raise ValueError(self.mode)

@@ -1,0 +1,19 @@
+"""Shared scan wrapper with a global unroll switch.
+
+``SCAN_UNROLL`` is flipped ONLY by the dry-run cost-extraction pass: XLA's
+cost_analysis() does not multiply while-loop bodies by trip count, so costs
+are measured on reduced-depth lowerings with every *structural* scan (layer
+stacks, attention/SSM chunk loops, loss chunks) fully unrolled, then
+extrapolated.  Per-token scans (sLSTM) stay rolled — their cost is added
+analytically (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import jax
+
+SCAN_UNROLL = False
+
+
+def maybe_unrolled_scan(f, init, xs, length=None):
+    return jax.lax.scan(f, init, xs, length=length,
+                        unroll=True if SCAN_UNROLL else 1)

@@ -1,0 +1,430 @@
+"""Recurrent blocks: xLSTM (mLSTM + sLSTM, arXiv:2405.04517) and Mamba (S6).
+
+All three expose the same three entry points used by the stacks:
+  *_train  : full-sequence (parallel/chunked where the math allows)
+  *_prefill: full-sequence + final recurrent state (for long-context serve)
+  *_step   : O(1) single-token state update (decode; the reason these archs
+             run the long_500k shape that full attention cannot)
+
+mLSTM uses the chunkwise-parallel linear-attention formulation (matrix
+state C = sum_t f..f i_t v_t k_t^T), sLSTM is strictly sequential (lax.scan),
+Mamba uses an associative-scan over the diagonal SSM recurrence.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE, dense_init
+from repro.models.scan_utils import maybe_unrolled_scan
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM): linear attention with scalar forget/input gates
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d_model: int, n_heads: int, expand: int = 2) -> dict:
+    d_inner = expand * d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d_model, 2 * d_inner),   # x and gate branch
+        "w_qkv": dense_init(ks[1], d_inner, 3 * d_inner),
+        "w_if": dense_init(ks[2], d_inner, 2 * n_heads, dtype=jnp.float32),
+        "w_out": dense_init(ks[3], d_inner, d_model),
+        "skip_gamma": jnp.ones((d_inner,), jnp.float32),
+    }
+
+
+def _mlstm_gates(p, xi, n_heads):
+    """xi (B,S,Di) -> per-head log input/forget gates (B,S,H) fp32."""
+    g = xi.astype(jnp.float32) @ p["w_if"]  # (B,S,2H)
+    i_log = g[..., :n_heads]                     # log-space input gate
+    f_log = jax.nn.log_sigmoid(g[..., n_heads:])  # forget in (0,1)
+    return i_log, f_log
+
+
+def _mlstm_scan(q, k, v, i_log, f_log):
+    """Recurrent reference: per-step state C (B,H,Dk,Dv), n (B,H,Dk).
+
+    Stabilized with a running max m_t (xLSTM eq. 15-19).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+
+    def step(carry, t):
+        c, n, m = carry
+        qt, kt, vt = q[:, t], k[:, t], v[:, t]
+        il, fl = i_log[:, t], f_log[:, t]  # (B,H)
+        m_new = jnp.maximum(fl + m, il)
+        c = c * jnp.exp(fl + m - m_new)[..., None, None] + jnp.exp(
+            il - m_new
+        )[..., None, None] * (kt[..., :, None] * vt[..., None, :])
+        n = n * jnp.exp(fl + m - m_new)[..., None] + jnp.exp(il - m_new)[..., None] * kt
+        denom = jnp.maximum(
+            jnp.abs(jnp.sum(n * qt, axis=-1)), jnp.exp(-m_new)
+        )  # (B,H)
+        out = jnp.einsum("bhk,bhkv->bhv", qt, c) / denom[..., None]
+        return (c, n, m_new), out
+
+    c0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    n0 = jnp.zeros((b, h, dk), jnp.float32)
+    m0 = jnp.zeros((b, h), jnp.float32)
+    (cT, nT, mT), outs = jax.lax.scan(step, (c0, n0, m0), jnp.arange(s))
+    return jnp.moveaxis(outs, 0, 1), (cT, nT, mT)  # (B,S,H,Dv)
+
+
+def _mlstm_chunk_parallel(q, k, v, i_log, f_log, chunk: int = 256):
+    """Chunkwise-parallel mLSTM (GLA-style): intra-chunk quadratic matmuls +
+    inter-chunk matrix-state recurrence.  O(S*c) memory instead of O(S*dk^2)
+    — required to train/prefill 32k+ sequences (DESIGN.md §3).
+
+    All in fp32 with running-max stabilization (xLSTM eq. 15-19 lifted to
+    chunk granularity).  Matches `_mlstm_scan` to float tolerance.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    if s % c:
+        c = s
+    n_chunks = s // c
+
+    def resh(t):
+        return jnp.moveaxis(t.reshape(b, n_chunks, c, *t.shape[2:]), 1, 0)
+
+    qs, ks, vs = resh(q), resh(k), resh(v)               # (Nc,B,c,H,dk)
+    ii, ff = resh(i_log), resh(f_log)                    # (Nc,B,c,H)
+
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    tri_strict = jnp.tril(jnp.ones((c, c), bool), k=-1)
+
+    def chunk_step(carry, xs):
+        C_in, n_in, m_in = carry           # (B,H,dk,dv), (B,H,dk), (B,H)
+        qc, kc, vc, ic, fc = xs            # (B,c,H,*) / (B,c,H)
+        F = jnp.cumsum(fc, axis=1)         # inclusive logsum of forgets
+        T = F[:, -1]                       # (B,H)
+        # log-weights
+        a = F + m_in[:, None]                          # inter, per t
+        w = F[:, :, None] - F[:, None, :] + ic[:, None]  # (B,t,s,H)
+        w = jnp.where(tri[None, :, :, None], w, -jnp.inf)
+        u = T[:, None] - F + ic                        # state update, per s
+        # per-position stabilizer
+        m_intra = jnp.max(w, axis=2)                   # (B,t,H)
+        m_t = jnp.maximum(a, m_intra)                  # (B,t,H)
+        inter_w = jnp.exp(a - m_t)                     # (B,t,H)
+        intra = jnp.exp(w - m_t[:, :, None])           # (B,t,s,H)
+        intra = jnp.where(tri[None, :, :, None], intra, 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc) * intra
+        out = jnp.einsum("btsh,bshv->bthv", scores, vc)
+        out = out + inter_w[..., None] * jnp.einsum("bthd,bhdv->bthv", qc, C_in)
+        nvec = jnp.einsum("btsh,bshd->bthd", intra, kc)
+        nvec = nvec + inter_w[..., None] * n_in[:, None]
+        denom = jnp.maximum(
+            jnp.abs(jnp.einsum("bthd,bthd->bth", qc, nvec)), jnp.exp(-m_t)
+        )
+        out = out / denom[..., None]
+        # carry update
+        m_out = jnp.maximum(m_in + T, jnp.max(u, axis=1))
+        su = jnp.exp(u - m_out[:, None])               # (B,s,H)
+        C_out = jnp.exp(m_in + T - m_out)[:, :, None, None] * C_in + jnp.einsum(
+            "bshd,bshv->bhdv", su[..., None] * kc, vc
+        )
+        n_out = jnp.exp(m_in + T - m_out)[:, :, None] * n_in + jnp.einsum(
+            "bsh,bshd->bhd", su, kc
+        )
+        return (C_out, n_out, m_out), out
+
+    C0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    n0 = jnp.zeros((b, h, dk), jnp.float32)
+    m0 = jnp.zeros((b, h), jnp.float32)
+    (Ct, nt, mt), outs = maybe_unrolled_scan(
+        jax.checkpoint(chunk_step, prevent_cse=False),
+        (C0, n0, m0), (qs, ks, vs, ii, ff),
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, dv)
+    return out, (Ct, nt, mt)
+
+
+def mlstm_train(p, x, *, n_heads: int, expand: int = 2):
+    out, _ = mlstm_prefill(p, x, n_heads=n_heads, expand=expand)
+    return out
+
+
+def mlstm_prefill(p, x, *, n_heads: int, expand: int = 2, chunk: int = 256):
+    b, s, d = x.shape
+    d_inner = expand * d
+    up = (x.astype(COMPUTE_DTYPE) @ p["w_up"].astype(COMPUTE_DTYPE))
+    xi, zg = up[..., :d_inner], up[..., d_inner:]
+    qkv = xi @ p["w_qkv"].astype(COMPUTE_DTYPE)
+    dk = d_inner // n_heads
+    q, k, v = [
+        t.reshape(b, s, n_heads, dk).astype(jnp.float32)
+        for t in jnp.split(qkv, 3, axis=-1)
+    ]
+    q = q / math.sqrt(dk)
+    i_log, f_log = _mlstm_gates(p, xi, n_heads)
+    h, state = _mlstm_chunk_parallel(q, k, v, i_log, f_log, chunk=chunk)
+    h = h.reshape(b, s, d_inner).astype(COMPUTE_DTYPE)
+    h = h * jax.nn.silu(zg.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    return (h @ p["w_out"].astype(COMPUTE_DTYPE)), state
+
+
+def mlstm_prefill_sequential(p, x, *, n_heads: int, expand: int = 2):
+    """Step-by-step reference (tests validate the chunked path against it)."""
+    b, s, d = x.shape
+    d_inner = expand * d
+    up = (x.astype(COMPUTE_DTYPE) @ p["w_up"].astype(COMPUTE_DTYPE))
+    xi, zg = up[..., :d_inner], up[..., d_inner:]
+    qkv = xi @ p["w_qkv"].astype(COMPUTE_DTYPE)
+    dk = d_inner // n_heads
+    q, k, v = [
+        t.reshape(b, s, n_heads, dk).astype(jnp.float32)
+        for t in jnp.split(qkv, 3, axis=-1)
+    ]
+    q = q / math.sqrt(dk)
+    i_log, f_log = _mlstm_gates(p, xi, n_heads)
+    h, state = _mlstm_scan(q, k, v, i_log, f_log)
+    h = h.reshape(b, s, d_inner).astype(COMPUTE_DTYPE)
+    h = h * jax.nn.silu(zg.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    return (h @ p["w_out"].astype(COMPUTE_DTYPE)), state
+
+
+def mlstm_step(p, x, state, *, n_heads: int, expand: int = 2):
+    """x (B,1,D) + state -> (out (B,1,D), new state).  O(1) in context."""
+    out, (c, n, m) = _mlstm_step_inner(p, x, state, n_heads, expand)
+    return out, (c, n, m)
+
+
+def _mlstm_step_inner(p, x, state, n_heads, expand):
+    b, _, d = x.shape
+    d_inner = expand * d
+    up = x.astype(COMPUTE_DTYPE) @ p["w_up"].astype(COMPUTE_DTYPE)
+    xi, zg = up[..., :d_inner], up[..., d_inner:]
+    qkv = xi @ p["w_qkv"].astype(COMPUTE_DTYPE)
+    dk = d_inner // n_heads
+    q, k, v = [
+        t.reshape(b, 1, n_heads, dk).astype(jnp.float32)
+        for t in jnp.split(qkv, 3, axis=-1)
+    ]
+    q = q / math.sqrt(dk)
+    i_log, f_log = _mlstm_gates(p, xi, n_heads)
+    c, n, m = state
+    il, fl = i_log[:, 0], f_log[:, 0]
+    m_new = jnp.maximum(fl + m, il)
+    c = c * jnp.exp(fl + m - m_new)[..., None, None] + jnp.exp(il - m_new)[
+        ..., None, None
+    ] * (k[:, 0][..., :, None] * v[:, 0][..., None, :])
+    n = n * jnp.exp(fl + m - m_new)[..., None] + jnp.exp(il - m_new)[..., None] * k[:, 0]
+    denom = jnp.maximum(jnp.abs(jnp.sum(n * q[:, 0], -1)), jnp.exp(-m_new))
+    out = jnp.einsum("bhk,bhkv->bhv", q[:, 0], c) / denom[..., None]
+    h = out.reshape(b, 1, d_inner).astype(COMPUTE_DTYPE)
+    h = h * jax.nn.silu(zg.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    return h @ p["w_out"].astype(COMPUTE_DTYPE), (c, n, m_new)
+
+
+def mlstm_init_state(batch: int, d_model: int, n_heads: int, expand: int = 2):
+    d_inner = expand * d_model
+    dk = d_inner // n_heads
+    return (
+        jnp.zeros((batch, n_heads, dk, dk), jnp.float32),
+        jnp.zeros((batch, n_heads, dk), jnp.float32),
+        jnp.zeros((batch, n_heads), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory LSTM with exponential gating)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d_model: int, n_heads: int) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": dense_init(ks[0], d_model, 4 * d_model, dtype=jnp.float32),
+        "r_in": dense_init(ks[1], d_model, 4 * d_model, dtype=jnp.float32),
+        "w_out": dense_init(ks[2], d_model, d_model),
+    }
+
+
+def slstm_init_state(batch: int, d_model: int):
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return (z, z, z + 1e-6, z)  # c, n, m... (c, h, n, m)
+
+
+def _slstm_cell(p, xt, state, d):
+    c, h, n, m = state
+    pre = xt.astype(jnp.float32) @ p["w_in"] + h @ p["r_in"]  # (B,4D)
+    zi, ii, fi, oi = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    i_log, f_log = ii, jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(f_log + m, i_log)
+    c = c * jnp.exp(f_log + m - m_new) + jnp.exp(i_log - m_new) * z
+    n = n * jnp.exp(f_log + m - m_new) + jnp.exp(i_log - m_new)
+    h_new = o * c / jnp.maximum(n, 1e-6)
+    return (c, h_new, n, m_new), h_new
+
+
+def slstm_prefill(p, x, *, n_heads: int = 0):
+    b, s, d = x.shape
+    state = slstm_init_state(b, d)
+
+    def step(carry, xt):
+        return _slstm_cell(p, xt, carry, d)
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(x, 0, 1))
+    out = jnp.moveaxis(hs, 0, 1).astype(COMPUTE_DTYPE) @ p["w_out"].astype(
+        COMPUTE_DTYPE
+    )
+    return out, state
+
+
+def slstm_train(p, x, *, n_heads: int = 0):
+    return slstm_prefill(p, x)[0]
+
+
+def slstm_step(p, x, state, *, n_heads: int = 0):
+    b, _, d = x.shape
+    state, h = _slstm_cell(p, x[:, 0], state, d)
+    return (h.astype(COMPUTE_DTYPE) @ p["w_out"].astype(COMPUTE_DTYPE))[:, None], state
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6 selective SSM) — jamba's recurrent layer
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, d_model: int, d_state: int = 16, d_conv: int = 4,
+               expand: int = 2, dt_rank: int | None = None) -> dict:
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(1, d_model // 16)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], d_model, 2 * d_inner),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner), jnp.float32) * 0.1),
+        "w_x": dense_init(ks[2], d_inner, dt_rank + 2 * d_state),
+        "w_dt": dense_init(ks[3], dt_rank, d_inner, dtype=jnp.float32),
+        "a_log": jnp.log(
+            jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_inner, 1))
+        ),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "w_out": dense_init(ks[5], d_inner, d_model),
+    }
+
+
+def _mamba_ssm_scan(u, dt, a, b_in, c_in, d_skip, chunk: int = 256):
+    """Selective scan: chunked associative_scan.
+
+    u (B,S,Di); dt (B,S,Di); a (Di,N); b_in/c_in (B,S,N) -> y (B,S,Di).
+
+    The (B,S,Di,N) decay tensor of a full-length associative scan would be
+    catastrophic at 32k+ (DESIGN.md §3); chunking bounds the materialized
+    tensor to (B,chunk,Di,N) and carries the (B,Di,N) state across chunks
+    via the scan's cumulative-product term.
+    """
+    b, s, di = u.shape
+    n = b_in.shape[-1]
+    c = min(chunk, s)
+    if s % c:
+        c = s
+    nc = s // c
+
+    def resh(t):
+        return jnp.moveaxis(t.reshape(b, nc, c, *t.shape[2:]), 1, 0)
+
+    us, dts, bs, cs = resh(u), resh(dt), resh(b_in), resh(c_in)
+
+    def combine(l, r):
+        al, xl = l
+        ar, xr = r
+        return al * ar, xr + ar * xl
+
+    def chunk_step(state, xs):
+        u_c, dt_c, b_c, c_c = xs
+        da = jnp.exp(dt_c[..., None] * a[None, None])     # (B,c,Di,N)
+        x_in = dt_c[..., None] * b_c[:, :, None, :] * u_c[..., None]
+        cumA, cumX = jax.lax.associative_scan(combine, (da, x_in), axis=1)
+        xs_full = cumX + cumA * state[:, None]
+        y = jnp.einsum("bcdn,bcn->bcd", xs_full, c_c)
+        return xs_full[:, -1], y
+
+    state0 = jnp.zeros((b, di, n), jnp.float32)
+    state, ys = maybe_unrolled_scan(
+        jax.checkpoint(chunk_step, prevent_cse=False), state0,
+        (us, dts, bs, cs),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, di)
+    return y + u * d_skip[None, None], state
+
+
+def mamba_prefill(p, x, *, d_state: int = 16, d_conv: int = 4, expand: int = 2):
+    b, s, d = x.shape
+    d_inner = expand * d
+    up = x.astype(COMPUTE_DTYPE) @ p["w_in"].astype(COMPUTE_DTYPE)
+    xi, zg = up[..., :d_inner], up[..., d_inner:]
+    xi = xi.astype(jnp.float32)
+    # depthwise causal conv (d_conv taps)
+    xpad = jnp.pad(xi, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    conv = sum(
+        xpad[:, t : t + s] * p["conv_w"][t][None, None] for t in range(d_conv)
+    )
+    xc = jax.nn.silu(conv)
+    proj = xc.astype(COMPUTE_DTYPE) @ p["w_x"].astype(COMPUTE_DTYPE)
+    dt_rank = p["w_dt"].shape[0]
+    dt_r, b_in, c_in = (
+        proj[..., :dt_rank].astype(jnp.float32),
+        proj[..., dt_rank : dt_rank + d_state].astype(jnp.float32),
+        proj[..., dt_rank + d_state :].astype(jnp.float32),
+    )
+    dt = jax.nn.softplus(dt_r @ p["w_dt"])
+    a = -jnp.exp(p["a_log"])
+    y, ssm_state = _mamba_ssm_scan(xc, dt, a, b_in, c_in, p["d_skip"])
+    y = y.astype(COMPUTE_DTYPE) * jax.nn.silu(zg.astype(jnp.float32)).astype(
+        COMPUTE_DTYPE
+    )
+    out = y @ p["w_out"].astype(COMPUTE_DTYPE)
+    # decode state: final ssm state (B,Di,N) + causal-conv tail (B,d_conv-1,Di)
+    conv_tail = jnp.pad(xi, ((0, 0), (d_conv - 1, 0), (0, 0)))[:, -(d_conv - 1):]
+    return out, (ssm_state, conv_tail)
+
+
+def mamba_train(p, x, *, d_state: int = 16, d_conv: int = 4, expand: int = 2):
+    return mamba_prefill(p, x, d_state=d_state, d_conv=d_conv, expand=expand)[0]
+
+
+def mamba_init_state(batch: int, d_model: int, d_state: int = 16,
+                     d_conv: int = 4, expand: int = 2):
+    d_inner = expand * d_model
+    return (
+        jnp.zeros((batch, d_inner, d_state), jnp.float32),
+        jnp.zeros((batch, d_conv - 1, d_inner), jnp.float32),
+    )
+
+
+def mamba_step(p, x, state, *, d_state: int = 16, d_conv: int = 4,
+               expand: int = 2):
+    """Single-token Mamba update: O(1) state, the long-context decode path."""
+    b, _, d = x.shape
+    d_inner = expand * d
+    ssm_state, conv_tail = state  # (B,Di,N), (B,d_conv-1,Di)
+    up = x.astype(COMPUTE_DTYPE) @ p["w_in"].astype(COMPUTE_DTYPE)
+    xi, zg = up[..., :d_inner], up[..., d_inner:]
+    xi = xi.astype(jnp.float32)  # (B,1,Di)
+    window = jnp.concatenate([conv_tail, xi], axis=1)  # (B,d_conv,Di)
+    conv = jnp.einsum("btd,td->bd", window, p["conv_w"])
+    xc = jax.nn.silu(conv)  # (B,Di)
+    proj = xc.astype(COMPUTE_DTYPE) @ p["w_x"].astype(COMPUTE_DTYPE)
+    dt_rank = p["w_dt"].shape[0]
+    dt = jax.nn.softplus(proj[..., :dt_rank].astype(jnp.float32) @ p["w_dt"])
+    b_in = proj[..., dt_rank : dt_rank + d_state].astype(jnp.float32)
+    c_in = proj[..., dt_rank + d_state :].astype(jnp.float32)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt[..., None] * a[None])          # (B,Di,N)
+    ssm_state = ssm_state * da + dt[..., None] * b_in[:, None, :] * xc[..., None]
+    y = jnp.einsum("bdn,bn->bd", ssm_state, c_in) + xc * p["d_skip"][None]
+    y = y.astype(COMPUTE_DTYPE) * jax.nn.silu(
+        (zg[:, 0]).astype(jnp.float32)
+    ).astype(COMPUTE_DTYPE)
+    out = (y @ p["w_out"].astype(COMPUTE_DTYPE))[:, None]
+    return out, (ssm_state, window[:, 1:])

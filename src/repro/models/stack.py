@@ -1,0 +1,390 @@
+"""Unified decoder stack covering dense / MoE / SSM / hybrid / VLM families.
+
+One code path builds all assigned architectures from ArchConfig:
+
+  * the model is ``first_k_dense`` explicit layers + N repeats of a
+    *superblock* (a fixed heterogeneous pattern, e.g. jamba's
+    [m,m,m,a,m,m,m,m]), scanned with ``jax.lax.scan`` over stacked per-repeat
+    parameters — HLO size stays O(superblock), not O(depth), which is what
+    makes 62/72-layer models lowerable for 512 partitions (DESIGN.md §3).
+  * three entry points per family: full-sequence forward (train), prefill
+    (forward + cache/state export), and single-token decode (cache/state
+    update) — the three lowering targets of the dry-run matrix.
+
+Mixer codes: 'a' attention, 'm' mamba, 'M' mLSTM, 's' sLSTM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import layers, moe, ssm
+from repro.models.layers import COMPUTE_DTYPE, dense_init, embed_init
+
+AUX_LOSS_COEF = 0.01
+
+from repro.models.scan_utils import maybe_unrolled_scan as _scan  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Structure helpers
+# ---------------------------------------------------------------------------
+
+def block_structure(cfg: ArchConfig) -> list[tuple[str, str]]:
+    """(mixer, ffn) per superblock position (offset past first_k_dense)."""
+    first_k = cfg.moe.first_k_dense if cfg.moe else 0
+    pattern = cfg.superblock or ("a",)
+    return [cfg.layer_kind(first_k + pos) for pos in range(len(pattern))]
+
+
+def n_repeats(cfg: ArchConfig) -> int:
+    first_k = cfg.moe.first_k_dense if cfg.moe else 0
+    pattern = cfg.superblock or ("a",)
+    scanned = cfg.n_layers - first_k
+    assert scanned % len(pattern) == 0, (cfg.name, scanned, len(pattern))
+    return scanned // len(pattern)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ArchConfig, key, mixer: str, ffn: str) -> dict:
+    k_mix, k_ffn, k_n = jax.random.split(key, 3)
+    p: dict = {"norm1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if mixer == "a":
+        p["attn"] = attn.init_attention(
+            k_mix, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            qk_norm=cfg.qk_norm,
+        )
+    elif mixer == "m":
+        p["mamba"] = ssm.init_mamba(
+            k_mix, cfg.d_model, d_state=cfg.d_state, expand=cfg.ssm_expand
+        )
+    elif mixer == "M":
+        p["mlstm"] = ssm.init_mlstm(k_mix, cfg.d_model, cfg.n_heads,
+                                    expand=cfg.ssm_expand)
+    elif mixer == "s":
+        p["slstm"] = ssm.init_slstm(k_mix, cfg.d_model, cfg.n_heads)
+    else:
+        raise ValueError(mixer)
+
+    if ffn == "dense":
+        p["norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["mlp"] = layers.init_mlp(k_ffn, cfg.d_model, cfg.d_ff)
+    elif ffn == "moe":
+        m = cfg.moe
+        p["norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["moe"] = moe.init_moe(
+            k_ffn, cfg.d_model, m.d_expert, m.n_experts,
+            n_shared=m.n_shared, d_shared=m.d_shared or None,
+        )
+    return p
+
+
+def _apply_mixer(cfg: ArchConfig, p: dict, h, mixer: str, mode: str,
+                 cache=None, cache_len=None):
+    """Returns (out, new_cache_or_state).  Cache semantics per mode:
+    train -> None; prefill -> exported; decode -> updated."""
+    kw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+              d_head=cfg.head_dim, rope_theta=cfg.rope_theta,
+              quant_mode=cfg.quant_mode)
+    if mixer == "a":
+        if mode == "train":
+            return attn.attention_train(p["attn"], h, **kw), None
+        if mode == "prefill":
+            return attn.attention_prefill(p["attn"], h, **kw)
+        return attn.attention_decode(p["attn"], h, cache, cache_len, **kw)
+    if mixer == "m":
+        skw = dict(d_state=cfg.d_state, expand=cfg.ssm_expand)
+        if mode == "train":
+            return ssm.mamba_train(p["mamba"], h, **skw), None
+        if mode == "prefill":
+            return ssm.mamba_prefill(p["mamba"], h, **skw)
+        return ssm.mamba_step(p["mamba"], h, cache, **skw)
+    if mixer == "M":
+        skw = dict(n_heads=cfg.n_heads, expand=cfg.ssm_expand)
+        if mode == "train":
+            return ssm.mlstm_train(p["mlstm"], h, **skw), None
+        if mode == "prefill":
+            return ssm.mlstm_prefill(p["mlstm"], h, **skw)
+        return ssm.mlstm_step(p["mlstm"], h, cache, **skw)
+    if mixer == "s":
+        if mode == "train":
+            return ssm.slstm_train(p["slstm"], h), None
+        if mode == "prefill":
+            return ssm.slstm_prefill(p["slstm"], h)
+        return ssm.slstm_step(p["slstm"], h, cache)
+    raise ValueError(mixer)
+
+
+def apply_layer(cfg: ArchConfig, p: dict, h, mixer: str, ffn: str, mode: str,
+                cache=None, cache_len=None):
+    """Pre-norm residual layer. Returns (h, new_cache, aux_loss)."""
+    from repro.sharding import act
+
+    h = act.constrain(h, "dp", None, None)
+    mixed, new_cache = _apply_mixer(
+        cfg, p, layers.rmsnorm(h, p["norm1"]), mixer, mode, cache, cache_len
+    )
+    h = h + mixed
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "dense":
+        h = h + layers.apply_mlp(p["mlp"], layers.rmsnorm(h, p["norm2"]),
+                                 cfg.quant_mode)
+    elif ffn == "moe":
+        out, aux = moe.apply_moe(
+            p["moe"], layers.rmsnorm(h, p["norm2"]),
+            top_k=cfg.moe.top_k, quant_mode=cfg.quant_mode,
+        )
+        h = h + out
+    return h, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    struct = block_structure(cfg)
+    reps = n_repeats(cfg)
+    first_k = cfg.moe.first_k_dense if cfg.moe else 0
+    keys = jax.random.split(key, 4 + first_k)
+
+    params: dict = {
+        "embed": embed_init(keys[0], cfg.padded_vocab, cfg.d_model),
+        "out_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.padded_vocab)
+
+    params["head_layers"] = [
+        _init_layer(cfg, keys[4 + i], "a", "dense") for i in range(first_k)
+    ]
+
+    # stacked superblock params: per position, leading axis = repeats
+    def stack_pos(pos, mixer, ffn):
+        ks = jax.random.split(jax.random.fold_in(keys[2], pos), reps)
+        ps = [_init_layer(cfg, k, mixer, ffn) for k in ks]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ps)
+
+    params["blocks"] = [
+        stack_pos(pos, mixer, ffn) for pos, (mixer, ffn) in enumerate(struct)
+    ]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg: ArchConfig, params, tokens, frontend=None):
+    from repro.sharding import act
+
+    h = params["embed"][tokens].astype(COMPUTE_DTYPE)
+    if frontend is not None:
+        h = jnp.concatenate([frontend.astype(COMPUTE_DTYPE), h], axis=1)
+    return act.constrain(h, "dp", None, None)
+
+
+def _logits(cfg: ArchConfig, params, h):
+    h = layers.rmsnorm(h, params["out_norm"])
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jax.lax.dot_general(
+        h, w.astype(COMPUTE_DTYPE), (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def forward_hidden(cfg: ArchConfig, params, tokens, frontend=None,
+                   mode: str = "train", remat: str = "block"):
+    """Embed + all blocks, WITHOUT the output projection.
+
+    -> (h, caches, aux): caches only when mode='prefill'."""
+    struct = block_structure(cfg)
+    h = _embed_inputs(cfg, params, tokens, frontend)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for p in params["head_layers"]:
+        h, _, aux = apply_layer(cfg, p, h, "a", "dense", "train")
+        aux_total = aux_total + aux
+
+    policy = layers.RematPolicy(remat)
+
+    def superblock(h, rep_params):
+        caches = []
+        aux_sb = jnp.zeros((), jnp.float32)
+        for pos, (mixer, ffn) in enumerate(struct):
+            h, cache, aux = apply_layer(
+                cfg, rep_params[pos], h, mixer, ffn, mode
+            )
+            aux_sb = aux_sb + aux
+            if mode == "prefill":
+                caches.append(cache)
+        return h, (tuple(caches), aux_sb)
+
+    sb = policy.wrap(superblock) if mode == "train" else superblock
+    h, (caches, auxes) = _scan(
+        lambda c, xs: sb(c, xs), h, tuple(params["blocks"])
+    )
+    aux_total = aux_total + jnp.sum(auxes)
+    return h, caches, aux_total
+
+
+def forward(cfg: ArchConfig, params, tokens, frontend=None,
+            mode: str = "train", remat: str = "block"):
+    """Full-sequence forward.  mode='prefill' also returns caches/states."""
+    h, caches, aux_total = forward_hidden(cfg, params, tokens, frontend,
+                                          mode, remat)
+    logits = _logits(cfg, params, h)
+    if mode == "prefill":
+        return logits, caches
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, cache/state update)
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_seq: int,
+                      kv_replication: int = 1) -> dict:
+    """Zeroed caches/states, stacked (reps, ...) per superblock position.
+
+    kv_replication=r stores each kv head r times (TP-local GQA attention,
+    see attention.attention_decode)."""
+    struct = block_structure(cfg)
+    reps = n_repeats(cfg)
+    state: dict = {"cache_len": jnp.zeros((), jnp.int32), "layers": []}
+    hk_eff = cfg.n_kv_heads * kv_replication
+
+    def stacked(shape, dtype=jnp.bfloat16):
+        return jnp.zeros((reps, *shape), dtype)
+
+    for mixer, _ in struct:
+        if mixer == "a":
+            kv = (
+                stacked((batch, max_seq, hk_eff, cfg.head_dim)),
+                stacked((batch, max_seq, hk_eff, cfg.head_dim)),
+            )
+            state["layers"].append(kv)
+        elif mixer == "m":
+            d_inner = cfg.ssm_expand * cfg.d_model
+            state["layers"].append(
+                (
+                    stacked((batch, d_inner, cfg.d_state), jnp.float32),
+                    stacked((batch, 3, d_inner), jnp.float32),  # d_conv-1 = 3
+                )
+            )
+        elif mixer == "M":
+            d_inner = cfg.ssm_expand * cfg.d_model
+            dk = d_inner // cfg.n_heads
+            state["layers"].append(
+                (
+                    stacked((batch, cfg.n_heads, dk, dk), jnp.float32),
+                    stacked((batch, cfg.n_heads, dk), jnp.float32),
+                    stacked((batch, cfg.n_heads), jnp.float32),
+                )
+            )
+        elif mixer == "s":
+            z = stacked((batch, cfg.d_model), jnp.float32)
+            state["layers"].append((z, z, z, z))
+    # head (unscanned) layers are always attention
+    first_k = cfg.moe.first_k_dense if cfg.moe else 0
+    state["head"] = [
+        (
+            jnp.zeros((batch, max_seq, hk_eff, cfg.head_dim), jnp.bfloat16),
+            jnp.zeros((batch, max_seq, hk_eff, cfg.head_dim), jnp.bfloat16),
+        )
+        for _ in range(first_k)
+    ]
+    return state
+
+
+def decode_step(cfg: ArchConfig, params, state: dict, tokens):
+    """tokens (B,1) -> (logits (B,1,V), new state).  O(1) per step for
+    recurrent mixers; O(S) KV attention for 'a' mixers."""
+    struct = block_structure(cfg)
+    h = _embed_inputs(cfg, params, tokens)
+    cache_len = state["cache_len"]
+
+    new_head = []
+    for p, cache in zip(params["head_layers"], state["head"]):
+        h, c, _ = apply_layer(cfg, p, h, "a", "dense", "decode",
+                              cache=cache, cache_len=cache_len)
+        new_head.append(c)
+
+    def superblock(h, xs):
+        rep_params, rep_caches = xs
+        new_caches = []
+        for pos, (mixer, ffn) in enumerate(struct):
+            h, c, _ = apply_layer(
+                cfg, rep_params[pos], h, mixer, ffn, "decode",
+                cache=rep_caches[pos], cache_len=cache_len,
+            )
+            new_caches.append(c)
+        return h, tuple(new_caches)
+
+    h, new_layer_caches = _scan(
+        superblock, h, (tuple(params["blocks"]), tuple(state["layers"]))
+    )
+    logits = _logits(cfg, params, h)
+    new_state = {
+        "cache_len": cache_len + 1,
+        "layers": list(new_layer_caches),
+        "head": new_head,
+    }
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def chunked_ce_loss(project_fn, h, labels, vocab: int, padded_vocab: int,
+                    chunk: int = 512) -> jax.Array:
+    """Cross-entropy without materializing full (B,S,V) fp32 logits.
+
+    The output projection + log-softmax run per sequence chunk under
+    jax.checkpoint, so peak memory holds one (B,chunk,V/TP) logits slab and
+    the backward recomputes each chunk (MaxText-style vocab-loss chunking).
+    """
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # irregular tail: fall back to one chunk
+    n = s // chunk
+    hc = jnp.moveaxis(h.reshape(b, n, chunk, d), 1, 0)
+    yc = jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0)
+
+    @jax.checkpoint
+    def one_chunk(carry, xs):
+        h_c, y_c = xs
+        logits = project_fn(h_c)  # (B,chunk,V) fp32
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(
+            logp, jnp.clip(y_c, 0, padded_vocab - 1)[..., None], axis=-1
+        )[..., 0]
+        mask = (y_c >= 0) & (y_c < vocab)
+        return (
+            carry[0] + jnp.sum(nll * mask),
+            carry[1] + jnp.sum(mask),
+        ), None
+
+    (tot, cnt), _ = _scan(one_chunk, (jnp.zeros(()), jnp.zeros(())), (hc, yc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+def lm_loss(cfg: ArchConfig, params, tokens, labels, frontend=None,
+            remat: str = "block", loss_chunk: int = 512):
+    """Next-token cross-entropy (labels aligned with tokens positions)."""
+    h, _, aux = forward_hidden(cfg, params, tokens, frontend, mode="train",
+                               remat=remat)
+    if frontend is not None:
+        h = h[:, -tokens.shape[1]:]  # loss over text positions only
+    loss = chunked_ce_loss(lambda hc: _logits(cfg, params, hc), h, labels,
+                           cfg.vocab, cfg.padded_vocab, chunk=loss_chunk)
+    return loss + AUX_LOSS_COEF * aux

@@ -1,0 +1,30 @@
+"""Token samplers (greedy / temperature / top-k) over padded-vocab logits."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mask_padded(logits: jax.Array, vocab: int) -> jax.Array:
+    """Kill the vocab-padding columns so they can never be sampled."""
+    v = logits.shape[-1]
+    if v == vocab:
+        return logits
+    mask = jnp.arange(v) < vocab
+    return jnp.where(mask, logits, -jnp.inf)
+
+
+def greedy(logits: jax.Array, vocab: int) -> jax.Array:
+    return jnp.argmax(mask_padded(logits, vocab), axis=-1).astype(jnp.int32)
+
+
+def sample(key: jax.Array, logits: jax.Array, vocab: int,
+           temperature: float = 1.0, top_k: int = 0) -> jax.Array:
+    logits = mask_padded(logits, vocab).astype(jnp.float32)
+    if temperature <= 0:
+        return greedy(logits, vocab)
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits >= kth, logits, -jnp.inf)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,63 @@
+"""Activation sharding constraints with logical axis names.
+
+Model code never imports a mesh; it annotates activations with *logical*
+axes ("dp" batch, "tp" tensor/model).  The launcher installs a policy
+mapping logical -> mesh axes before lowering; without a policy (unit tests,
+CPU smoke runs) constraints are no-ops.  Dims that do not divide the mesh
+axis are silently left unconstrained (the GSPMD-legal fallback).
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_POLICY: dict | None = None
+
+
+def set_policy(mesh, dp_axes, tp_axis="model") -> None:
+    """tp_axis=None disables TP constraints (dp_only/FSDP profile)."""
+    global _POLICY
+    _POLICY = {"mesh": mesh, "dp": dp_axes, "tp": tp_axis}
+
+
+def clear_policy() -> None:
+    global _POLICY
+    _POLICY = None
+
+
+def _axis_size(mesh, axes) -> int:
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def axis_size(name: str) -> int | None:
+    """Size of a logical axis under the active policy (None = no policy)."""
+    if _POLICY is None or _POLICY.get(name) is None:
+        return None
+    return _axis_size(_POLICY["mesh"], _POLICY[name])
+
+
+def constrain(x, *logical):
+    """constrain(x, 'dp', None, 'tp', None) — skip non-divisible dims."""
+    if _POLICY is None:
+        return x
+    import jax
+
+    mesh = _POLICY["mesh"]
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        if name is None:
+            spec.append(None)
+            continue
+        axes = _POLICY.get(name)
+        if axes is None:
+            spec.append(None)
+            continue
+        if dim % _axis_size(mesh, axes) == 0 and dim >= _axis_size(mesh, axes):
+            spec.append(axes)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec))
+    )

@@ -1,0 +1,135 @@
+"""Fault-tolerant checkpointing: atomic, versioned, mesh-elastic.
+
+Format: one zstd-compressed msgpack file per step holding
+  { step, meta {arch, mesh_shape, tree_def}, leaves {name: raw bytes} }
+
+Guarantees:
+  * atomic: write to <dir>/tmp-<step>, fsync, rename to <dir>/step-<n>
+    — a crash mid-save never corrupts the latest checkpoint.
+  * versioned: keep_last N checkpoints, GC older ones.
+  * elastic restore: arrays are saved unsharded (gathered); ``restore``
+    re-places them with whatever NamedSharding the *new* mesh dictates, so a
+    job can restart on a different topology (node failure, elastic scale).
+  * integrity: per-leaf crc32 verified on load.
+
+On a real multi-host cluster the gather becomes a per-host shard dump +
+manifest (same interface); this single-process implementation is the
+functional model of that protocol.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import struct
+import zlib
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import msgpack
+import numpy as np
+import zstandard
+
+from repro.utils.logging import get_logger
+
+log = get_logger("checkpoint")
+
+
+def _leaf_to_bytes(x) -> dict:
+    arr = np.asarray(jax.device_get(x))
+    if arr.dtype.name == "bfloat16":
+        raw = arr.view(np.uint16).tobytes()
+        dtype = "bfloat16"
+    else:
+        raw = arr.tobytes()
+        dtype = arr.dtype.str
+    return {
+        "shape": list(arr.shape),
+        "dtype": dtype,
+        "crc": zlib.crc32(raw),
+        "data": raw,
+    }
+
+
+def _leaf_from_bytes(d: dict) -> np.ndarray:
+    raw = d["data"]
+    if zlib.crc32(raw) != d["crc"]:
+        raise IOError("checkpoint leaf CRC mismatch (corrupt file)")
+    if d["dtype"] == "bfloat16":
+        return np.frombuffer(raw, ml_dtypes.bfloat16).reshape(d["shape"])
+    return np.frombuffer(raw, np.dtype(d["dtype"])).reshape(d["shape"])
+
+
+def save(ckpt_dir: str | os.PathLike, step: int, tree, meta: dict | None = None,
+         keep_last: int = 3) -> pathlib.Path:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        "step": step,
+        "meta": meta or {},
+        "treedef": str(treedef),
+        "leaves": [_leaf_to_bytes(l) for l in leaves],
+    }
+    blob = zstandard.ZstdCompressor(level=3).compress(
+        msgpack.packb(payload, use_bin_type=True)
+    )
+    tmp = ckpt_dir / f"tmp-{step}"
+    final = ckpt_dir / f"step-{step:010d}"
+    with open(tmp, "wb") as f:
+        f.write(blob)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep_last)
+    log.info("saved checkpoint %s (%.1f MB)", final.name, len(blob) / 1e6)
+    return final
+
+
+def latest_step(ckpt_dir: str | os.PathLike) -> int | None:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = sorted(
+        int(p.name.split("-")[1]) for p in ckpt_dir.glob("step-*")
+    )
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str | os.PathLike, tree_template, step: int | None = None,
+            shardings=None) -> tuple[int, object, dict]:
+    """Load a checkpoint into the structure of ``tree_template``.
+
+    ``shardings``: optional pytree of NamedSharding matching the template —
+    arrays are device_put with them (elastic re-shard onto the current mesh).
+    """
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = ckpt_dir / f"step-{step:010d}"
+    blob = zstandard.ZstdDecompressor().decompress(path.read_bytes())
+    payload = msgpack.unpackb(blob, raw=False)
+    leaves_raw = [_leaf_from_bytes(d) for d in payload["leaves"]]
+    flat_t, treedef = jax.tree_util.tree_flatten(tree_template)
+    if len(flat_t) != len(leaves_raw):
+        raise ValueError(
+            f"checkpoint has {len(leaves_raw)} leaves, template expects "
+            f"{len(flat_t)} — architecture mismatch"
+        )
+    if shardings is not None:
+        flat_s = jax.tree_util.tree_flatten(shardings)[0]
+        leaves = [
+            jax.device_put(np.asarray(l), s) for l, s in zip(leaves_raw, flat_s)
+        ]
+    else:
+        leaves = [jnp.asarray(l) for l in leaves_raw]
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    log.info("restored checkpoint step %d from %s", step, path.name)
+    return step, tree, payload["meta"]
+
+
+def _gc(ckpt_dir: pathlib.Path, keep_last: int) -> None:
+    ckpts = sorted(ckpt_dir.glob("step-*"))
+    for old in ckpts[:-keep_last]:
+        old.unlink()

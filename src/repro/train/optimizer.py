@@ -1,0 +1,172 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+Mixed-precision discipline: model params may be bf16; the optimizer keeps an
+fp32 master copy plus moments, all sharded like the params (ZeRO-1 falls out
+of pjit sharding everything).  ``update`` returns the new bf16 params and
+optimizer state.
+
+Optimizers: AdamW, SGD(+momentum), Lion.  All support global-norm clipping
+and a pluggable gradient transform hook (used by train/compression.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import global_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9
+    clip_norm: float = 1.0
+
+
+def init_opt_state(cfg: OptConfig, params) -> dict:
+    # copy=True: fp32 leaves must not alias the model params (donation safety)
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.array(x, jnp.float32, copy=True), t
+    )
+    zeros = lambda: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params
+    )
+    state = {"step": jnp.zeros((), jnp.int32), "master": f32(params)}
+    if cfg.name == "adamw":
+        state["m"] = zeros()
+        state["v"] = zeros()
+    elif cfg.name in ("sgd", "lion"):
+        state["m"] = zeros()
+    elif cfg.name == "adafactor":
+        # factored second moment: ~4 bytes/param total optimizer state —
+        # the only optimizer that fits 100B+ models on a 16 GB/chip pod.
+        def vrow(x):
+            return (jnp.zeros(x.shape[:-1], jnp.float32) if x.ndim >= 2
+                    else jnp.zeros(x.shape, jnp.float32))
+
+        def vcol(x):
+            return (jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32)
+                    if x.ndim >= 2 else jnp.zeros((1,), jnp.float32))
+
+        state["v_row"] = jax.tree_util.tree_map(vrow, params)
+        state["v_col"] = jax.tree_util.tree_map(vcol, params)
+    else:
+        raise ValueError(cfg.name)
+    return state
+
+
+def _clip(grads, clip_norm: float):
+    if clip_norm <= 0:
+        return grads, jnp.asarray(0.0)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def update(
+    cfg: OptConfig,
+    state: dict,
+    grads,
+    lr_scale: jax.Array | float = 1.0,
+    grad_transform: Callable | None = None,
+):
+    """-> (new_params_bf16-likeness-of-master-cast, new_state, metrics)."""
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    if grad_transform is not None:
+        grads, state = grad_transform(grads, state)
+    grads, gnorm = _clip(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = cfg.lr * lr_scale
+    master = state["master"]
+
+    if cfg.name == "adamw":
+        b1, b2 = cfg.beta1, cfg.beta2
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads
+        )
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state["v"], grads
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            mh = m_ / bc1
+            vh = v_ / bc2
+            return p - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p)
+
+        master = jax.tree_util.tree_map(upd, master, m, v)
+        new_state = {"step": step, "master": master, "m": m, "v": v}
+    elif cfg.name == "sgd":
+        m = jax.tree_util.tree_map(
+            lambda m_, g: cfg.momentum * m_ + g, state["m"], grads
+        )
+        master = jax.tree_util.tree_map(lambda p, m_: p - lr * m_, master, m)
+        new_state = {"step": step, "master": master, "m": m}
+    elif cfg.name == "lion":
+        b1, b2 = cfg.beta1, cfg.beta2
+
+        def upd(p, m_, g):
+            u = jnp.sign(b1 * m_ + (1 - b1) * g)
+            return p - lr * (u + cfg.weight_decay * p)
+
+        master = jax.tree_util.tree_map(upd, master, state["m"], grads)
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b2 * m_ + (1 - b2) * g, state["m"], grads
+        )
+        new_state = {"step": step, "master": master, "m": m}
+    elif cfg.name == "adafactor":
+        b2 = cfg.beta2
+
+        def upd_factored(p, g, vr, vc):
+            if g.ndim >= 2:
+                vr_n = b2 * vr + (1 - b2) * jnp.mean(jnp.square(g), axis=-1)
+                vc_n = b2 * vc + (1 - b2) * jnp.mean(jnp.square(g), axis=-2)
+                r = vr_n / jnp.maximum(
+                    jnp.mean(vr_n, axis=-1, keepdims=True), 1e-30
+                )
+                v_hat = r[..., None] * vc_n[..., None, :]
+            else:
+                vr_n = b2 * vr + (1 - b2) * jnp.square(g)
+                vc_n = vc
+                v_hat = vr_n
+            u = g * jax.lax.rsqrt(v_hat + cfg.eps)
+            # update clipping (Adafactor's RMS-1 rule)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms)
+            p_n = p - lr * (u + cfg.weight_decay * p)
+            return p_n, vr_n, vc_n
+
+        master = jax.tree_util.tree_map(
+            lambda p, g, vr, vc: upd_factored(p, g, vr, vc)[0],
+            state["master"], grads, state["v_row"], state["v_col"],
+        )
+        v_row = jax.tree_util.tree_map(
+            lambda p, g, vr, vc: upd_factored(p, g, vr, vc)[1],
+            state["master"], grads, state["v_row"], state["v_col"],
+        )
+        v_col = jax.tree_util.tree_map(
+            lambda p, g, vr, vc: upd_factored(p, g, vr, vc)[2],
+            state["master"], grads, state["v_row"], state["v_col"],
+        )
+        new_state = {"step": step, "master": master, "v_row": v_row,
+                     "v_col": v_col}
+    else:
+        raise ValueError(cfg.name)
+
+    return new_state, {"grad_norm": gnorm, "lr": jnp.asarray(lr)}
+
+
+def cast_params_like(master, params_template):
+    """fp32 master -> model dtype (bf16) for the forward pass."""
+    return jax.tree_util.tree_map(
+        lambda m, p: m.astype(p.dtype), master, params_template
+    )

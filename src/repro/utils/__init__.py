@@ -1,0 +1,15 @@
+from repro.utils.tree import (
+    tree_size_bytes,
+    tree_count_params,
+    tree_zeros_like,
+    tree_map_with_path_names,
+)
+from repro.utils.logging import get_logger
+
+__all__ = [
+    "tree_size_bytes",
+    "tree_count_params",
+    "tree_zeros_like",
+    "tree_map_with_path_names",
+    "get_logger",
+]

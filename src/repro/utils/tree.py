@@ -1,0 +1,44 @@
+"""Pytree helpers used across the framework (no flax/optax available)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size_bytes(tree) -> int:
+    """Total bytes of every array leaf in ``tree``."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize for l in leaves))
+
+
+def tree_count_params(tree) -> int:
+    """Total element count of every array leaf in ``tree``."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return int(sum(np.prod(l.shape) for l in leaves))
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_map_with_path_names(fn, tree):
+    """tree_map where ``fn(name, leaf)`` receives a '/'-joined key path."""
+
+    def _name(path) -> str:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:  # pragma: no cover - defensive
+                parts.append(str(p))
+        return "/".join(parts)
+
+    return jax.tree_util.tree_map_with_path(lambda p, l: fn(_name(p), l), tree)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))

@@ -1,0 +1,7 @@
+"""Test config: CPU-only, 1 visible device (the dry-run sets its own
+XLA_FLAGS in a separate process; tests must NOT see 512 fake devices)."""
+import os
+
+# deterministic, quiet
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "")

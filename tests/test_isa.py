@@ -1,0 +1,83 @@
+"""32-bit ISA: encode/decode roundtrips (property-based) + structure."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isa
+
+pow2 = st.sampled_from([1, 2, 4, 8])
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    fuse=st.booleans(),
+    ltype=st.integers(0, 1),
+    k=st.integers(0, 31),
+    stride=pow2,
+    cin=st.integers(1, 64).map(lambda g: g * 16),
+    cout=st.integers(1, 32).map(lambda g: g * 16),
+    bitser=pow2,
+    wpage=st.integers(0, 15),
+    pool=pow2,
+    outmode=st.integers(0, 1),
+)
+def test_mac_roundtrip(fuse, ltype, k, stride, cin, cout, bitser, wpage, pool,
+                       outmode):
+    mi = isa.MacInstr(fuse=fuse, ltype=ltype, k=k, stride=stride, cin=cin,
+                      cout=cout, bitser=bitser, wpage=wpage, pool=pool,
+                      outmode=outmode)
+    word = mi.encode()
+    assert 0 <= word < 2**32
+    assert isa.opcode(word) == isa.OP_MAC
+    assert isa.MacInstr.decode(word) == mi
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    row_start=st.integers(0, 1023),
+    n_rows=st.integers(0, 1023),
+    wsram_page=st.integers(0, 511),
+)
+def test_wrep_roundtrip(row_start, n_rows, wsram_page):
+    wi = isa.WrepInstr(row_start=row_start, n_rows=n_rows,
+                       wsram_page=wsram_page)
+    assert isa.WrepInstr.decode(wi.encode()) == wi
+    assert isa.opcode(wi.encode()) == isa.OP_WREP
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    ifm=st.integers(0, isa.MAX_ADDR - 1),
+    ofm=st.integers(0, isa.MAX_ADDR - 1),
+)
+def test_ptr_roundtrip(ifm, ofm):
+    pi = isa.PtrInstr(ifm_addr=ifm, ofm_addr=ofm)
+    assert isa.PtrInstr.decode(pi.encode()) == pi
+
+
+def test_halt_and_dispatch():
+    assert isinstance(isa.decode(isa.HaltInstr().encode()), isa.HaltInstr)
+    with pytest.raises(ValueError):
+        isa.decode(0b111 << 29)
+
+
+def test_field_overflow_rejected():
+    with pytest.raises(ValueError):
+        isa.MacInstr(k=32).encode()
+    with pytest.raises(ValueError):
+        isa.MacInstr(stride=3).encode()  # not a power of two
+    with pytest.raises(ValueError):
+        isa.WrepInstr(row_start=1024, n_rows=1, wsram_page=0).encode()
+
+
+def test_program_decode_stops_at_halt():
+    words = [
+        isa.PtrInstr(0, 4096).encode(),
+        isa.MacInstr().encode(),
+        isa.HaltInstr().encode(),
+        isa.MacInstr().encode(),  # junk past halt
+    ]
+    prog = isa.decode_program(words)
+    assert len(prog) == 3
+    assert isinstance(prog[-1], isa.HaltInstr)
+    text = isa.disassemble(words)
+    assert "HALT" in text and "PTR" in text and "MAC" in text

@@ -1,0 +1,85 @@
+"""Quantization primitives: packing, STE, threshold folding (+ property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 7),
+    words=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+)
+def test_pack_unpack_roundtrip(rows, words, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (rows, words * 32)).astype(np.uint32)
+    packed = quant.pack_bits(jnp.array(bits))
+    assert packed.shape == (rows, words)
+    out = quant.unpack_bits(packed, n=words * 32)
+    np.testing.assert_array_equal(np.asarray(out), bits)
+
+
+def test_pack_rejects_unaligned():
+    with pytest.raises(ValueError):
+        quant.pack_bits(jnp.zeros((2, 33), jnp.uint32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_popcount_equals_int_matmul(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2, (5, 64)).astype(np.uint32)
+    wp = rng.integers(0, 2, (64, 9)).astype(np.int64)
+    wn = (rng.integers(0, 2, (64, 9)) * (1 - wp)).astype(np.int64)
+    from repro.kernels import ref
+
+    xp = quant.pack_bits(jnp.array(x))
+    got = ref.ref_popcount_gemm_packed(
+        xp,
+        quant.pack_bits(jnp.array(wp, jnp.uint32), axis=0),
+        quant.pack_bits(jnp.array(wn, jnp.uint32), axis=0),
+    )
+    want = x.astype(np.int64) @ (wp - wn)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_binarize_act_values_and_grad():
+    x = jnp.array([-2.0, -0.5, 0.0, 0.5, 2.0])
+    y = quant.binarize_act(x)
+    np.testing.assert_array_equal(np.asarray(y), [0, 0, 1, 1, 1])
+    g = jax.grad(lambda x: jnp.sum(quant.binarize_act(x)))(x)
+    # clipped STE: gradient passes only where |x| <= 1
+    np.testing.assert_array_equal(np.asarray(g), [0, 1, 1, 1, 0])
+
+
+def test_ternarize_weight_values_and_grad():
+    w = jnp.array([-1.0, -0.01, 0.0, 0.01, 1.0])
+    t = quant.ternarize_weight(w)
+    assert set(np.asarray(t).tolist()) <= {-1.0, 0.0, 1.0}
+    assert np.asarray(t)[0] == -1 and np.asarray(t)[-1] == 1
+    g = jax.grad(lambda w: jnp.sum(quant.ternarize_weight(w)))(w)
+    np.testing.assert_array_equal(np.asarray(g), np.ones(5))  # identity STE
+
+
+def test_fold_bn_threshold_matches_bn_sign():
+    rng = np.random.default_rng(0)
+    s = jnp.array(rng.integers(-50, 50, (13, 7)), jnp.float32)
+    gamma = jnp.array(rng.normal(1, 0.5, 7), jnp.float32)
+    beta = jnp.array(rng.normal(0, 1, 7), jnp.float32)
+    mean = jnp.array(rng.normal(0, 5, 7), jnp.float32)
+    var = jnp.array(rng.uniform(0.5, 2, 7), jnp.float32)
+    bn = gamma * (s - mean) / jnp.sqrt(var + 1e-5) + beta
+    want = (bn >= 0).astype(np.uint32)
+    thr, flip = quant.fold_bn_to_threshold(gamma, beta, mean, var)
+    got = quant.apply_threshold(s, thr, flip)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_pad_to_multiple():
+    x = jnp.ones((3, 5))
+    assert quant.pad_to_multiple(x, 4, 1).shape == (3, 8)
+    assert quant.pad_to_multiple(x, 5, 1).shape == (3, 5)

@@ -1,0 +1,76 @@
+"""Recurrent blocks: chunked-parallel vs sequential equivalence; step vs
+prefill state consistency (the long-context serving contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_mlstm_chunked_matches_sequential():
+    B, S, D, H = 2, 64, 32, 4
+    p = ssm.init_mlstm(KEY, D, H)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, D)) * 0.5
+    out_c, st_c = ssm.mlstm_prefill(p, x, n_heads=H, chunk=16)
+    out_s, st_s = ssm.mlstm_prefill_sequential(p, x, n_heads=H)
+    np.testing.assert_allclose(np.asarray(out_c, np.float32),
+                               np.asarray(out_s, np.float32),
+                               rtol=1e-2, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_c[0]), np.asarray(st_s[0]),
+                               rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("chunk", [8, 32, 64])
+def test_mlstm_chunk_size_invariance(chunk):
+    B, S, D, H = 1, 64, 16, 2
+    p = ssm.init_mlstm(KEY, D, H)
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, D))
+    ref, _ = ssm.mlstm_prefill(p, x, n_heads=H, chunk=S)
+    got, _ = ssm.mlstm_prefill(p, x, n_heads=H, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=1e-2, atol=1e-3)
+
+
+def test_mlstm_prefill_then_step_continues():
+    B, S, D, H = 1, 32, 16, 2
+    p = ssm.init_mlstm(KEY, D, H)
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S + 1, D))
+    full, _ = ssm.mlstm_prefill(p, x, n_heads=H, chunk=8)
+    _, st = ssm.mlstm_prefill(p, x[:, :S], n_heads=H, chunk=8)
+    step_out, _ = ssm.mlstm_step(p, x[:, S:], st, n_heads=H)
+    np.testing.assert_allclose(np.asarray(step_out[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               rtol=1e-2, atol=1e-3)
+
+
+def test_mamba_prefill_then_step_continues():
+    B, S, D = 1, 40, 16
+    p = ssm.init_mamba(KEY, D, d_state=8)
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, S + 1, D))
+    full, _ = ssm.mamba_prefill(p, x, d_state=8)
+    _, st = ssm.mamba_prefill(p, x[:, :S], d_state=8)
+    step_out, _ = ssm.mamba_step(p, x[:, S:], st, d_state=8)
+    np.testing.assert_allclose(np.asarray(step_out[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               rtol=1e-2, atol=1e-3)
+
+
+def test_slstm_prefill_then_step_continues():
+    B, S, D = 2, 24, 16
+    p = ssm.init_slstm(KEY, D, 1)
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, S + 1, D))
+    full, _ = ssm.slstm_prefill(p, x)
+    _, st = ssm.slstm_prefill(p, x[:, :S])
+    step_out, _ = ssm.slstm_step(p, x[:, S:], st)
+    np.testing.assert_allclose(np.asarray(step_out[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_mamba_state_shapes():
+    st = ssm.mamba_init_state(3, 8, d_state=4, d_conv=4, expand=2)
+    assert st[0].shape == (3, 16, 4) and st[1].shape == (3, 3, 16)

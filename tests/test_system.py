@@ -1,0 +1,90 @@
+"""End-to-end system tests: the paper's headline claims as assertions.
+
+These run the FULL Fig.-7 reconstruction through compile + cycle-accurate
+execution and gate on Table I within tolerance (DESIGN.md §9 documents the
+reconstruction error budget).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import compiler, energy
+from repro.core.executor import Executor
+from repro.models import kws
+
+
+@pytest.fixture(scope="module")
+def full_kws():
+    spec = kws.build_kws_spec()
+    params = kws.init_kws_params(jax.random.PRNGKey(0), spec)
+    weights, thresholds = kws.export_kws(params, spec)
+    prog = compiler.compile_model(
+        spec, weights, thresholds,
+        rotate_hints=kws.ROTATE_HINTS, rowsplit_hints=kws.ROWSPLIT_HINTS,
+    )
+    x = np.random.default_rng(0).integers(0, 256, (16000, 1)).astype(np.uint8)
+    rep = Executor(prog).run(x)
+    return spec, params, prog, x, rep
+
+
+def test_model_size_matches_paper(full_kws):
+    spec = full_kws[0]
+    assert spec.total_weights == 646_336
+    assert abs(spec.model_size_kb - 652) / 652 < 0.035   # -3.2%
+    assert abs(spec.total_macs - 350e6) / 350e6 < 0.01   # +0.2%
+
+
+def test_macro_constraints(full_kws):
+    _, _, prog, _, _ = full_kws
+    # every layer fits the wordline/bitline-pair budget
+    for b in prog.bindings:
+        rows = getattr(b.spec, "rows", 0)
+        if rows:
+            assert max(c.rows for c in b.chunks) <= 1024
+        assert all(c.pairs <= 128 for c in b.chunks)
+    # weight SRAM exactly at capacity (the paper's overflow scenario)
+    assert prog.wsram.used_bits == 512 * 1024
+    assert prog.cim.used_cells <= 1024 * 1024
+
+
+def test_latency_and_throughput_match_table1(full_kws):
+    _, _, _, _, rep = full_kws
+    led = rep.ledger
+    lat_us = led.latency_s * 1e6
+    assert abs(lat_us - 2320) / 2320 < 0.05, lat_us       # +4.2%
+    assert abs(led.gops - 150.8) / 150.8 < 0.05, led.gops  # -3.8%
+
+
+def test_energy_efficiency_calibrated(full_kws):
+    _, _, prog, x, rep = full_kws
+    target = rep.ledger.macs / 885.86e12
+    p = energy.calibrate_e_mac(rep.ledger, target)
+    led = Executor(prog, params=p).run(x).ledger
+    assert abs(led.tops_per_w - 885.86) / 885.86 < 0.01
+    assert abs(led.energy_j * 1e6 - 0.399) / 0.399 < 0.02  # -0.8%
+    # default params ship pre-calibrated
+    assert abs(rep.ledger.tops_per_w - 885.86) / 885.86 < 0.02
+
+
+def test_full_model_bitexact_vs_qat(full_kws):
+    spec, params, _, x, rep = full_kws
+    import jax.numpy as jnp
+    qat = np.asarray(kws.kws_forward(params, jnp.array(x[:, 0]), spec))
+    np.testing.assert_array_equal(rep.output.ravel().astype(np.float64), qat)
+
+
+def test_pwb_reduction_within_paper_band(full_kws):
+    _, _, prog, x, rep = full_kws
+    indep = Executor(prog, fuse_pool=False).run(x)
+    red = 100.0 * (1 - rep.ledger.cycles / indep.ledger.cycles)
+    # paper: 35.9%; our reconstruction: ~40% (64-bit pool port, DESIGN.md §9)
+    assert 25.0 < red < 56.0, red
+    np.testing.assert_array_equal(rep.output, indep.output)
+
+
+def test_instruction_stream_is_decodable(full_kws):
+    _, _, prog, _, _ = full_kws
+    from repro.core import isa
+    decoded = isa.decode_program(prog.words)
+    assert isinstance(decoded[-1], isa.HaltInstr)
+    assert len(decoded) == len(prog.words)

@@ -1,0 +1,38 @@
+"""TWM vs BWM: functional equivalence + the Fig. 3(c) margin claim."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import twm
+
+
+def test_twm_mac_equals_int_matmul():
+    rng = np.random.default_rng(0)
+    x = jnp.array(rng.integers(0, 2, (11, 96)), jnp.uint32)
+    w = jnp.array(rng.integers(-1, 2, (96, 17)), jnp.int32)
+    got = twm.twm_mac(x, w)
+    want = np.asarray(x, np.int64) @ np.asarray(w, np.int64)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_sensing_margins():
+    assert twm.sensing_margin_twm() == 2.0 * twm.sensing_margin_bwm()
+
+
+def test_ideal_sa_is_exact():
+    sa = twm.SAModel(noise_sigma=0.0)
+    d = jnp.array([-1.0, 0.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(sa.decide(d)), [0, 1, 1])
+
+
+def test_twm_flips_less_than_bwm_under_noise():
+    """The paper's margin argument: at equal SA noise, TWM decisions flip
+    less often than BWM decisions (Fig. 3c)."""
+    rng = np.random.default_rng(1)
+    x = jnp.array(rng.integers(0, 2, (64, 128)), jnp.uint32)
+    w = jnp.array(rng.integers(-1, 2, (128, 32)), jnp.int32)
+    key = jax.random.PRNGKey(0)
+    for sigma in (1.0, 2.0):
+        ft = float(twm.flip_rate_under_noise(key, x, w, sigma, "twm", trials=16))
+        fb = float(twm.flip_rate_under_noise(key, x, w, sigma, "bwm", trials=16))
+        assert ft < fb, (sigma, ft, fb)
