@@ -19,6 +19,7 @@ SUITES = {
     "kws": "benchmarks.kws_accuracy",       # §III-A network simulation
     "kernel": "benchmarks.kernel_bench",    # beyond-paper kernel duel
     "roofline": "benchmarks.roofline_table",  # dry-run aggregation
+    "stream": "benchmarks.stream_bench",    # multi-stream always-on runtime
 }
 
 

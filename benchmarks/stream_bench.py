@@ -1,0 +1,127 @@
+"""Streaming runtime throughput: incremental multi-stream steps vs the
+per-frame full re-run baseline.
+
+The offline path answers "what does this stream say now?" by re-running the
+whole utterance through the executor — the cost a deployment would pay per
+emitted frame without incremental state.  The streaming scheduler instead
+advances all B streams one hop with a single batched step, computing only
+each conv layer's receptive-field tail.  Reported:
+
+  * frames/sec aggregated over B concurrent streams (with per-hop logits)
+  * p50/p95 step latency and the real-time factor (audio-sec per wall-sec)
+  * the offline re-run baseline frames/sec and the speedup
+
+Writes BENCH_stream.json next to the repo root so the perf trajectory of
+streams/sec is tracked across PRs.  Acceptance floor: speedup >= 2x at
+batch >= 8 streams (it lands far above that).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row
+from repro.core import compiler
+from repro.core.executor import Executor
+from repro.data import gscd
+from repro.models import kws
+from repro.stream import StreamScheduler
+
+N_STREAMS = 8
+HOP_FRAMES = 2
+SECONDS_PER_STREAM = 0.8  # synthetic audio per stream (= one smoke clip)
+
+
+def run() -> list[str]:
+    spec = kws.build_kws_smoke_spec()
+    params = kws.init_kws_params(jax.random.PRNGKey(0), spec)
+    weights, thresholds = kws.export_kws(params, spec)
+    prog = compiler.compile_model(spec, weights, thresholds)
+
+    rng = np.random.default_rng(0)
+    clips = [
+        gscd.sample(rng, int(c), n=spec.in_len)
+        for c in rng.integers(0, gscd.N_CLASSES, N_STREAMS)
+    ]
+
+    # ---- offline baseline: full re-run per emitted frame --------------------
+    ex = Executor(prog)
+    ex.run(clips[0][:, None])  # warm caches
+    t0 = time.perf_counter()
+    reps = 3
+    for i in range(reps):
+        ex.run(clips[i % N_STREAMS][:, None])
+    t_rerun = (time.perf_counter() - t0) / reps
+    # every new frame on every stream would pay one full re-run
+    baseline_fps = N_STREAMS / t_rerun
+
+    # ---- streaming: batched incremental steps -------------------------------
+    sched = StreamScheduler(
+        spec, weights, thresholds, capacity=N_STREAMS, hop_frames=HOP_FRAMES,
+        emit_logits=True,
+    )
+    sids = [sched.add_stream() for _ in range(N_STREAMS)]
+    # trace/warm the jitted step outside the timed region
+    for sid, clip in zip(sids, clips):
+        sched.push_audio(sid, clip[: sched.plan.prime_samples
+                                  + sched.plan.hop_samples])
+    sched.run_until_starved()
+
+    chunk = sched.plan.hop_samples * 4
+    frames_warm = sched.metrics.frames_total()
+    steps_warm = len(sched.metrics.step_wall_s)  # includes the jit trace
+    t0 = time.perf_counter()
+    pos = sched.plan.prime_samples + sched.plan.hop_samples
+    while pos < spec.in_len:
+        for sid, clip in zip(sids, clips):
+            sched.push_audio(sid, clip[pos : pos + chunk])
+        sched.run_until_starved()
+        pos += chunk
+    stream_wall = time.perf_counter() - t0
+
+    e = sched.metrics.energy_summary()
+    steady_wall = np.asarray(sched.metrics.step_wall_s[steps_warm:])
+    step_p50, step_p95 = np.percentile(steady_wall, [50, 95]) * 1e3
+    frames_timed = sched.metrics.frames_total() - frames_warm
+    stream_fps = frames_timed / stream_wall
+    speedup = stream_fps / baseline_fps
+    frame_ms = stream_wall / frames_timed * 1e3
+    audio_per_wall = (
+        frames_timed * sched.plan.samples_per_frame / gscd.SR / stream_wall
+    )
+
+    for sid in sids:
+        sched.close_stream(sid)
+
+    payload = {
+        "n_streams": N_STREAMS,
+        "hop_frames": HOP_FRAMES,
+        "frames_per_sec": stream_fps,
+        "frame_latency_ms": frame_ms,
+        "step_ms_p50": float(step_p50),
+        "step_ms_p95": float(step_p95),
+        "audio_sec_per_wall_sec": audio_per_wall,
+        "baseline_rerun_s": t_rerun,
+        "baseline_frames_per_sec": baseline_fps,
+        "speedup_vs_rerun": speedup,
+        "tops_per_w_equiv": e["tops_per_w_equiv"],
+    }
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_stream.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+
+    return [
+        row("stream.frames_per_sec", f"{stream_fps:.1f}",
+            f"B={N_STREAMS} streams"),
+        row("stream.frame_latency_ms", f"{frame_ms:.3f}", "per emitted frame"),
+        row("stream.realtime_factor", f"{audio_per_wall:.1f}",
+            "audio-sec per wall-sec"),
+        row("stream.baseline_rerun_fps", f"{baseline_fps:.1f}",
+            "full re-run per frame"),
+        row("stream.speedup_vs_rerun", f"{speedup:.1f}",
+            f"{'PASS' if speedup >= 2 else 'FAIL'} (floor 2x)"),
+        row("stream.artifact", "BENCH_stream.json", "perf trajectory"),
+    ]

@@ -7,6 +7,7 @@ from repro.kernels.ops import (
     twm_linear,
     twm_linear_mxu,
     bnn_conv1d,
+    bnn_conv1d_batched,
     bitserial_conv1d,
     pick_path,
 )
@@ -15,6 +16,7 @@ __all__ = [
     "twm_linear",
     "twm_linear_mxu",
     "bnn_conv1d",
+    "bnn_conv1d_batched",
     "bitserial_conv1d",
     "pick_path",
 ]

@@ -31,17 +31,11 @@ DEFAULT_BN = 128
 
 
 def _conv_tile(xs, wp, wn, k: int, cw: int):
-    """Accumulate K shifted popcount GEMM taps -> (bl, bn) int32."""
-    bl = xs.shape[1]
-    bn = wp.shape[2]
-    acc = jnp.zeros((bl, bn), jnp.int32)
-    for tap in range(k):
-        for c in range(cw):
-            xa = xs[tap, :, c][:, None]  # (bl, 1)
-            p = jax.lax.population_count(jnp.bitwise_and(xa, wp[tap, c][None, :]))
-            n = jax.lax.population_count(jnp.bitwise_and(xa, wn[tap, c][None, :]))
-            acc = acc + p.astype(jnp.int32) - n.astype(jnp.int32)
-    return acc
+    """Accumulate K shifted popcount GEMM taps -> (bl, bn) int32.
+
+    Single-stream view of the batched tile (one accumulation loop to
+    maintain, two kernel entry points)."""
+    return _batched_conv_tile(xs[None], wp, wn, k, cw)[0]
 
 
 def _kernel(
@@ -117,6 +111,116 @@ def bnn_conv1d_packed(
             in_specs=[xs_spec, w_spec, w_spec],
             out_specs=o_spec,
             out_shape=jax.ShapeDtypeStruct((l_out, n), jnp.int32),
+            interpret=interpret,
+        )(xs, wp, wn)
+    raise ValueError(f"mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-stream step (repro.stream): one CIM macro, many users.
+#
+# The streaming scheduler packs B concurrent audio streams onto a shared
+# batch axis; the ternary weight planes are broadcast across it — exactly the
+# "weights stay resident in the macro, activations stream past" economics of
+# the silicon, so the batch dimension rides free through the Pallas grid
+# (one extra grid axis, zero extra weight traffic).
+# ---------------------------------------------------------------------------
+
+DEFAULT_BB = 8
+
+
+def _batched_conv_tile(xs, wp, wn, k: int, cw: int):
+    """Accumulate K shifted popcount GEMM taps -> (bb, bl, bn) int32."""
+    bb, _, bl, _ = xs.shape
+    bn = wp.shape[2]
+    acc = jnp.zeros((bb, bl, bn), jnp.int32)
+    for tap in range(k):
+        for c in range(cw):
+            xa = xs[:, tap, :, c][:, :, None]  # (bb, bl, 1)
+            p = jax.lax.population_count(
+                jnp.bitwise_and(xa, wp[tap, c][None, None, :])
+            )
+            n = jax.lax.population_count(
+                jnp.bitwise_and(xa, wn[tap, c][None, None, :])
+            )
+            acc = acc + p.astype(jnp.int32) - n.astype(jnp.int32)
+    return acc
+
+
+def _batched_kernel(
+    xs_ref, wp_ref, wn_ref, thr_ref, flip_ref, o_ref, *, k: int, cw: int, pool: int
+):
+    diff = _batched_conv_tile(xs_ref[...], wp_ref[...], wn_ref[...], k, cw)
+    ge = diff.astype(jnp.float32) >= thr_ref[0, :][None, None, :]
+    flip = flip_ref[0, :][None, None, :] != 0
+    y = jnp.where(flip, ~ge, ge).astype(jnp.uint32)
+    if pool > 1:
+        bb, bl, bn = y.shape
+        y = jnp.max(y.reshape(bb, bl // pool, pool, bn), axis=2)
+    o_ref[...] = y
+
+
+def _batched_kernel_raw(xs_ref, wp_ref, wn_ref, o_ref, *, k: int, cw: int):
+    o_ref[...] = _batched_conv_tile(xs_ref[...], wp_ref[...], wn_ref[...], k, cw)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pool", "bb", "bl", "bn", "mode", "interpret")
+)
+def bnn_conv1d_step_packed(
+    xs: jax.Array,
+    wp: jax.Array,
+    wn: jax.Array,
+    thr: jax.Array | None = None,
+    flip: jax.Array | None = None,
+    *,
+    pool: int = 1,
+    bb: int = DEFAULT_BB,
+    bl: int = DEFAULT_BL,
+    bn: int = DEFAULT_BN,
+    mode: str = "sa",
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched fused conv1d step on pre-shifted packed views.
+
+    xs : (B, K, L_out, Cw) uint32 — per-stream tap-shifted packed views
+    wp/wn : (K, Cw, Cout) uint32  — shared across the batch axis
+    Output: (B, L_out / pool, Cout) uint32 bits (or (B, L_out, Cout) int32).
+    """
+    b, k, l_out, cw = xs.shape
+    k2, cw2, n = wp.shape
+    assert k == k2 and cw == cw2 and wn.shape == wp.shape
+    bb = min(bb, b)
+    bl = min(bl, l_out)
+    bn = min(bn, n)
+    assert b % bb == 0 and l_out % bl == 0 and n % bn == 0, (b, bb, l_out, bl, n, bn)
+    assert bl % pool == 0, (bl, pool)
+    grid = (b // bb, l_out // bl, n // bn)
+
+    xs_spec = pl.BlockSpec((bb, k, bl, cw), lambda s, i, j: (s, 0, i, 0))
+    w_spec = pl.BlockSpec((k, cw, bn), lambda s, i, j: (0, 0, j))
+    v_spec = pl.BlockSpec((1, bn), lambda s, i, j: (0, j))
+
+    if mode == "sa":
+        assert thr is not None and flip is not None
+        o_spec = pl.BlockSpec((bb, bl // pool, bn), lambda s, i, j: (s, i, j))
+        return pl.pallas_call(
+            functools.partial(_batched_kernel, k=k, cw=cw, pool=pool),
+            grid=grid,
+            in_specs=[xs_spec, w_spec, w_spec, v_spec, v_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((b, l_out // pool, n), jnp.uint32),
+            interpret=interpret,
+        )(xs, wp, wn, thr.reshape(1, n), flip.astype(jnp.int32).reshape(1, n))
+    elif mode == "raw":
+        assert pool == 1, "raw mode has no SA output to pool"
+        o_spec = pl.BlockSpec((bb, bl, bn), lambda s, i, j: (s, i, j))
+        return pl.pallas_call(
+            functools.partial(_batched_kernel_raw, k=k, cw=cw),
+            grid=grid,
+            in_specs=[xs_spec, w_spec, w_spec],
+            out_specs=o_spec,
+            out_shape=jax.ShapeDtypeStruct((b, l_out, n), jnp.int32),
             interpret=interpret,
         )(xs, wp, wn)
     raise ValueError(f"mode {mode!r}")

@@ -209,6 +209,69 @@ def bitserial_conv1d(
 
 
 # ---------------------------------------------------------------------------
+# Batched multi-stream conv entry point (repro.stream scheduler)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "pad", "pool", "mode", "interpret")
+)
+def bnn_conv1d_batched(
+    x_bits: jax.Array,
+    w_t: jax.Array,
+    thr: jax.Array | None = None,
+    flip: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    pad: int = 0,
+    pool: int = 1,
+    mode: str = "sa",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched binary conv1d with weights shared across the batch axis.
+
+    x_bits (B, L, Cin) {0,1}; w_t (K, Cin, Cout) broadcast over B.  Output
+    (B, L_out//pool, Cout) uint32 bits ((B, L_out, Cout) int32 when raw).
+    The batch axis maps straight onto the kernel grid: one weight fetch
+    serves every stream, mirroring shared-weight CIM batching.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    b = x_bits.shape[0]
+    k, cin, cout = w_t.shape
+    l = x_bits.shape[1]
+    l_out = (l + 2 * pad - k) // stride + 1
+
+    xq = pack_activations(x_bits)  # (B, L, Cw)
+    if pad:
+        xq = jnp.pad(xq, ((0, 0), (pad, pad), (0, 0)))
+    taps = [
+        xq[:, t : t + (l_out - 1) * stride + 1 : stride] for t in range(k)
+    ]
+    xs = jnp.stack(taps, axis=1)  # (B, K, L_out, Cw)
+    wp, wn = pack_weight_planes(w_t)  # (K, Cw, Cout)
+
+    bb = _pick_block(b, _conv.DEFAULT_BB)
+    bn = _pick_block(cout, _conv.DEFAULT_BN)
+    bl = _pick_block(l_out, _conv.DEFAULT_BL, step=pool)
+    xs = _pad_axis(xs, bb, 0)
+    xs = _pad_axis(xs, bl, 2)
+    wp = _pad_axis(wp, bn, 2)
+    wn = _pad_axis(wn, bn, 2)
+
+    if mode == "sa":
+        thr_p = _pad_axis(thr.astype(jnp.float32), bn, 0)
+        flip_p = _pad_axis(flip.astype(jnp.int32), bn, 0)
+        out = _conv.bnn_conv1d_step_packed(
+            xs, wp, wn, thr_p, flip_p,
+            pool=pool, bb=bb, bl=bl, bn=bn, mode="sa", interpret=interpret,
+        )
+        return out[:b, : l_out // pool, :cout]
+    out = _conv.bnn_conv1d_step_packed(
+        xs, wp, wn, pool=1, bb=bb, bl=bl, bn=bn, mode="raw", interpret=interpret
+    )
+    return out[:b, :l_out, :cout]
+
+
+# ---------------------------------------------------------------------------
 # Dispatch heuristic: popcount (bandwidth) vs MXU (compute)
 # ---------------------------------------------------------------------------
 

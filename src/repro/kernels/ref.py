@@ -95,6 +95,16 @@ def ref_bnn_conv1d_sa(
     return y
 
 
+def ref_bnn_conv1d_batched(
+    x_bits: jax.Array,
+    w_t: jax.Array,
+    stride: int = 1,
+    pad: int = 0,
+) -> jax.Array:
+    """Batched raw conv: (B, L, Cin) {0,1} x (K, Cin, Cout) -> (B, L_out, Cout)."""
+    return jax.vmap(lambda x: ref_bnn_conv1d(x, w_t, stride, pad))(x_bits)
+
+
 def ref_maxpool1d(y_bits: jax.Array, pool: int) -> jax.Array:
     """Binary max-pool = OR over non-overlapping windows (drops remainder)."""
     l = (y_bits.shape[0] // pool) * pool

@@ -12,13 +12,23 @@ axis (DCN/ICI-superpod) = 512 chips.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after jax 0.4.x; Auto is the old default behavior
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on jax version
+    AxisType = None
+
+
+def _axis_kw(n_axes: int) -> dict:
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
 
 
 def make_host_mesh(model_parallel: int = 1):
@@ -27,7 +37,7 @@ def make_host_mesh(model_parallel: int = 1):
     assert n % model_parallel == 0
     return jax.make_mesh(
         (n // model_parallel, model_parallel), ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
+        **_axis_kw(2),
     )
 
 

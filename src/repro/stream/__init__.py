@@ -1,0 +1,37 @@
+"""repro.stream — always-on multi-stream keyword-spotting runtime.
+
+The offline pipeline (core/compiler + core/executor) runs one compiled
+program over one whole utterance.  This package turns the same exported
+model (spec + ternary weights + SA thresholds) into an *incremental*
+runtime: audio arrives chunk by chunk on thousands of concurrent streams,
+each new hop only computes the receptive-field tail of every conv layer,
+and all active streams share one batched, jitted step (one CIM macro, many
+users).  The streaming math is bit-exact with the offline executor — see
+tests/test_stream.py for the golden-equivalence proof.
+
+Modules:
+  frontend   incremental PCM -> 8-bit offset-binary model frames
+  state      stream plan, ring buffers, per-stream + batched conv state
+  scheduler  continuous-batching multi-stream scheduler (jitted step)
+  detector   posterior smoothing + hysteresis/refractory event logic
+  metrics    per-stream latency/throughput counters + energy estimates
+"""
+from repro.stream.detector import Detection, DetectorConfig, PosteriorDetector
+from repro.stream.frontend import AudioFrontend, quantize_pcm
+from repro.stream.metrics import StreamMetrics
+from repro.stream.scheduler import StreamScheduler
+from repro.stream.state import FrameRing, StreamPlan, StreamState, plan_stream
+
+__all__ = [
+    "AudioFrontend",
+    "Detection",
+    "DetectorConfig",
+    "FrameRing",
+    "PosteriorDetector",
+    "StreamMetrics",
+    "StreamPlan",
+    "StreamScheduler",
+    "StreamState",
+    "plan_stream",
+    "quantize_pcm",
+]

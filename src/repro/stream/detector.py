@@ -1,0 +1,89 @@
+"""Keyword-detection event logic on per-frame streaming logits.
+
+The model emits raw popcount-count logits once per hop.  A deployed KWS
+front door never acts on a single frame: posteriors are smoothed over a
+short window, a keyword fires only when the smoothed posterior crosses an
+*on* threshold, and the detector then holds (refractory) until both the
+posterior has fallen below a lower *off* threshold and a minimum number of
+frames has elapsed — classic hysteresis, so one utterance produces exactly
+one event instead of a burst.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectorConfig:
+    smooth_frames: int = 4        # moving-average window over posteriors
+    on_threshold: float = 0.6     # smoothed posterior to fire
+    off_threshold: float = 0.4    # smoothed posterior to re-arm
+    refractory_frames: int = 10   # min frames between events
+    keyword_classes: tuple[int, ...] = tuple(range(10))  # 10/11 = unk/sil
+
+
+@dataclasses.dataclass(frozen=True)
+class Detection:
+    stream_id: int
+    cls: int
+    frame: int      # final-conv frame index at which the event fired
+    score: float    # smoothed posterior at fire time
+
+
+def _softmax(logits: np.ndarray) -> np.ndarray:
+    z = logits.astype(np.float64) - logits.max()
+    e = np.exp(z)
+    return e / e.sum()
+
+
+class PosteriorDetector:
+    """Per-stream smoothing + hysteresis/refractory state machine."""
+
+    def __init__(self, stream_id: int, cfg: DetectorConfig | None = None) -> None:
+        self.stream_id = stream_id
+        self.cfg = cfg or DetectorConfig()
+        self._window: collections.deque[np.ndarray] = collections.deque(
+            maxlen=self.cfg.smooth_frames
+        )
+        self._holding = False
+        self._hold_cls = -1
+        self._fired_at = -(10**9)
+        self.events: list[Detection] = []
+
+    def smoothed(self) -> np.ndarray:
+        assert self._window, "no frames seen yet"
+        return np.mean(np.stack(self._window), axis=0)
+
+    def update(self, frame: int, logits: np.ndarray) -> Detection | None:
+        """Feed one frame of logits; returns a Detection iff one fires."""
+        cfg = self.cfg
+        self._window.append(_softmax(np.asarray(logits)))
+        if len(self._window) < cfg.smooth_frames:
+            # a partial window would let one confident-wrong frame (common
+            # right after priming, when the field is mostly padding) bypass
+            # the glitch suppression the smoother exists for
+            return None
+        post = self.smoothed()
+        kw = np.asarray(cfg.keyword_classes)
+        best = int(kw[np.argmax(post[kw])])
+        score = float(post[best])
+
+        if self._holding:
+            # re-arm only after the held keyword decays AND refractory passes
+            held = float(post[self._hold_cls])
+            if (held <= cfg.off_threshold
+                    and frame - self._fired_at >= cfg.refractory_frames):
+                self._holding = False
+            return None
+
+        if score >= cfg.on_threshold:
+            self._holding = True
+            self._hold_cls = best
+            self._fired_at = frame
+            det = Detection(self.stream_id, best, frame, score)
+            self.events.append(det)
+            return det
+        return None

@@ -1,0 +1,67 @@
+"""Incremental audio frontend: raw PCM chunks -> model-input frames.
+
+The PSCNN model eats 8-bit offset-binary samples directly (the first conv
+layer is the feature extractor), so the streaming frontend's job is
+(1) quantization of float PCM with a fixed gain — streaming cannot use the
+offline corpus's per-clip peak normalization because the clip never ends —
+and (2) reassembly of arbitrary-sized network chunks into whole hops via a
+ring buffer, absorbing jitter between producer (mic/RTP packets) and
+consumer (the batched scheduler step).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.stream.state import FrameRing
+
+IN_OFFSET = 128  # offset-binary zero code (models/kws.py)
+
+
+def quantize_pcm(x: np.ndarray, gain: float = 1.0) -> np.ndarray:
+    """float PCM in [-1, 1] -> u8 offset-binary codes (fixed gain)."""
+    q = np.round(np.clip(x * gain, -1.0, 1.0) * 127.0) + IN_OFFSET
+    return np.clip(q, 0, 255).astype(np.uint8)
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    gain: float = 1.0
+    capacity_samples: int = 1 << 16  # jitter buffer depth
+
+
+class AudioFrontend:
+    """Per-stream inbox: push float or u8 audio, pop whole hops.
+
+    ``push`` accepts either u8 offset-binary codes (passed through
+    untouched, preserving bit-exactness with offline runs) or float PCM
+    (quantized with the fixed gain).
+    """
+
+    def __init__(self, cfg: FrontendConfig | None = None) -> None:
+        self.cfg = cfg or FrontendConfig()
+        self._ring = FrameRing(self.cfg.capacity_samples, 1, np.int32)
+        self.samples_in = 0
+
+    def __len__(self) -> int:
+        return len(self._ring)
+
+    def push(self, audio: np.ndarray) -> None:
+        audio = np.asarray(audio)
+        if audio.dtype.kind == "f":
+            audio = quantize_pcm(audio, self.cfg.gain)
+        audio = audio.reshape(-1, 1).astype(np.int32)
+        self._ring.push(audio)
+        self.samples_in += audio.shape[0]
+
+    def pop(self, n: int) -> np.ndarray:
+        """Oldest n samples as (n,) int32 u8-codes."""
+        return self._ring.pop(n)[:, 0]
+
+    def pop_all(self) -> np.ndarray:
+        return self.pop(len(self._ring))
+
+    def peek_all(self) -> np.ndarray:
+        """Buffered samples without consuming them."""
+        return self._ring.peek()[:, 0]

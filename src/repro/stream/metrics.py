@@ -1,0 +1,114 @@
+"""Per-stream and fleet-level counters for the streaming runtime.
+
+Tracks what a serving dashboard needs — frames/sec, streams/sec, step
+latency percentiles, real-time factor — and bridges into the existing
+energy model (core/energy.py): each steady-state hop has a statically known
+MAC/SA budget from the StreamPlan, so the aggregator can report the
+silicon-equivalent energy/inference-second the fleet would draw, in the
+paper's Table-I accounting convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.energy import EnergyParams
+from repro.stream.state import StreamPlan
+
+
+@dataclasses.dataclass
+class StreamCounters:
+    stream_id: int
+    joined_at: float
+    samples_in: int = 0
+    frames_out: int = 0
+    steps: int = 0
+    detections: int = 0
+    closed_at: float | None = None
+
+
+class StreamMetrics:
+    """Aggregates per-stream counters + per-step wall latencies."""
+
+    def __init__(self, plan: StreamPlan, sample_rate: int = 16000) -> None:
+        self.plan = plan
+        self.sample_rate = sample_rate
+        self.streams: dict[int, StreamCounters] = {}
+        self.retired: list[StreamCounters] = []  # closed tenants of reused sids
+        self.step_wall_s: list[float] = []
+        self.step_streams: list[int] = []
+        self._t0 = time.perf_counter()
+
+    # -- recording -----------------------------------------------------------
+
+    def on_join(self, sid: int) -> None:
+        old = self.streams.get(sid)
+        if old is not None:  # sid reuse: keep the first tenant's totals
+            self.retired.append(old)
+        self.streams[sid] = StreamCounters(sid, time.perf_counter() - self._t0)
+
+    def on_audio(self, sid: int, n_samples: int) -> None:
+        self.streams[sid].samples_in += n_samples
+
+    def on_step(self, ready_sids: list[int], frames_each: int, wall_s: float) -> None:
+        self.step_wall_s.append(wall_s)
+        self.step_streams.append(len(ready_sids))
+        for sid in ready_sids:
+            c = self.streams[sid]
+            c.steps += 1
+            c.frames_out += frames_each
+
+    def on_detection(self, sid: int) -> None:
+        self.streams[sid].detections += 1
+
+    def on_close(self, sid: int) -> None:
+        self.streams[sid].closed_at = time.perf_counter() - self._t0
+
+    # -- reporting -----------------------------------------------------------
+
+    def frames_total(self) -> int:
+        return sum(c.frames_out for c in self.streams.values()) + sum(
+            c.frames_out for c in self.retired
+        )
+
+    def summary(self) -> dict[str, float]:
+        wall = np.asarray(self.step_wall_s) if self.step_wall_s else np.zeros(1)
+        frames = self.frames_total()
+        elapsed = sum(self.step_wall_s) or 1e-12
+        audio_s = frames * self.plan.samples_per_frame / self.sample_rate
+        return {
+            "streams": float(len(self.streams) + len(self.retired)),
+            "steps": float(len(self.step_wall_s)),
+            "frames_total": float(frames),
+            "frames_per_sec": frames / elapsed,
+            "audio_sec_per_wall_sec": audio_s / elapsed,  # real-time factor
+            "step_ms_p50": float(np.percentile(wall, 50) * 1e3),
+            "step_ms_p95": float(np.percentile(wall, 95) * 1e3),
+            "mean_batch_occupancy": float(np.mean(self.step_streams))
+            if self.step_streams else 0.0,
+        }
+
+    def energy_summary(self, params: EnergyParams | None = None) -> dict[str, float]:
+        """Silicon-equivalent cost of the work done so far (Table-I terms).
+
+        Conv MACs per hop come from the plan; fc MACs are charged once per
+        emitted logit frame.  Bit-serial first-layer passes multiply the
+        physical activations exactly as the executor charges them.
+        """
+        p = params or EnergyParams()
+        hops = self.frames_total() / max(1, self.plan.frames_per_hop)
+        conv_macs = self.plan.macs_per_hop() * hops
+        fc_macs = self.plan.fc_macs() * self.frames_total()
+        phys = sum(
+            c.n_conv * c.k * c.cin * c.cout * c.in_bits for c in self.plan.convs
+        ) * hops + fc_macs * 8  # fc input is 8-bit counts
+        macs = conv_macs + fc_macs
+        energy_j = p.e_mac * phys
+        return {
+            "macs_total": float(macs),
+            "phys_macs_total": float(phys),
+            "energy_uj": energy_j * 1e6,
+            "tops_per_w_equiv": (macs / energy_j / 1e12) if energy_j else 0.0,
+        }

@@ -1,0 +1,373 @@
+"""Continuous-batching multi-stream scheduler for always-on KWS.
+
+Thousands of concurrent audio streams each produce frames continuously;
+the model weights are shared across all of them (one CIM macro, many
+users).  This scheduler packs the active streams onto a fixed batch axis
+and advances them with ONE jitted step per hop:
+
+  * streams join/leave at any time — a free slot is primed from the
+    stream's first ``prime_samples`` (generic numpy path in state.py) and
+    from then on rides the static-shape batched step;
+  * streams whose inbox holds less than a hop are masked out of the step
+    (their state passes through untouched), so stragglers never force a
+    re-trace — continuous batching, not synchronized batching;
+  * the batched step is built on the batched Pallas conv kernel
+    (kernels/bnn_conv1d.bnn_conv1d_step_packed) or an equivalent pure-jnp
+    einsum path (default on CPU, where Pallas runs interpreted).
+
+Per emitted hop the scheduler computes the stream's *finalized* logits
+(the exact logits the offline executor would produce if the utterance
+ended now — see StreamState.peek_logits), feeds the detector, and updates
+the metrics registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cnn_spec import CNN1DSpec
+from repro.kernels import ops
+from repro.stream.detector import Detection, DetectorConfig, PosteriorDetector
+from repro.stream.frontend import AudioFrontend, FrontendConfig
+from repro.stream.metrics import StreamMetrics
+from repro.stream.state import StreamPlan, StreamState, plan_stream
+from repro.utils.logging import get_logger
+
+log = get_logger("stream")
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """Returned by close_stream: the stream's final, flushed inference."""
+
+    stream_id: int
+    logits: np.ndarray        # executor-exact raw logits
+    frames: int               # final-conv frames accumulated
+    samples: int
+    events: list[Detection]
+
+
+@dataclasses.dataclass
+class _Stream:
+    sid: int
+    slot: int
+    frontend: AudioFrontend
+    detector: PosteriorDetector
+    primed: bool = False
+    frames: int = 0
+
+
+def _build_step(plan: StreamPlan, weights, thresholds, capacity: int,
+                backend: str, interpret: bool | None):
+    """One jitted batched hop: (audio, mask, tails, pendings, gap) ->
+    (tails', pendings', gap', frames).  All shapes static."""
+    B = capacity
+    stages = plan.convs
+    w_jnp = [jnp.asarray(weights[st.layer_idx].reshape(st.k, st.cin, st.cout),
+                         jnp.int32) for st in stages]
+    thr_jnp = [jnp.asarray(thresholds[st.layer_idx][0], jnp.float32)
+               for st in stages]
+    flip_jnp = [jnp.asarray(thresholds[st.layer_idx][1], bool)
+                for st in stages]
+    wsum = [jnp.sum(w, axis=(0, 1)) for w in w_jnp]  # offset fold, layer 0
+
+    def conv_raw(i: int, window: jax.Array) -> jax.Array:
+        """(B, tail+n_in, Cin) -> (B, n_conv, Cout) raw popcount diff."""
+        st = stages[i]
+        n = st.n_conv
+        if st.in_bits > 1:
+            # bit-serial first layer; offset folds out after accumulation
+            if backend == "pallas":
+                acc = None
+                for b in range(st.in_bits):
+                    plane = ((window >> b) & 1).astype(jnp.uint32)
+                    d = ops.bnn_conv1d_batched(
+                        plane, w_jnp[i], stride=st.stride, pad=0,
+                        mode="raw", interpret=interpret,
+                    )
+                    acc = d * (1 << b) if acc is None else acc + d * (1 << b)
+                return acc - st.in_offset * wsum[i][None, None, :]
+            xi = window.astype(jnp.int32) - st.in_offset
+            taps = [
+                xi[:, t : t + (n - 1) * st.stride + 1 : st.stride]
+                for t in range(st.k)
+            ]
+            xs = jnp.stack(taps, axis=1)  # (B, K, n, Cin)
+            return jnp.einsum("bknc,kco->bno", xs, w_jnp[i])
+        if backend == "pallas":
+            return ops.bnn_conv1d_batched(
+                window.astype(jnp.uint32), w_jnp[i], stride=st.stride,
+                pad=0, mode="raw", interpret=interpret,
+            )
+        taps = [
+            window[:, t : t + (n - 1) * st.stride + 1 : st.stride]
+            for t in range(st.k)
+        ]
+        xs = jnp.stack(taps, axis=1).astype(jnp.int32)
+        return jnp.einsum("bknc,kco->bno", xs, w_jnp[i])
+
+    def step(audio, mask, tails, pendings, gap):
+        cur = audio.reshape(B, plan.hop_samples, stages[0].cin)
+        new_tails, new_pendings = [], []
+        for i, st in enumerate(stages):
+            window = jnp.concatenate([tails[i], cur], axis=1)
+            raw = conv_raw(i, window)
+            new_tails.append(window[:, st.n_conv * st.stride :])
+            ge = raw.astype(jnp.float32) >= thr_jnp[i][None, None, :]
+            y = jnp.where(flip_jnp[i][None, None, :], ~ge, ge).astype(jnp.int32)
+            if st.pool > 1:
+                frames = (
+                    jnp.concatenate([pendings[i], y], axis=1)
+                    if st.phase else y
+                )
+                used = st.n_out * st.pool
+                pooled = frames[:, :used].reshape(
+                    B, st.n_out, st.pool, st.cout
+                ).max(axis=2)
+                new_pendings.append(frames[:, used:])
+                cur = pooled
+            else:
+                new_pendings.append(pendings[i])
+                cur = y
+        # saturate at the 8-bit PWB counter ceiling inside the step: the
+        # accumulation is monotone non-negative, so incremental clamping
+        # equals clamping the int64 total (pwb.gap_counts semantics) and
+        # int32 can never wrap on always-on streams
+        gap2 = jnp.minimum(gap + cur.sum(axis=1, dtype=jnp.int32), 255)
+
+        m3 = mask[:, None, None]
+        new_tails = [jnp.where(m3, nt, t) for nt, t in zip(new_tails, tails)]
+        new_pendings = [
+            jnp.where(m3, np_, p) if p.shape[1] else p
+            for np_, p in zip(new_pendings, pendings)
+        ]
+        gap2 = jnp.where(mask[:, None], gap2, gap)
+        return tuple(new_tails), tuple(new_pendings), gap2, cur
+
+    return jax.jit(step)
+
+
+class StreamScheduler:
+    """Continuous batching over a fixed number of stream slots."""
+
+    def __init__(
+        self,
+        spec: CNN1DSpec,
+        weights: dict[int, np.ndarray],
+        thresholds: dict[int, tuple[np.ndarray, np.ndarray]],
+        capacity: int = 8,
+        hop_frames: int = 1,
+        backend: str = "jnp",
+        interpret: bool | None = None,
+        detector_cfg: DetectorConfig | None = None,
+        emit_logits: bool = True,
+        sample_rate: int = 16000,
+    ) -> None:
+        assert backend in ("jnp", "pallas"), backend
+        self.plan = plan_stream(spec, hop_frames=hop_frames)
+        self.weights = {k: np.asarray(v) for k, v in weights.items()}
+        self.thresholds = thresholds
+        self.capacity = capacity
+        self.backend = backend
+        self.detector_cfg = detector_cfg or DetectorConfig()
+        self.emit_logits = emit_logits
+        self.metrics = StreamMetrics(self.plan, sample_rate)
+        self._step_fn = _build_step(
+            self.plan, self.weights, thresholds, capacity, backend, interpret
+        )
+
+        # batched state lives device-resident between hops; host copies are
+        # made only on join/leave/peek (lifecycle events, not the hot loop)
+        B = capacity
+        self._tails = [
+            jnp.zeros((B, st.tail, st.cin), jnp.int32) for st in self.plan.convs
+        ]
+        self._pendings = [
+            jnp.zeros((B, st.phase, st.cout), jnp.int32)
+            for st in self.plan.convs
+        ]
+        self._gap = jnp.zeros((B, self.plan.gap_channels), jnp.int32)
+        self._slots: list[int | None] = [None] * B
+        self._streams: dict[int, _Stream] = {}
+        self._next_sid = 0
+
+    # -- stream lifecycle ----------------------------------------------------
+
+    def add_stream(self, sid: int | None = None,
+                   frontend_cfg: FrontendConfig | None = None) -> int:
+        """Claim a free slot for a new stream; returns the stream id."""
+        try:
+            slot = self._slots.index(None)
+        except ValueError:
+            raise MemoryError(
+                f"all {self.capacity} stream slots busy; close a stream first"
+            ) from None
+        sid = self._next_sid if sid is None else sid
+        assert sid not in self._streams, f"stream {sid} already exists"
+        self._next_sid = max(self._next_sid, sid) + 1
+        self._slots[slot] = sid
+        self._streams[sid] = _Stream(
+            sid=sid,
+            slot=slot,
+            frontend=AudioFrontend(frontend_cfg),
+            detector=PosteriorDetector(sid, self.detector_cfg),
+        )
+        self.metrics.on_join(sid)
+        return sid
+
+    def push_audio(self, sid: int, audio: np.ndarray) -> None:
+        s = self._streams[sid]
+        s.frontend.push(audio)
+        self.metrics.on_audio(sid, np.asarray(audio).shape[0])
+
+    @property
+    def active(self) -> list[int]:
+        return sorted(self._streams)
+
+    # -- the batched hop -----------------------------------------------------
+
+    def _prime_ready(self) -> None:
+        for s in self._streams.values():
+            if not s.primed and len(s.frontend) >= self.plan.prime_samples:
+                st = StreamState(self.plan, self.weights, self.thresholds)
+                st.advance(s.frontend.pop(self.plan.prime_samples))
+                steady = st.export_steady()
+                self._write_slot(s.slot, steady)
+                s.frames = st.frames
+                s.primed = True
+
+    def _write_slot(self, slot: int, steady: dict) -> None:
+        for i in range(len(self.plan.convs)):
+            self._tails[i] = self._tails[i].at[slot].set(steady["tails"][i])
+            if self._pendings[i].shape[1]:
+                self._pendings[i] = self._pendings[i].at[slot].set(
+                    steady["pendings"][i]
+                )
+        self._gap = self._gap.at[slot].set(steady["gap"].astype(np.int32))
+
+    def _clear_slot(self, slot: int) -> None:
+        for i in range(len(self.plan.convs)):
+            self._tails[i] = self._tails[i].at[slot].set(0)
+            if self._pendings[i].shape[1]:
+                self._pendings[i] = self._pendings[i].at[slot].set(0)
+        self._gap = self._gap.at[slot].set(0)
+
+    def _host_state(self):
+        """One bulk device->host view of the batched state (zero-copy on
+        CPU); per-slot rows are then plain numpy indexing."""
+        return (
+            [np.asarray(t) for t in self._tails],
+            [np.asarray(p) for p in self._pendings],
+            np.asarray(self._gap),
+        )
+
+    def _extract_slot(self, s: _Stream, host=None) -> StreamState:
+        tails, pendings, gap = host if host is not None else self._host_state()
+        st = StreamState(self.plan, self.weights, self.thresholds)
+        st.import_steady(
+            [t[s.slot] for t in tails],
+            [p[s.slot] for p in pendings],
+            gap[s.slot],
+            s.frames,
+        )
+        st.samples_seen = s.frontend.samples_in - len(s.frontend)
+        return st
+
+    def step(self) -> list[tuple[int, int, np.ndarray | None, Detection | None]]:
+        """Advance every stream that has a full hop buffered.
+
+        Returns one (sid, frame_idx, logits, detection) tuple per advanced
+        stream; logits is None when ``emit_logits`` is off.
+        """
+        self._prime_ready()  # numpy warm-up path, excluded from step timing
+        hop = self.plan.hop_samples
+        ready = [
+            s for s in self._streams.values()
+            if s.primed and len(s.frontend) >= hop
+        ]
+        if not ready:
+            return []
+        t0 = time.perf_counter()
+        B = self.capacity
+        audio = np.zeros((B, hop), np.int32)
+        mask = np.zeros((B,), bool)
+        for s in ready:
+            audio[s.slot] = s.frontend.pop(hop)
+            mask[s.slot] = True
+
+        tails, pendings, gap, _frames = self._step_fn(
+            jnp.asarray(audio), jnp.asarray(mask),
+            tuple(self._tails), tuple(self._pendings), self._gap,
+        )
+        self._tails = list(tails)
+        self._pendings = list(pendings)
+        self._gap = gap
+
+        out = []
+        host = self._host_state() if self.emit_logits else None
+        for s in ready:
+            s.frames += self.plan.frames_per_hop
+            logits = det = None
+            if self.emit_logits:
+                logits = self._peek_stream(s, host)
+                det = s.detector.update(s.frames, logits)
+                if det is not None:
+                    self.metrics.on_detection(s.sid)
+            out.append((s.sid, s.frames, logits, det))
+        self.metrics.on_step(
+            [s.sid for s in ready], self.plan.frames_per_hop,
+            time.perf_counter() - t0,
+        )
+        return out
+
+    def run_until_starved(self) -> list[tuple[int, int, np.ndarray | None,
+                                              Detection | None]]:
+        """Step until no stream has a full hop buffered."""
+        out = []
+        while True:
+            r = self.step()
+            if not r:
+                return out
+            out.extend(r)
+
+    # -- inspection / teardown ----------------------------------------------
+
+    def peek(self, sid: int) -> np.ndarray:
+        """Finalized logits if the stream ended now (inbox included) —
+        bit-exact with the offline executor on the audio pushed so far."""
+        return self._peek_stream(self._streams[sid], None)
+
+    def _peek_stream(self, s: _Stream, host) -> np.ndarray:
+        if s.primed:
+            st = self._extract_slot(s, host)
+        else:
+            st = StreamState(self.plan, self.weights, self.thresholds)
+        leftover = s.frontend.peek_all() if len(s.frontend) else None
+        return st.peek_logits(leftover)
+
+    def close_stream(self, sid: int) -> StreamResult:
+        """Flush (right-pad + drop incomplete pools), free the slot."""
+        s = self._streams.pop(sid)
+        if s.primed:
+            st = self._extract_slot(s)
+        else:
+            st = StreamState(self.plan, self.weights, self.thresholds)
+        st.advance(s.frontend.pop_all(), flush=True)
+        logits = st.logits()
+        det = s.detector.update(st.frames, logits)
+        if det is not None:
+            self.metrics.on_detection(sid)
+        self._slots[s.slot] = None
+        self._clear_slot(s.slot)  # scrub so the next tenant starts clean
+        self.metrics.on_close(sid)
+        return StreamResult(
+            stream_id=sid,
+            logits=logits,
+            frames=st.frames,
+            samples=st.samples_seen,
+            events=list(s.detector.events),
+        )

@@ -1,0 +1,515 @@
+"""Per-stream sliding-window state for incremental KWS inference.
+
+The offline executor re-reads the whole feature map per layer.  Streaming
+instead keeps, per conv layer, only the *receptive-field tail*: the suffix
+of the (padded) input stream that future output positions still need.  The
+tail lives in a ``FrameRing`` — a fixed-capacity ring whose read/write
+pointers mirror the flexible ping-pong SRAM discipline of
+``core/pingpong.py`` (paper §II-F): instead of re-allocating a buffer per
+layer invocation, the pointers chase each other through a fixed region and
+wrap, and over/under-runs raise ``MemoryError`` exactly like the ping-pong
+model's bank checks.
+
+Steady-state geometry (``plan_stream``): once a stream has been primed with
+``prime_samples``, every hop of ``hop_samples`` audio makes each layer
+consume/emit a *constant* number of frames and keeps each tail at a
+*constant* length with a *constant* pool phase.  That is what lets the
+scheduler run one jitted batched step with fully static shapes.  Priming,
+odd-sized chunks, end-of-stream flush and mid-stream peeks run through the
+generic numpy path in ``StreamState`` — the bit-exact reference
+implementation of the same math.
+
+Bit-exactness contract with core/executor.py (verified in test_stream.py):
+  * layer-0 spatial padding uses the offset code (ref_bitserial_conv1d)
+  * binary layers pad with zeros
+  * fused max-pool = OR over non-overlapping windows, remainder dropped
+  * GAP counts saturate at 255 (8-bit PWB counters)
+  * fc layers run on the saturated counts; final layer emits raw logits
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.cnn_spec import CNN1DSpec, Conv1DSpec, FCSpec, GAPSpec
+
+
+# ---------------------------------------------------------------------------
+# Ring buffer
+# ---------------------------------------------------------------------------
+
+class FrameRing:
+    """Fixed-capacity FIFO of (channels,) frames with wrapping pointers.
+
+    ``wr``/``rd`` are monotonic frame counters; the physical slot is the
+    counter mod capacity, so the region is reused forever without copies —
+    the software twin of the ping-pong SRAM's per-layer pointer latching
+    (PTR instructions move pointers, never data).
+    """
+
+    def __init__(self, capacity: int, channels: int, dtype=np.int32) -> None:
+        assert capacity > 0 and channels > 0
+        self.capacity = capacity
+        self.channels = channels
+        self.data = np.zeros((capacity, channels), dtype=dtype)
+        self.rd = 0  # next frame to read (monotonic)
+        self.wr = 0  # next frame to write (monotonic)
+
+    def __len__(self) -> int:
+        return self.wr - self.rd
+
+    @property
+    def free(self) -> int:
+        return self.capacity - len(self)
+
+    def push(self, frames: np.ndarray) -> None:
+        frames = np.atleast_2d(frames)
+        n = frames.shape[0]
+        if n == 0:
+            return
+        assert frames.shape[1] == self.channels, (frames.shape, self.channels)
+        if n > self.free:
+            raise MemoryError(
+                f"ring overflow: push {n} into {self.free} free of "
+                f"{self.capacity} frames"
+            )
+        idx = (self.wr + np.arange(n)) % self.capacity
+        self.data[idx] = frames
+        self.wr += n
+
+    def pop(self, n: int) -> np.ndarray:
+        out = self.peek(n)
+        self.rd += n
+        return out
+
+    def peek(self, n: int | None = None) -> np.ndarray:
+        """Oldest ``n`` frames (default: all) in time order, without consuming."""
+        n = len(self) if n is None else n
+        if n > len(self):
+            raise MemoryError(f"ring underflow: peek {n} of {len(self)}")
+        idx = (self.rd + np.arange(n)) % self.capacity
+        return self.data[idx].copy()
+
+    def drop(self, n: int) -> None:
+        if n > len(self):
+            raise MemoryError(f"ring underflow: drop {n} of {len(self)}")
+        self.rd += n
+
+    def clone(self) -> "FrameRing":
+        r = FrameRing(self.capacity, self.channels, self.data.dtype)
+        r.data = self.data.copy()
+        r.rd, r.wr = self.rd, self.wr
+        return r
+
+    def load(self, frames: np.ndarray) -> None:
+        """Reset contents to exactly ``frames`` (keeps pointer positions
+        rolling forward — the region is reused, not reallocated)."""
+        frames = np.atleast_2d(frames)
+        self.rd = self.wr
+        self.push(frames)
+
+
+# ---------------------------------------------------------------------------
+# Stream plan: static per-hop geometry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvStage:
+    """One conv layer's static streaming geometry."""
+
+    layer_idx: int
+    name: str
+    k: int
+    stride: int
+    pad: int
+    pool: int
+    cin: int
+    cout: int
+    in_bits: int
+    in_offset: int
+    tail: int      # steady-state receptive-field tail length (frames)
+    phase: int     # steady-state pool phase (frames pending in the window)
+    n_in: int      # frames consumed per hop
+    n_conv: int    # conv positions emitted per hop
+    n_out: int     # pooled frames emitted per hop
+
+
+@dataclasses.dataclass(frozen=True)
+class FCStage:
+    layer_idx: int
+    name: str
+    cin: int
+    cout: int
+    in_bits: int
+    out_raw: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    """Static schedule for one model: hop/prime sizes + per-layer geometry."""
+
+    spec: CNN1DSpec
+    hop_samples: int
+    prime_samples: int
+    convs: tuple[ConvStage, ...]
+    fcs: tuple[FCStage, ...]
+    gap_channels: int
+
+    @property
+    def frames_per_hop(self) -> int:
+        return self.convs[-1].n_out
+
+    @property
+    def samples_per_frame(self) -> int:
+        return self.hop_samples // self.frames_per_hop
+
+    def macs_per_hop(self) -> int:
+        """Logical MACs of one steady-state hop (conv cascade only)."""
+        return sum(c.n_conv * c.k * c.cin * c.cout for c in self.convs)
+
+    def fc_macs(self) -> int:
+        return sum(f.cin * f.cout for f in self.fcs)
+
+
+def _conv_layers(spec: CNN1DSpec) -> tuple[list[tuple[int, Conv1DSpec]],
+                                           int, list[tuple[int, FCSpec]]]:
+    """Split the spec into conv prefix / GAP / fc suffix (the streamable
+    topology); anything else is rejected."""
+    convs: list[tuple[int, Conv1DSpec]] = []
+    fcs: list[tuple[int, FCSpec]] = []
+    gap_at = None
+    for li, lspec in enumerate(spec.layers):
+        if isinstance(lspec, Conv1DSpec):
+            if gap_at is not None:
+                raise ValueError("conv after GAP is not streamable")
+            if lspec.out_raw:
+                raise ValueError(f"{lspec.name}: raw-output conv mid-stream")
+            convs.append((li, lspec))
+        elif isinstance(lspec, GAPSpec):
+            if gap_at is not None:
+                raise ValueError("multiple GAP layers")
+            gap_at = li
+        elif isinstance(lspec, FCSpec):
+            if gap_at is None:
+                raise ValueError("FC before GAP is not streamable")
+            fcs.append((li, lspec))
+        else:
+            raise ValueError(f"layer {li} ({type(lspec).__name__}) not streamable")
+    if not convs or gap_at is None or not fcs:
+        raise ValueError("streamable spec needs convs -> GAP -> FCs")
+    return convs, gap_at, fcs
+
+
+def _simulate_counts(convs: list[tuple[int, Conv1DSpec]], pushes: list[int]
+                     ) -> tuple[list[int], list[int], list[list[int]]]:
+    """Feed ``pushes`` chunks through the count-level model.
+
+    Returns (tail lengths, pool phases, per-push emissions per layer) after
+    all pushes; tails include the layer's left pad on the first push.
+    """
+    fed = [0] * len(convs)       # frames of the *padded* stream received
+    emitted = [0] * len(convs)   # conv positions emitted so far
+    pooled = [0] * len(convs)    # pooled frames emitted so far
+    per_push: list[list[int]] = []
+    for push in pushes:
+        cur = push
+        outs = []
+        for i, (_, L) in enumerate(convs):
+            if fed[i] == 0 and cur > 0:
+                fed[i] += L.pad  # left pad arrives with the first real frame
+            fed[i] += cur
+            total = max(0, (fed[i] - L.k) // L.stride + 1) if fed[i] >= L.k else 0
+            new_conv = total - emitted[i]
+            emitted[i] = total
+            new_pool = (emitted[i] // L.pool) - pooled[i]
+            pooled[i] += new_pool
+            cur = new_pool
+            outs.append(new_conv)
+        per_push.append(outs)
+    tails = [
+        fed[i] - emitted[i] * L.stride for i, (_, L) in enumerate(convs)
+    ]
+    phases = [emitted[i] % L.pool for i, (_, L) in enumerate(convs)]
+    return tails, phases, per_push
+
+
+def plan_stream(
+    spec: CNN1DSpec,
+    hop_frames: int = 1,
+    prime_samples: int | None = None,
+) -> StreamPlan:
+    """Derive the static streaming schedule for ``spec``.
+
+    ``hop_frames``: final-layer frames per scheduler step; the hop size in
+    samples is ``hop_frames * prod(stride*pool)``.  ``prime_samples`` is the
+    warm-up prefix a stream must deliver before it enters the steady-state
+    batched step; the default is the smallest stride-aligned prefix that
+    fills every layer's tail.
+    """
+    convs, _, fcs = _conv_layers(spec)
+    unit = 1
+    for _, L in convs:
+        unit *= L.stride * L.pool
+    hop = hop_frames * unit
+
+    s0 = convs[0][1].stride
+    if prime_samples is None:
+        # smallest stride-aligned prefix after which every layer has seen a
+        # full receptive field (fed >= k), i.e. every tail is at steady size
+        prime_samples = 0
+        for p in range(s0, 64 * unit + 1, s0):
+            f, ok = p, True
+            for _, L in convs:
+                f_padded = L.pad + f
+                if f_padded < L.k:
+                    ok = False
+                    break
+                f = ((f_padded - L.k) // L.stride + 1) // L.pool
+            if ok:
+                prime_samples = p
+                break
+        if prime_samples == 0:
+            raise ValueError("could not find a priming prefix")
+
+    # verify steady state: two extra hops give identical emissions + tails
+    tails, phases, per = _simulate_counts(convs, [prime_samples, hop, hop])
+    tails2, phases2, per2 = _simulate_counts(
+        convs, [prime_samples, hop, hop, hop]
+    )
+    if per[1] != per[2] or per2[2] != per2[3] or tails != tails2 or phases != phases2:
+        raise ValueError(
+            f"hop {hop} / prime {prime_samples} does not reach steady state"
+        )
+
+    stages = []
+    n_in = hop
+    for i, (li, L) in enumerate(convs):
+        n_conv = per[1][i]
+        if n_conv % L.pool:
+            raise ValueError(
+                f"{L.name}: {n_conv} conv frames/hop not divisible by pool "
+                f"{L.pool}; raise hop_frames"
+            )
+        stages.append(
+            ConvStage(
+                layer_idx=li, name=L.name, k=L.k, stride=L.stride, pad=L.pad,
+                pool=L.pool, cin=L.cin, cout=L.cout, in_bits=L.in_bits,
+                in_offset=L.in_offset, tail=tails[i], phase=phases[i],
+                n_in=n_in, n_conv=n_conv, n_out=n_conv // L.pool,
+            )
+        )
+        assert n_conv * L.stride == n_in, (L.name, n_conv, n_in)
+        n_in = n_conv // L.pool
+
+    fc_stages = tuple(
+        FCStage(li, F.name, F.cin, F.cout, F.in_bits, F.out_raw)
+        for li, F in fcs
+    )
+    return StreamPlan(
+        spec=spec,
+        hop_samples=hop,
+        prime_samples=prime_samples,
+        convs=tuple(stages),
+        fcs=fc_stages,
+        gap_channels=convs[-1][1].cout,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reference per-stream state (numpy; priming / flush / peek path)
+# ---------------------------------------------------------------------------
+
+def _threshold(raw: np.ndarray, thr: np.ndarray, flip: np.ndarray) -> np.ndarray:
+    """Executor-exact SA binarization (float64 compare, flip channels)."""
+    ge = raw >= thr[None, :]
+    return np.where(flip[None, :], ~ge, ge).astype(np.uint8)
+
+
+def _conv_raw(window: np.ndarray, w: np.ndarray, stage: ConvStage,
+              n_conv: int) -> np.ndarray:
+    """n_conv positions of the layer over ``window`` (tail ++ new frames)."""
+    x = window.astype(np.int64)
+    if stage.in_bits > 1:
+        x = x - stage.in_offset  # offset-binary input (pads carry the code)
+    taps = np.stack(
+        [
+            x[t : t + (n_conv - 1) * stage.stride + 1 : stage.stride]
+            for t in range(stage.k)
+        ],
+        axis=0,
+    )  # (K, n_conv, Cin)
+    return np.einsum("knc,kco->no", taps, w.astype(np.int64))
+
+
+class StreamState:
+    """One stream's incremental inference state (bit-exact numpy path).
+
+    Handles arbitrary chunk sizes: warm-up, steady hops, end-of-stream flush
+    with right padding, and non-destructive mid-stream peeks.  The jitted
+    batched scheduler path is the steady-state specialization of exactly
+    this code.
+    """
+
+    def __init__(
+        self,
+        plan: StreamPlan,
+        weights: dict[int, np.ndarray],
+        thresholds: dict[int, tuple[np.ndarray, np.ndarray]],
+        ring_slack: int | None = None,
+    ) -> None:
+        self.plan = plan
+        self.weights = weights
+        self.thresholds = thresholds
+        slack = ring_slack if ring_slack is not None else max(
+            plan.prime_samples, 2 * plan.hop_samples
+        )
+        self._max_chunk = slack  # advance() splits larger inputs
+        self.hists: list[FrameRing] = []
+        self.pendings: list[FrameRing] = []
+        for st in plan.convs:
+            cap = st.tail + 2 * st.pad + st.k + max(slack, st.n_in) + 1
+            self.hists.append(FrameRing(cap, st.cin, np.int32))
+            self.pendings.append(
+                FrameRing(st.pool + st.k + st.pad + max(slack, st.n_conv) + 1,
+                          st.cout, np.int32)
+            )
+            slack = max(1, -(-slack // max(1, st.stride)))
+        self.started = [False] * len(plan.convs)
+        self.gap = np.zeros(plan.gap_channels, np.int64)
+        self.frames = 0          # final-conv pooled frames accumulated in GAP
+        self.samples_seen = 0
+        self.flushed = False
+
+    # -- core advance --------------------------------------------------------
+
+    def advance(self, samples: np.ndarray, flush: bool = False) -> np.ndarray:
+        """Feed u8 samples (n,) or (n, Cin0); returns newly emitted
+        final-conv frames (m, C).  ``flush`` appends each layer's right pad
+        and drops incomplete pool windows (end-of-stream semantics)."""
+        samples = np.asarray(samples)
+        cur = samples.reshape(-1, self.plan.convs[0].cin)
+        if cur.shape[0] > self._max_chunk:
+            # split oversized inputs so the fixed-capacity rings never
+            # overflow (the pointers just wrap more often)
+            outs = []
+            for i in range(0, cur.shape[0], self._max_chunk):
+                seg = cur[i : i + self._max_chunk]
+                last = i + self._max_chunk >= cur.shape[0]
+                outs.append(self._advance_once(seg, flush=flush and last))
+            return np.concatenate(outs, axis=0)
+        return self._advance_once(cur, flush=flush)
+
+    def _advance_once(self, samples: np.ndarray, flush: bool) -> np.ndarray:
+        assert not self.flushed, "stream already flushed"
+        cur = samples.reshape(-1, self.plan.convs[0].cin).astype(np.int32)
+        self.samples_seen += cur.shape[0]
+        for i, st in enumerate(self.plan.convs):
+            hist = self.hists[i]
+            w = self.weights[st.layer_idx]
+            wk = w.reshape(st.k, st.cin, st.cout)
+            if not self.started[i] and (cur.shape[0] > 0 or flush):
+                # left pad arrives with the first real frame (offset code
+                # for the multi-bit first layer, zeros for binary layers)
+                pad_val = st.in_offset if st.in_bits > 1 else 0
+                hist.push(np.full((st.pad, st.cin), pad_val, np.int32))
+                self.started[i] = True
+            hist.push(cur)
+            if flush:
+                pad_val = st.in_offset if st.in_bits > 1 else 0
+                hist.push(np.full((st.pad, st.cin), pad_val, np.int32))
+            avail = len(hist)
+            n_conv = (avail - st.k) // st.stride + 1 if avail >= st.k else 0
+            if n_conv > 0:
+                window = hist.peek(avail)
+                raw = _conv_raw(window, wk, st, n_conv)
+                thr, flip = self.thresholds[st.layer_idx]
+                y = _threshold(raw, thr, flip)
+                hist.drop(n_conv * st.stride)
+            else:
+                y = np.zeros((0, st.cout), np.uint8)
+            # pool: OR over non-overlapping windows, absolute alignment
+            pend = self.pendings[i]
+            pend.push(y.astype(np.int32))
+            n_pool = len(pend) // st.pool
+            if n_pool > 0:
+                frames = pend.pop(n_pool * st.pool)
+                cur = frames.reshape(n_pool, st.pool, st.cout).max(axis=1)
+            else:
+                cur = np.zeros((0, st.cout), np.int32)
+            if flush:
+                pend.drop(len(pend))  # drop-remainder (ref_maxpool1d)
+        self.gap += cur.astype(np.int64).sum(axis=0)
+        self.frames += cur.shape[0]
+        if flush:
+            self.flushed = True
+        return cur
+
+    # -- logits --------------------------------------------------------------
+
+    def logits(self) -> np.ndarray:
+        """fc cascade over the (saturated) GAP counts — executor-exact."""
+        h = np.minimum(self.gap, 255).astype(np.int64)[None, :]  # 8-bit PWB
+        for st in self.plan.fcs:
+            w = self.weights[st.layer_idx].astype(np.int64)
+            raw = h @ w
+            if st.out_raw:
+                h = raw
+            else:
+                thr, flip = self.thresholds[st.layer_idx]
+                h = _threshold(raw, thr, flip).astype(np.int64)
+        return h[0]
+
+    def peek_logits(self, extra_samples: np.ndarray | None = None) -> np.ndarray:
+        """Logits as if the stream ended now (plus ``extra_samples``),
+        without disturbing the live state — the per-frame logits contract:
+        peek after feeding audio[:L] == offline executor on audio[:L]."""
+        ghost = self.clone()
+        if extra_samples is None:
+            extra_samples = np.zeros((0,), np.int32)
+        ghost.advance(extra_samples, flush=True)
+        return ghost.logits()
+
+    def clone(self) -> "StreamState":
+        c = StreamState.__new__(StreamState)
+        c.plan, c.weights, c.thresholds = self.plan, self.weights, self.thresholds
+        c._max_chunk = self._max_chunk
+        c.hists = [h.clone() for h in self.hists]
+        c.pendings = [p.clone() for p in self.pendings]
+        c.started = list(self.started)
+        c.gap = self.gap.copy()
+        c.frames = self.frames
+        c.samples_seen = self.samples_seen
+        c.flushed = self.flushed
+        return c
+
+    # -- steady-state interchange with the batched scheduler -----------------
+
+    def export_steady(self) -> dict[str, list[np.ndarray] | np.ndarray]:
+        """Tail/pending/gap arrays at the plan's steady-state shapes."""
+        tails, pends = [], []
+        for i, st in enumerate(self.plan.convs):
+            h = self.hists[i]
+            if len(h) != st.tail:
+                raise ValueError(
+                    f"{st.name}: tail {len(h)} != steady {st.tail} "
+                    "(stream not primed?)"
+                )
+            tails.append(h.peek(st.tail))
+            p = self.pendings[i]
+            if len(p) != st.phase:
+                raise ValueError(
+                    f"{st.name}: pool phase {len(p)} != steady {st.phase}"
+                )
+            pends.append(p.peek(st.phase))  # exactly (phase, cout)
+        return {"tails": tails, "pendings": pends, "gap": self.gap.copy()}
+
+    def import_steady(self, tails, pendings, gap, frames: int) -> None:
+        for i, st in enumerate(self.plan.convs):
+            self.hists[i].load(np.asarray(tails[i], np.int32))
+            self.pendings[i].load(
+                np.asarray(pendings[i][: st.phase], np.int32)
+            )
+            self.started[i] = True
+        self.gap = np.asarray(gap, np.int64).copy()
+        self.frames = frames

@@ -28,11 +28,36 @@ import jax.numpy as jnp
 import ml_dtypes
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # zstd preferred; stdlib zlib keeps checkpointing alive without it
+    import zstandard
+except ImportError:  # pragma: no cover - depends on environment
+    zstandard = None
 
 from repro.utils.logging import get_logger
 
 log = get_logger("checkpoint")
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"  # first 4 bytes of every zstd frame
+
+
+def _compress(payload: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(payload)
+    # zlib blobs never start with the zstd magic (first byte 0x78 for the
+    # default window), so _decompress can tell the two formats apart.
+    return zlib.compress(payload, level=6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise ImportError(
+                "checkpoint was written with zstd but the 'zstandard' package "
+                "is not installed; install it or re-save with zlib"
+            )
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _leaf_to_bytes(x) -> dict:
@@ -71,9 +96,7 @@ def save(ckpt_dir: str | os.PathLike, step: int, tree, meta: dict | None = None,
         "treedef": str(treedef),
         "leaves": [_leaf_to_bytes(l) for l in leaves],
     }
-    blob = zstandard.ZstdCompressor(level=3).compress(
-        msgpack.packb(payload, use_bin_type=True)
-    )
+    blob = _compress(msgpack.packb(payload, use_bin_type=True))
     tmp = ckpt_dir / f"tmp-{step}"
     final = ckpt_dir / f"step-{step:010d}"
     with open(tmp, "wb") as f:
@@ -108,7 +131,7 @@ def restore(ckpt_dir: str | os.PathLike, tree_template, step: int | None = None,
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
     path = ckpt_dir / f"step-{step:010d}"
-    blob = zstandard.ZstdDecompressor().decompress(path.read_bytes())
+    blob = _decompress(path.read_bytes())
     payload = msgpack.unpackb(blob, raw=False)
     leaves_raw = [_leaf_from_bytes(d) for d in payload["leaves"]]
     flat_t, treedef = jax.tree_util.tree_flatten(tree_template)

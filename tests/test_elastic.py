@@ -12,13 +12,16 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import tempfile
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    try:
+        from jax.sharding import AxisType
+        kw = {"axis_types": (AxisType.Auto,) * 2}
+    except ImportError:
+        kw = {}
     from repro.train import checkpoint as ckpt
 
-    mesh_a = jax.make_mesh((4, 1), ("data", "model"),
-                           axis_types=(AxisType.Auto,) * 2)
-    mesh_b = jax.make_mesh((2, 2), ("data", "model"),
-                           axis_types=(AxisType.Auto,) * 2)
+    mesh_a = jax.make_mesh((4, 1), ("data", "model"), **kw)
+    mesh_b = jax.make_mesh((2, 2), ("data", "model"), **kw)
 
     tree = {
         "w": jax.device_put(

@@ -1,6 +1,8 @@
 """32-bit ISA: encode/decode roundtrips (property-based) + structure."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import isa
 

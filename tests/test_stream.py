@@ -1,0 +1,328 @@
+"""Streaming runtime (repro.stream): golden equivalence with the offline
+executor, ring-buffer wraparound, mid-batch join/leave, detector hysteresis,
+and the batched Pallas kernel."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compiler, executor
+from repro.kernels import ops, ref
+from repro.models import kws
+from repro.stream import (
+    DetectorConfig,
+    FrameRing,
+    PosteriorDetector,
+    StreamScheduler,
+    StreamState,
+    plan_stream,
+)
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    spec = kws.build_kws_smoke_spec()
+    params = kws.init_kws_params(jax.random.PRNGKey(0), spec)
+    weights, thresholds = kws.export_kws(params, spec)
+    prog = compiler.compile_model(spec, weights, thresholds)
+    return spec, weights, thresholds, prog
+
+
+def _offline(prog, x):
+    return executor.Executor(prog).run(x[:, None]).output.ravel()
+
+
+def _clip(spec, seed):
+    return np.random.default_rng(seed).integers(
+        0, 256, (spec.in_len,)
+    ).astype(np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Plan geometry
+# ---------------------------------------------------------------------------
+
+def test_plan_steady_state_geometry(smoke):
+    spec, *_ = smoke
+    plan = plan_stream(spec)
+    # hop = prod(stride*pool) per final frame; KWS: 8*1 * 1*2 * 1*2 * 1*2
+    assert plan.hop_samples == 64 and plan.frames_per_hop == 1
+    n_in = plan.hop_samples
+    for st in plan.convs:
+        assert st.n_in == n_in
+        assert st.n_conv * st.stride == st.n_in
+        assert st.n_conv % st.pool == 0
+        assert 0 <= st.phase < st.pool
+        n_in = st.n_out
+    # larger hops scale every stage linearly
+    plan4 = plan_stream(spec, hop_frames=4)
+    assert plan4.hop_samples == 256 and plan4.frames_per_hop == 4
+
+
+# ---------------------------------------------------------------------------
+# Ring buffer
+# ---------------------------------------------------------------------------
+
+def test_frame_ring_wraparound():
+    ring = FrameRing(7, 3)
+    total_in, total_out = [], []
+    for i in range(25):  # pointers lap the 7-slot region multiple times
+        f = np.full((2, 3), i)
+        ring.push(f)
+        total_in.append(f)
+        got = ring.pop(2 if i % 2 else 1)
+        total_out.append(got)
+        if i % 2 == 0:
+            total_out.append(ring.pop(1))
+    np.testing.assert_array_equal(
+        np.concatenate(total_in), np.concatenate(total_out)
+    )
+    assert len(ring) == 0
+    assert ring.wr == ring.rd == 50  # monotonic counters, wrapped storage
+
+
+def test_frame_ring_over_underflow():
+    ring = FrameRing(4, 1)
+    ring.push(np.ones((3, 1)))
+    with pytest.raises(MemoryError):
+        ring.push(np.ones((2, 1)))
+    with pytest.raises(MemoryError):
+        ring.pop(4)
+    assert len(ring) == 3  # failed ops leave the ring intact
+
+
+def test_stream_state_rings_wrap(smoke):
+    """Tiny ring slack forces every hist ring to wrap many times; the
+    results must not change."""
+    spec, weights, thresholds, prog = smoke
+    plan = plan_stream(spec)
+    x = _clip(spec, 1)
+    big = StreamState(plan, weights, thresholds)
+    small = StreamState(plan, weights, thresholds, ring_slack=plan.hop_samples)
+    for st in (big, small):
+        for i in range(0, spec.in_len, 160):
+            st.advance(x[i : i + 160])
+        st.advance(np.zeros((0,), np.int32), flush=True)
+    np.testing.assert_array_equal(big.logits(), small.logits())
+    np.testing.assert_array_equal(big.logits(), _offline(prog, x))
+
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: streaming == offline executor
+# ---------------------------------------------------------------------------
+
+def test_stream_matches_offline_full_clip(smoke):
+    spec, weights, thresholds, prog = smoke
+    plan = plan_stream(spec)
+    x = _clip(spec, 2)
+    st = StreamState(plan, weights, thresholds)
+    i = 0
+    for sz in itertools.cycle([37, 200, 111, 64, 5]):  # ragged chunks
+        st.advance(x[i : i + sz])
+        i += sz
+        if i >= spec.in_len:
+            break
+    st.advance(x[i:] if i < spec.in_len else np.zeros((0,), np.int32),
+               flush=True)
+    np.testing.assert_array_equal(st.logits(), _offline(prog, x))
+
+
+@pytest.mark.parametrize("prefix", [320, 520, 648])
+def test_stream_peek_matches_offline_prefix(smoke, prefix):
+    """Per-frame logits contract: peek after audio[:L] == offline run on
+    audio[:L] (same weights, shorter program)."""
+    spec, weights, thresholds, _ = smoke
+    x = _clip(spec, 3)
+    spec_l = kws.build_kws_spec(in_len=prefix, width=16)
+    prog_l = compiler.compile_model(spec_l, weights, thresholds)
+    st = StreamState(plan_stream(spec), weights, thresholds)
+    st.advance(x[: prefix - 100])
+    st.advance(x[prefix - 100 : prefix])
+    np.testing.assert_array_equal(
+        st.peek_logits(), _offline(prog_l, x[:prefix])
+    )
+    assert not st.flushed  # peek is non-destructive
+    st.advance(x[prefix:], flush=True)  # stream continues normally
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: continuous batching, join/leave mid-batch
+# ---------------------------------------------------------------------------
+
+def test_scheduler_join_leave_mid_batch(smoke):
+    spec, weights, thresholds, prog = smoke
+    sched = StreamScheduler(spec, weights, thresholds, capacity=3,
+                            hop_frames=1, emit_logits=False)
+    clips = {j: _clip(spec, 10 + j) for j in range(4)}
+    want = {j: _offline(prog, clips[j]) for j in range(4)}
+
+    a = sched.add_stream()
+    b = sched.add_stream()
+    sched.push_audio(a, clips[0][:500])
+    sched.push_audio(b, clips[1][:200])  # b is a straggler
+    sched.run_until_starved()
+
+    # c joins while a/b are mid-flight
+    c = sched.add_stream()
+    sched.push_audio(c, clips[2])
+    sched.push_audio(a, clips[0][500:])
+    sched.run_until_starved()
+
+    # a leaves; its slot is recycled by d mid-run
+    res_a = sched.close_stream(a)
+    np.testing.assert_array_equal(res_a.logits, want[0])
+    d = sched.add_stream()
+    sched.push_audio(d, clips[3])
+    sched.push_audio(b, clips[1][200:])
+    sched.run_until_starved()
+
+    for sid, j in ((b, 1), (c, 2), (d, 3)):
+        res = sched.close_stream(sid)
+        np.testing.assert_array_equal(res.logits, want[j])
+    assert sched.active == []
+
+
+def test_scheduler_peek_matches_offline_prefix(smoke):
+    spec, weights, thresholds, _ = smoke
+    sched = StreamScheduler(spec, weights, thresholds, capacity=2,
+                            emit_logits=False)
+    x = _clip(spec, 20)
+    prefix = 520
+    spec_l = kws.build_kws_spec(in_len=prefix, width=16)
+    off = _offline(compiler.compile_model(spec_l, weights, thresholds),
+                   x[:prefix])
+    sid = sched.add_stream()
+    sched.push_audio(sid, x[:prefix])
+    sched.run_until_starved()  # leaves a sub-hop remainder in the inbox
+    np.testing.assert_array_equal(sched.peek(sid), off)
+
+
+def test_scheduler_capacity_enforced(smoke):
+    spec, weights, thresholds, _ = smoke
+    sched = StreamScheduler(spec, weights, thresholds, capacity=1)
+    sched.add_stream()
+    with pytest.raises(MemoryError):
+        sched.add_stream()
+
+
+# ---------------------------------------------------------------------------
+# Batched Pallas kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "b,l,cin,cout,k,stride,pad,pool",
+    [
+        (3, 40, 8, 16, 3, 1, 1, 1),
+        (8, 32, 24, 40, 3, 1, 1, 2),
+        (5, 66, 16, 20, 5, 2, 2, 1),
+    ],
+)
+def test_bnn_conv1d_batched_kernel(b, l, cin, cout, k, stride, pad, pool):
+    x = jnp.array(RNG.integers(0, 2, (b, l, cin)), jnp.uint32)
+    w = jnp.array(RNG.integers(-1, 2, (k, cin, cout)), jnp.int32)
+    thr = jnp.array(RNG.normal(0, 2, (cout,)), jnp.float32)
+    flip = jnp.array(RNG.integers(0, 2, (cout,)), bool)
+    raw = ops.bnn_conv1d_batched(x, w, stride=stride, pad=pad, mode="raw")
+    np.testing.assert_array_equal(
+        np.asarray(raw),
+        np.asarray(ref.ref_bnn_conv1d_batched(x, w, stride, pad)),
+    )
+    sa = ops.bnn_conv1d_batched(x, w, thr, flip, stride=stride, pad=pad,
+                                pool=pool)
+    want = jnp.stack([
+        ref.ref_bnn_conv1d_sa(x[i], w, thr, flip, stride, pad, pool)
+        for i in range(b)
+    ])
+    np.testing.assert_array_equal(np.asarray(sa), np.asarray(want))
+
+
+def test_scheduler_pallas_backend_matches_offline(smoke):
+    spec, weights, thresholds, prog = smoke
+    x = _clip(spec, 30)
+    sched = StreamScheduler(spec, weights, thresholds, capacity=2,
+                            hop_frames=4, backend="pallas",
+                            emit_logits=False)
+    sid = sched.add_stream()
+    sched.push_audio(sid, x)
+    sched.run_until_starved()
+    res = sched.close_stream(sid)
+    np.testing.assert_array_equal(res.logits, _offline(prog, x))
+
+
+# ---------------------------------------------------------------------------
+# Detector hysteresis
+# ---------------------------------------------------------------------------
+
+def _logit(cls: int, strength: float = 30.0, n: int = 12) -> np.ndarray:
+    z = np.zeros(n)
+    z[cls] = strength
+    return z
+
+
+def test_detector_fires_once_per_utterance():
+    cfg = DetectorConfig(smooth_frames=2, on_threshold=0.6,
+                         off_threshold=0.4, refractory_frames=5)
+    det = PosteriorDetector(0, cfg)
+    events = []
+    for f in range(10):  # sustained keyword: must fire exactly once
+        e = det.update(f, _logit(3))
+        if e:
+            events.append(e)
+    assert [e.cls for e in events] == [3]
+    assert events[0].score >= cfg.on_threshold
+
+
+def test_detector_refractory_blocks_refire():
+    cfg = DetectorConfig(smooth_frames=1, on_threshold=0.6,
+                         off_threshold=0.4, refractory_frames=8)
+    det = PosteriorDetector(0, cfg)
+    assert det.update(0, _logit(2)) is not None
+    # dips below off-threshold immediately, but refractory still holds
+    assert det.update(1, _logit(11)) is None
+    assert det.update(2, _logit(2)) is None  # inside refractory: no refire
+    # silence until refractory expires, then a new utterance fires again
+    for f in range(3, 9):
+        assert det.update(f, _logit(11)) is None
+    e = det.update(9, _logit(5))
+    assert e is not None and e.cls == 5
+
+
+def test_detector_no_fire_before_window_full():
+    # a confident-wrong first frame (right after priming) must not bypass
+    # the smoother just because the window is still partial
+    cfg = DetectorConfig(smooth_frames=4, on_threshold=0.6,
+                         off_threshold=0.4, refractory_frames=4)
+    det = PosteriorDetector(0, cfg)
+    assert det.update(0, _logit(3)) is None
+    assert det.update(1, _logit(11)) is None
+    assert det.events == []
+
+
+def test_detector_smoothing_suppresses_single_frame_glitch():
+    cfg = DetectorConfig(smooth_frames=4, on_threshold=0.6,
+                         off_threshold=0.4, refractory_frames=4)
+    det = PosteriorDetector(0, cfg)
+    for f in range(4):
+        assert det.update(f, _logit(11)) is None
+    # one glitch frame inside a 4-frame window: smoothed posterior ~0.25
+    assert det.update(4, _logit(6)) is None
+    assert det.update(5, _logit(11)) is None
+    assert det.events == []
+
+
+def test_detector_hysteresis_rearm_requires_decay():
+    cfg = DetectorConfig(smooth_frames=1, on_threshold=0.6,
+                         off_threshold=0.4, refractory_frames=2)
+    det = PosteriorDetector(0, cfg)
+    assert det.update(0, _logit(1)) is not None
+    # posterior stays above off_threshold long past refractory: still held
+    for f in range(1, 10):
+        assert det.update(f, _logit(1)) is None
+    # decays -> re-arms -> new event
+    assert det.update(10, _logit(11)) is None
+    e = det.update(11, _logit(1))
+    assert e is not None and e.frame == 11
