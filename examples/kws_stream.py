@@ -3,8 +3,10 @@
 1. build + briefly QAT-train the reduced binary KWS CNN,
 2. export ternary weights + SA thresholds (same artifacts the compiler eats),
 3. open a StreamScheduler and let several synthetic "microphones" push
-   audio in ragged real-world-sized chunks,
-4. watch per-hop logits feed the hysteresis detector and emit keyword
+   audio in ragged real-world-sized chunks (the elastic slot pool grows
+   from its minimum as they join),
+4. watch per-hop finalized logits — computed on-device by the in-jit
+   finalization tail — feed the hysteresis detector and emit keyword
    events per stream,
 5. close each stream and verify the flushed logits are bit-exact with the
    offline executor on the same audio.
@@ -89,8 +91,10 @@ def main() -> None:
     e = sched.metrics.energy_summary()
     print(f"\nmetrics: {m['frames_total']:.0f} frames, "
           f"{m['frames_per_sec']:.0f} frames/s, "
-          f"step p50 {m['step_ms_p50']:.1f} ms, "
+          f"step p50 {m['step_ms_p50']:.1f} ms (hop -> on-device logits), "
           f"silicon-equivalent {e['tops_per_w_equiv']:.0f} TOPS/W")
+    print(f"elastic pool: {m['resizes']:.0f} resizes, "
+          f"final capacity {sched.capacity} of max {sched.max_capacity}")
 
 
 if __name__ == "__main__":

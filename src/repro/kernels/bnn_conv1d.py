@@ -224,3 +224,86 @@ def bnn_conv1d_step_packed(
             interpret=interpret,
         )(xs, wp, wn)
     raise ValueError(f"mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# Fused classifier tail (repro.stream in-jit finalization).
+#
+# The GAP counters plus the fc cascade are the model's "answer now" path:
+# saturate the 8-bit PWB counts, run every fc layer, emit raw logits.  On
+# silicon this is one drain of the PWB counters through the macro; here it
+# is one kernel so the streaming scheduler's per-hop finalization never
+# leaves the device — each grid cell loads the (tiny) fc weight stack once
+# and finishes ``bb`` streams end to end.
+# ---------------------------------------------------------------------------
+
+
+def _tail_kernel(*refs, n_fc: int, out_raw: tuple[bool, ...]):
+    """refs = [gap, (w, [thr, flip])* , out].  One cell: bb streams."""
+    gap_ref, o_ref = refs[0], refs[-1]
+    params = refs[1:-1]
+    # 8-bit PWB counter ceiling (executor: gap counts saturate at 255)
+    h = jnp.minimum(gap_ref[...], 255)
+    idx = 0
+    for j in range(n_fc):
+        w = params[idx][...]
+        idx += 1
+        raw = jax.lax.dot_general(
+            h, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        if out_raw[j]:
+            h = raw
+        else:
+            thr = params[idx][...]
+            flip = params[idx + 1][...]
+            idx += 2
+            ge = raw.astype(jnp.float32) >= thr[0, :][None, :]
+            h = jnp.where(flip[0, :][None, :] != 0, ~ge, ge).astype(jnp.int32)
+    o_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("out_raw", "bb", "interpret"))
+def classifier_tail_packed(
+    gap: jax.Array,
+    fc_ws: tuple[jax.Array, ...],
+    fc_thrs: tuple[jax.Array, ...],
+    fc_flips: tuple[jax.Array, ...],
+    *,
+    out_raw: tuple[bool, ...],
+    bb: int = DEFAULT_BB,
+    interpret: bool = True,
+) -> jax.Array:
+    """Saturate GAP counts and run the whole fc cascade in one kernel.
+
+    gap : (B, C) int32 GAP counts (possibly already clamped; idempotent)
+    fc_ws : per-fc (Cin, Cout) int32 ternary weights
+    fc_thrs/fc_flips : per-fc (1, Cout) float32 / int32 SA params (entries
+        for ``out_raw`` layers are present but unused)
+    Output: (B, n_classes) int32 raw logits.
+    """
+    b, c = gap.shape
+    n_fc = len(fc_ws)
+    assert n_fc and b % bb == 0, (b, bb, n_fc)
+    assert fc_ws[0].shape[0] == c
+
+    grid = (b // bb,)
+    in_specs = [pl.BlockSpec((bb, c), lambda s: (s, 0))]
+    args = [gap]
+    for j, w in enumerate(fc_ws):
+        cin, cout = w.shape
+        in_specs.append(pl.BlockSpec((cin, cout), lambda s: (0, 0)))
+        args.append(w)
+        if not out_raw[j]:
+            in_specs.append(pl.BlockSpec((1, cout), lambda s: (0, 0)))
+            in_specs.append(pl.BlockSpec((1, cout), lambda s: (0, 0)))
+            args.extend([fc_thrs[j], fc_flips[j]])
+    n_out = fc_ws[-1].shape[1]
+    return pl.pallas_call(
+        functools.partial(_tail_kernel, n_fc=n_fc, out_raw=out_raw),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bb, n_out), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_out), jnp.int32),
+        interpret=interpret,
+    )(*args)

@@ -272,6 +272,41 @@ def bnn_conv1d_batched(
 
 
 # ---------------------------------------------------------------------------
+# Fused classifier tail (repro.stream in-jit finalization)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("out_raw", "interpret"))
+def classifier_tail(
+    gap: jax.Array,
+    fc_ws: tuple[jax.Array, ...],
+    fc_thrs: tuple[jax.Array, ...],
+    fc_flips: tuple[jax.Array, ...],
+    *,
+    out_raw: tuple[bool, ...],
+    interpret: bool | None = None,
+) -> jax.Array:
+    """GAP counts -> raw logits: saturate at the 8-bit PWB ceiling, then the
+    whole fc cascade fused in one kernel launch.
+
+    gap (B, C) int32; fc_ws per-layer (Cin, Cout) ternary; fc_thrs/fc_flips
+    per-layer (Cout,) SA params.  Returns (B, n_classes) int32 raw logits —
+    bit-exact with ``StreamState.logits`` (integer thresholds make the
+    float32 compare exact; counts keep every product inside int32).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    b = gap.shape[0]
+    bb = _pick_block(b, _conv.DEFAULT_BB)
+    gap_p = _pad_axis(gap.astype(jnp.int32), bb, 0)
+    ws = tuple(w.astype(jnp.int32) for w in fc_ws)
+    thrs = tuple(t.astype(jnp.float32).reshape(1, -1) for t in fc_thrs)
+    flips = tuple(f.astype(jnp.int32).reshape(1, -1) for f in fc_flips)
+    out = _conv.classifier_tail_packed(
+        gap_p, ws, thrs, flips, out_raw=out_raw, bb=bb, interpret=interpret
+    )
+    return out[:b]
+
+
+# ---------------------------------------------------------------------------
 # Dispatch heuristic: popcount (bandwidth) vs MXU (compute)
 # ---------------------------------------------------------------------------
 

@@ -6,20 +6,52 @@ model (spec + ternary weights + SA thresholds) into an *incremental*
 runtime: audio arrives chunk by chunk on thousands of concurrent streams,
 each new hop only computes the receptive-field tail of every conv layer,
 and all active streams share one batched, jitted step (one CIM macro, many
-users).  The streaming math is bit-exact with the offline executor — see
-tests/test_stream.py for the golden-equivalence proof.
+users).  Per-hop finalized logits are computed *inside* that step by the
+fused finalization tail, and the slot pool grows/shrinks elastically at
+power-of-two batch sizes.  The streaming math is bit-exact with the
+offline executor — see tests/test_stream.py for the golden-equivalence
+proof and docs/ARCHITECTURE.md for the full data-flow walkthrough.
 
 Modules:
   frontend   incremental PCM -> 8-bit offset-binary model frames
   state      stream plan, ring buffers, per-stream + batched conv state
-  scheduler  continuous-batching multi-stream scheduler (jitted step)
+  scheduler  elastic continuous-batching scheduler (jitted step with
+             in-jit finalization tail)
   detector   posterior smoothing + hysteresis/refractory event logic
   metrics    per-stream latency/throughput counters + energy estimates
+
+Quickstart — join / feed / poll / close (``pydoc repro.stream``):
+
+    import numpy as np
+    from repro.models import kws
+    from repro.stream import StreamScheduler
+
+    # any exported model works; here: untrained smoke-size weights
+    import jax
+    spec = kws.build_kws_smoke_spec()
+    params = kws.init_kws_params(jax.random.PRNGKey(0), spec)
+    weights, thresholds = kws.export_kws(params, spec)
+
+    sched = StreamScheduler(spec, weights, thresholds, capacity=64)
+    sid = sched.add_stream()                      # join (pool auto-grows)
+    mic = np.zeros(16000, np.uint8) + 128         # 1 s of silence codes
+    for i in range(0, len(mic), 160):
+        sched.push_audio(sid, mic[i : i + 160])   # feed ~10 ms chunks
+        for sid_, frame, logits, event in sched.step():   # poll
+            if event is not None:
+                print("keyword", event.cls, "on stream", sid_)
+    result = sched.close_stream(sid)              # flush; slot pool shrinks
+    print(result.logits)  # bit-exact with the offline executor
+
+Every ``step()`` advances all streams holding a full hop with ONE jitted
+batched call and returns ``(sid, frame, logits, event)`` per advanced
+stream, where ``logits`` are the exact logits the offline executor would
+produce if that stream's utterance ended at this hop.
 """
 from repro.stream.detector import Detection, DetectorConfig, PosteriorDetector
 from repro.stream.frontend import AudioFrontend, quantize_pcm
 from repro.stream.metrics import StreamMetrics
-from repro.stream.scheduler import StreamScheduler
+from repro.stream.scheduler import StreamResult, StreamScheduler
 from repro.stream.state import FrameRing, StreamPlan, StreamState, plan_stream
 
 __all__ = [
@@ -30,6 +62,7 @@ __all__ = [
     "PosteriorDetector",
     "StreamMetrics",
     "StreamPlan",
+    "StreamResult",
     "StreamScheduler",
     "StreamState",
     "plan_stream",

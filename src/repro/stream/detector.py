@@ -7,6 +7,12 @@ short window, a keyword fires only when the smoothed posterior crosses an
 posterior has fallen below a lower *off* threshold and a minimum number of
 frames has elapsed — classic hysteresis, so one utterance produces exactly
 one event instead of a burst.
+
+Two entry points feed the state machine: ``update`` takes raw logits and
+softmaxes them on the host, while ``update_posterior`` consumes posteriors
+that were already computed on-device — the scheduler's in-jit finalization
+tail emits softmax posteriors alongside the logits, so the per-hop hot
+path never re-derives them here.
 """
 from __future__ import annotations
 
@@ -58,9 +64,16 @@ class PosteriorDetector:
         return np.mean(np.stack(self._window), axis=0)
 
     def update(self, frame: int, logits: np.ndarray) -> Detection | None:
-        """Feed one frame of logits; returns a Detection iff one fires."""
+        """Feed one frame of raw logits (host-side softmax); returns a
+        Detection iff one fires."""
+        return self.update_posterior(frame, _softmax(np.asarray(logits)))
+
+    def update_posterior(self, frame: int,
+                         posterior: np.ndarray) -> Detection | None:
+        """Feed one frame of already-normalized posteriors (e.g. the
+        on-device softmax from the scheduler's finalization tail)."""
         cfg = self.cfg
-        self._window.append(_softmax(np.asarray(logits)))
+        self._window.append(np.asarray(posterior, np.float64))
         if len(self._window) < cfg.smooth_frames:
             # a partial window would let one confident-wrong frame (common
             # right after priming, when the field is mostly padding) bypass

@@ -1,11 +1,16 @@
 """Per-stream and fleet-level counters for the streaming runtime.
 
 Tracks what a serving dashboard needs — frames/sec, streams/sec, step
-latency percentiles, real-time factor — and bridges into the existing
-energy model (core/energy.py): each steady-state hop has a statically known
-MAC/SA budget from the StreamPlan, so the aggregator can report the
-silicon-equivalent energy/inference-second the fleet would draw, in the
-paper's Table-I accounting convention.
+latency percentiles, real-time factor, slot-pool resizes — and bridges
+into the existing energy model (core/energy.py): each steady-state hop has
+a statically known MAC/SA budget from the StreamPlan, so the aggregator
+can report the silicon-equivalent energy/inference-second the fleet would
+draw, in the paper's Table-I accounting convention.
+
+Step timing covers the whole per-hop pipeline *including* per-slot
+finalized logits: finalization runs inside the jitted step (the fused
+tail), so there is no separate host-side peek bucket to account for — the
+step latency percentile IS the hop-to-logits latency.
 """
 from __future__ import annotations
 
@@ -39,6 +44,7 @@ class StreamMetrics:
         self.retired: list[StreamCounters] = []  # closed tenants of reused sids
         self.step_wall_s: list[float] = []
         self.step_streams: list[int] = []
+        self.capacity_events: list[tuple[float, int]] = []  # (t, new_cap)
         self._t0 = time.perf_counter()
 
     # -- recording -----------------------------------------------------------
@@ -62,6 +68,12 @@ class StreamMetrics:
 
     def on_detection(self, sid: int) -> None:
         self.streams[sid].detections += 1
+
+    def on_resize(self, new_capacity: int) -> None:
+        """Elastic slot pool grew or shrank (scheduler._resize)."""
+        self.capacity_events.append(
+            (time.perf_counter() - self._t0, new_capacity)
+        )
 
     def on_close(self, sid: int) -> None:
         self.streams[sid].closed_at = time.perf_counter() - self._t0
@@ -88,6 +100,9 @@ class StreamMetrics:
             "step_ms_p95": float(np.percentile(wall, 95) * 1e3),
             "mean_batch_occupancy": float(np.mean(self.step_streams))
             if self.step_streams else 0.0,
+            "resizes": float(len(self.capacity_events)),
+            "capacity_last": float(self.capacity_events[-1][1])
+            if self.capacity_events else 0.0,
         }
 
     def energy_summary(self, params: EnergyParams | None = None) -> dict[str, float]:

@@ -2,8 +2,8 @@
 
 Thousands of concurrent audio streams each produce frames continuously;
 the model weights are shared across all of them (one CIM macro, many
-users).  This scheduler packs the active streams onto a fixed batch axis
-and advances them with ONE jitted step per hop:
+users).  This scheduler packs the active streams onto an *elastic* batch
+axis and advances them with ONE jitted step per hop:
 
   * streams join/leave at any time — a free slot is primed from the
     stream's first ``prime_samples`` (generic numpy path in state.py) and
@@ -11,14 +11,23 @@ and advances them with ONE jitted step per hop:
   * streams whose inbox holds less than a hop are masked out of the step
     (their state passes through untouched), so stragglers never force a
     re-trace — continuous batching, not synchronized batching;
+  * the slot pool grows and shrinks at power-of-two sizes (2 -> 4 -> ...
+    -> ``capacity``): a resize pads/slices the batched ring state along
+    the batch axis and lets jit re-trace at the new static shape, so
+    bursty arrivals are absorbed without provisioning for the peak and
+    results stay bit-exact across the resize boundary;
   * the batched step is built on the batched Pallas conv kernel
     (kernels/bnn_conv1d.bnn_conv1d_step_packed) or an equivalent pure-jnp
     einsum path (default on CPU, where Pallas runs interpreted).
 
-Per emitted hop the scheduler computes the stream's *finalized* logits
-(the exact logits the offline executor would produce if the utterance
-ended now — see StreamState.peek_logits), feeds the detector, and updates
-the metrics registry.
+Per emitted hop the step also runs the *in-jit finalization tail*: a ghost
+end-of-stream flush with statically known emission counts (the plan's
+``flush_*`` geometry) followed by the fused classifier tail
+(kernels/ops.classifier_tail), so every active slot's finalized logits —
+the exact logits the offline executor would produce if the utterance ended
+now — and softmax posteriors leave the device with the hop itself.  The
+host-side ``StreamState.peek_logits`` clone-and-flush survives only as the
+exact fallback for mid-hop peeks over leftover sub-hop samples.
 """
 from __future__ import annotations
 
@@ -61,64 +70,101 @@ class _Stream:
     frames: int = 0
 
 
-def _build_step(plan: StreamPlan, weights, thresholds, capacity: int,
-                backend: str, interpret: bool | None):
-    """One jitted batched hop: (audio, mask, tails, pendings, gap) ->
-    (tails', pendings', gap', frames).  All shapes static."""
-    B = capacity
-    stages = plan.convs
-    w_jnp = [jnp.asarray(weights[st.layer_idx].reshape(st.k, st.cin, st.cout),
-                         jnp.int32) for st in stages]
-    thr_jnp = [jnp.asarray(thresholds[st.layer_idx][0], jnp.float32)
-               for st in stages]
-    flip_jnp = [jnp.asarray(thresholds[st.layer_idx][1], bool)
-                for st in stages]
-    wsum = [jnp.sum(w, axis=(0, 1)) for w in w_jnp]  # offset fold, layer 0
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length()
 
-    def conv_raw(i: int, window: jax.Array) -> jax.Array:
-        """(B, tail+n_in, Cin) -> (B, n_conv, Cout) raw popcount diff."""
-        st = stages[i]
-        n = st.n_conv
+
+class _BatchedModel:
+    """Device-resident model + jitted batched hop/finalize for one plan.
+
+    Batch-size polymorphic: every entry point derives B from its operands,
+    so the elastic slot pool only pays one re-trace per power-of-two
+    capacity it ever visits (jit's shape-keyed cache does the rest).
+    """
+
+    def __init__(self, plan: StreamPlan, weights, thresholds,
+                 backend: str, interpret: bool | None) -> None:
+        self.plan = plan
+        self.backend = backend
+        self.interpret = interpret
+        stages = plan.convs
+        self._w = [
+            jnp.asarray(weights[st.layer_idx].reshape(st.k, st.cin, st.cout),
+                        jnp.int32) for st in stages
+        ]
+        self._thr = [jnp.asarray(thresholds[st.layer_idx][0], jnp.float32)
+                     for st in stages]
+        self._flip = [jnp.asarray(thresholds[st.layer_idx][1], bool)
+                      for st in stages]
+        self._wsum = [jnp.sum(w, axis=(0, 1)) for w in self._w]  # offset fold
+        self._fc_w = tuple(jnp.asarray(weights[st.layer_idx], jnp.int32)
+                           for st in plan.fcs)
+        self._fc_thr = tuple(jnp.asarray(thresholds[st.layer_idx][0],
+                                         jnp.float32) for st in plan.fcs)
+        self._fc_flip = tuple(jnp.asarray(thresholds[st.layer_idx][1],
+                                          jnp.int32) for st in plan.fcs)
+        self._fc_raw = tuple(st.out_raw for st in plan.fcs)
+        self.step = jax.jit(self._step, static_argnames=("emit",))
+        self.finalize = jax.jit(self._finalize)
+
+    # -- shared conv math ----------------------------------------------------
+
+    def _conv_raw(self, i: int, window: jax.Array, n_conv: int) -> jax.Array:
+        """(B, len, Cin) window -> (B, n_conv, Cout) raw popcount diff."""
+        st = self.plan.convs[i]
         if st.in_bits > 1:
             # bit-serial first layer; offset folds out after accumulation
-            if backend == "pallas":
+            if self.backend == "pallas":
                 acc = None
                 for b in range(st.in_bits):
                     plane = ((window >> b) & 1).astype(jnp.uint32)
                     d = ops.bnn_conv1d_batched(
-                        plane, w_jnp[i], stride=st.stride, pad=0,
-                        mode="raw", interpret=interpret,
+                        plane, self._w[i], stride=st.stride, pad=0,
+                        mode="raw", interpret=self.interpret,
                     )
                     acc = d * (1 << b) if acc is None else acc + d * (1 << b)
-                return acc - st.in_offset * wsum[i][None, None, :]
+                return acc - st.in_offset * self._wsum[i][None, None, :]
             xi = window.astype(jnp.int32) - st.in_offset
             taps = [
-                xi[:, t : t + (n - 1) * st.stride + 1 : st.stride]
+                xi[:, t : t + (n_conv - 1) * st.stride + 1 : st.stride]
                 for t in range(st.k)
             ]
-            xs = jnp.stack(taps, axis=1)  # (B, K, n, Cin)
-            return jnp.einsum("bknc,kco->bno", xs, w_jnp[i])
-        if backend == "pallas":
+            xs = jnp.stack(taps, axis=1)  # (B, K, n_conv, Cin)
+            return jnp.einsum("bknc,kco->bno", xs, self._w[i])
+        if self.backend == "pallas":
             return ops.bnn_conv1d_batched(
-                window.astype(jnp.uint32), w_jnp[i], stride=st.stride,
-                pad=0, mode="raw", interpret=interpret,
+                window.astype(jnp.uint32), self._w[i], stride=st.stride,
+                pad=0, mode="raw", interpret=self.interpret,
             )
         taps = [
-            window[:, t : t + (n - 1) * st.stride + 1 : st.stride]
+            window[:, t : t + (n_conv - 1) * st.stride + 1 : st.stride]
             for t in range(st.k)
         ]
         xs = jnp.stack(taps, axis=1).astype(jnp.int32)
-        return jnp.einsum("bknc,kco->bno", xs, w_jnp[i])
+        return jnp.einsum("bknc,kco->bno", xs, self._w[i])
 
-    def step(audio, mask, tails, pendings, gap):
-        cur = audio.reshape(B, plan.hop_samples, stages[0].cin)
+    def _sa(self, i: int, raw: jax.Array) -> jax.Array:
+        """SA binarization, executor-exact: integer thresholds make the
+        float32 compare knife-edge free."""
+        ge = raw.astype(jnp.float32) >= self._thr[i][None, None, :]
+        return jnp.where(
+            self._flip[i][None, None, :], ~ge, ge
+        ).astype(jnp.int32)
+
+    # -- the hop -------------------------------------------------------------
+
+    def _step(self, audio, mask, tails, pendings, gap, *, emit: bool):
+        """One batched hop; with ``emit`` the in-jit finalization tail also
+        returns per-slot finalized logits + posteriors.  Shapes static."""
+        plan = self.plan
+        stages = plan.convs
+        cur = audio.reshape(audio.shape[0], plan.hop_samples, stages[0].cin)
         new_tails, new_pendings = [], []
         for i, st in enumerate(stages):
             window = jnp.concatenate([tails[i], cur], axis=1)
-            raw = conv_raw(i, window)
+            raw = self._conv_raw(i, window, st.n_conv)
             new_tails.append(window[:, st.n_conv * st.stride :])
-            ge = raw.astype(jnp.float32) >= thr_jnp[i][None, None, :]
-            y = jnp.where(flip_jnp[i][None, None, :], ~ge, ge).astype(jnp.int32)
+            y = self._sa(i, raw)
             if st.pool > 1:
                 frames = (
                     jnp.concatenate([pendings[i], y], axis=1)
@@ -126,7 +172,7 @@ def _build_step(plan: StreamPlan, weights, thresholds, capacity: int,
                 )
                 used = st.n_out * st.pool
                 pooled = frames[:, :used].reshape(
-                    B, st.n_out, st.pool, st.cout
+                    frames.shape[0], st.n_out, st.pool, st.cout
                 ).max(axis=2)
                 new_pendings.append(frames[:, used:])
                 cur = pooled
@@ -146,13 +192,85 @@ def _build_step(plan: StreamPlan, weights, thresholds, capacity: int,
             for np_, p in zip(new_pendings, pendings)
         ]
         gap2 = jnp.where(mask[:, None], gap2, gap)
-        return tuple(new_tails), tuple(new_pendings), gap2, cur
+        state = tuple(new_tails), tuple(new_pendings), gap2
+        if not emit:
+            return state
+        # finalization tail on the merged state: masked-out rows hold their
+        # previous (still steady) state, so every primed slot's logits are
+        # valid — ready rows are simply the ones the scheduler reads
+        logits, post = self._finalize(*state)
+        return (*state, logits, post)
 
-    return jax.jit(step)
+    # -- in-jit finalization tail --------------------------------------------
+
+    def _finalize(self, tails, pendings, gap):
+        """Logits/posteriors as if every stream ended at this hop boundary.
+
+        A *ghost* end-of-stream flush — statically sized by the plan's
+        ``flush_*`` geometry — cascades each layer's right pad through the
+        conv stack without touching the live state, then the fused
+        classifier tail drains the saturated GAP counts through the fc
+        stack.  Bit-exact with ``StreamState.peek_logits()`` on an empty
+        inbox (tests/test_stream.py).
+        """
+        stages = self.plan.convs
+        B = gap.shape[0]
+        cur = None  # frames flowing down from the layer above's flush
+        for i, st in enumerate(stages):
+            pieces = [tails[i]]
+            if cur is not None and st.flush_in:
+                pieces.append(cur)
+            if st.pad:
+                pad_val = st.in_offset if st.in_bits > 1 else 0
+                pieces.append(
+                    jnp.full((B, st.pad, st.cin), pad_val, jnp.int32)
+                )
+            if st.flush_conv > 0:
+                window = jnp.concatenate(pieces, axis=1)
+                y = self._sa(i, self._conv_raw(i, window, st.flush_conv))
+            else:
+                y = jnp.zeros((B, 0, st.cout), jnp.int32)
+            frames = jnp.concatenate([pendings[i], y], axis=1)
+            used = st.flush_out * st.pool  # drop-remainder (ref_maxpool1d)
+            cur = frames[:, :used].reshape(
+                B, st.flush_out, st.pool, st.cout
+            ).max(axis=2)
+        gap_f = jnp.minimum(gap + cur.sum(axis=1, dtype=jnp.int32), 255)
+        logits = self._classifier(gap_f)
+        post = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        return logits, post
+
+    def _classifier(self, gap_f: jax.Array) -> jax.Array:
+        """Saturated GAP counts (B, C) -> raw logits (B, n_classes)."""
+        if self.backend == "pallas":
+            return ops.classifier_tail(
+                gap_f, self._fc_w, self._fc_thr, self._fc_flip,
+                out_raw=self._fc_raw, interpret=self.interpret,
+            )
+        h = gap_f
+        for j, st in enumerate(self.plan.fcs):
+            raw = h @ self._fc_w[j]
+            if st.out_raw:
+                h = raw
+            else:
+                ge = raw.astype(jnp.float32) >= self._fc_thr[j][None, :]
+                h = jnp.where(
+                    self._fc_flip[j][None, :] != 0, ~ge, ge
+                ).astype(jnp.int32)
+        return h
 
 
 class StreamScheduler:
-    """Continuous batching over a fixed number of stream slots."""
+    """Continuous batching over an elastic pool of stream slots.
+
+    ``capacity`` is the *ceiling*: the pool starts at ``initial_capacity``
+    (default ``min(2, capacity)``) and doubles on demand up to the ceiling;
+    ``close_stream`` halves it once occupancy falls to a quarter (never
+    below ``min_capacity`` — set ``min_capacity == capacity`` to pin a
+    fixed-size pool).  Each resize is a pure pad/slice of the batched ring
+    state, so a stream fed across a resize boundary produces bit-identical
+    logits to one fed at a fixed capacity.
+    """
 
     def __init__(
         self,
@@ -166,46 +284,127 @@ class StreamScheduler:
         detector_cfg: DetectorConfig | None = None,
         emit_logits: bool = True,
         sample_rate: int = 16000,
+        initial_capacity: int | None = None,
+        min_capacity: int | None = None,
     ) -> None:
         assert backend in ("jnp", "pallas"), backend
         self.plan = plan_stream(spec, hop_frames=hop_frames)
         self.weights = {k: np.asarray(v) for k, v in weights.items()}
         self.thresholds = thresholds
-        self.capacity = capacity
+        self.max_capacity = capacity
         self.backend = backend
         self.detector_cfg = detector_cfg or DetectorConfig()
         self.emit_logits = emit_logits
         self.metrics = StreamMetrics(self.plan, sample_rate)
-        self._step_fn = _build_step(
-            self.plan, self.weights, thresholds, capacity, backend, interpret
+        self._model = _BatchedModel(
+            self.plan, self.weights, thresholds, backend, interpret
         )
 
+        self._min_capacity = (
+            min_capacity if min_capacity is not None else min(2, capacity)
+        )
+        assert 1 <= self._min_capacity <= capacity
+        cap0 = initial_capacity if initial_capacity is not None else (
+            self._min_capacity
+        )
+        assert self._min_capacity <= cap0 <= capacity, (cap0, capacity)
         # batched state lives device-resident between hops; host copies are
-        # made only on join/leave/peek (lifecycle events, not the hot loop)
-        B = capacity
+        # made only on join/leave or fallback peeks — never the hot loop
+        self._capacity = cap0
         self._tails = [
-            jnp.zeros((B, st.tail, st.cin), jnp.int32) for st in self.plan.convs
-        ]
-        self._pendings = [
-            jnp.zeros((B, st.phase, st.cout), jnp.int32)
+            jnp.zeros((cap0, st.tail, st.cin), jnp.int32)
             for st in self.plan.convs
         ]
-        self._gap = jnp.zeros((B, self.plan.gap_channels), jnp.int32)
-        self._slots: list[int | None] = [None] * B
+        self._pendings = [
+            jnp.zeros((cap0, st.phase, st.cout), jnp.int32)
+            for st in self.plan.convs
+        ]
+        self._gap = jnp.zeros((cap0, self.plan.gap_channels), jnp.int32)
+        self._slots: list[int | None] = [None] * cap0
         self._streams: dict[int, _Stream] = {}
         self._next_sid = 0
+
+    # -- elastic slot pool ---------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        """Current pool size (<= ``max_capacity``)."""
+        return self._capacity
+
+    def _resize(self, new_cap: int) -> None:
+        """Pure pad/slice of the batched state to ``new_cap`` slots.
+
+        Rows travel unchanged (a slot's math never depends on the batch
+        size), so resizes are invisible to the streams riding through them;
+        jit re-traces once per power-of-two capacity visited.
+        """
+        old = self._capacity
+        if new_cap == old:
+            return
+        if new_cap > old:
+            grow = new_cap - old
+            self._tails = [
+                jnp.pad(t, ((0, grow), (0, 0), (0, 0))) for t in self._tails
+            ]
+            self._pendings = [
+                jnp.pad(p, ((0, grow), (0, 0), (0, 0)))
+                for p in self._pendings
+            ]
+            self._gap = jnp.pad(self._gap, ((0, grow), (0, 0)))
+            self._slots.extend([None] * grow)
+        else:
+            # compact tenants out of the doomed upper slots, then slice;
+            # vacated destinations are already zero (scrubbed on close)
+            free_low = [i for i in range(new_cap) if self._slots[i] is None]
+            moves: list[tuple[int, int]] = []
+            for slot in range(new_cap, old):
+                sid = self._slots[slot]
+                if sid is None:
+                    continue
+                dst = free_low.pop(0)
+                moves.append((dst, slot))
+                self._slots[dst] = sid
+                self._slots[slot] = None
+                self._streams[sid].slot = dst
+
+            def shrink(a):
+                for dst, src in moves:
+                    a = a.at[dst].set(a[src])
+                return a[:new_cap]
+
+            self._tails = [shrink(t) for t in self._tails]
+            self._pendings = [shrink(p) for p in self._pendings]
+            self._gap = shrink(self._gap)
+            del self._slots[new_cap:]
+        self._capacity = new_cap
+        self.metrics.on_resize(new_cap)
+        log.info("slot pool resized %d -> %d (%d active)",
+                 old, new_cap, len(self._streams))
+
+    def _maybe_shrink(self) -> None:
+        cap = self._capacity
+        while cap > self._min_capacity and len(self._streams) <= cap // 4:
+            cap //= 2
+        cap = max(cap, self._min_capacity, _next_pow2(len(self._streams)))
+        if cap < self._capacity:
+            self._resize(cap)
 
     # -- stream lifecycle ----------------------------------------------------
 
     def add_stream(self, sid: int | None = None,
                    frontend_cfg: FrontendConfig | None = None) -> int:
-        """Claim a free slot for a new stream; returns the stream id."""
+        """Claim a slot for a new stream (growing the pool if needed);
+        returns the stream id."""
         try:
             slot = self._slots.index(None)
         except ValueError:
-            raise MemoryError(
-                f"all {self.capacity} stream slots busy; close a stream first"
-            ) from None
+            if self._capacity >= self.max_capacity:
+                raise MemoryError(
+                    f"all {self.max_capacity} stream slots busy; "
+                    "close a stream first"
+                ) from None
+            self._resize(min(self._capacity * 2, self.max_capacity))
+            slot = self._slots.index(None)
         sid = self._next_sid if sid is None else sid
         assert sid not in self._streams, f"stream {sid} already exists"
         self._next_sid = max(self._next_sid, sid) + 1
@@ -281,7 +480,9 @@ class StreamScheduler:
         """Advance every stream that has a full hop buffered.
 
         Returns one (sid, frame_idx, logits, detection) tuple per advanced
-        stream; logits is None when ``emit_logits`` is off.
+        stream; logits is None when ``emit_logits`` is off.  With
+        ``emit_logits`` the logits/posteriors come from the in-jit
+        finalization tail — no host-side re-inference per hop.
         """
         self._prime_ready()  # numpy warm-up path, excluded from step timing
         hop = self.plan.hop_samples
@@ -292,32 +493,40 @@ class StreamScheduler:
         if not ready:
             return []
         t0 = time.perf_counter()
-        B = self.capacity
+        B = self._capacity
         audio = np.zeros((B, hop), np.int32)
         mask = np.zeros((B,), bool)
         for s in ready:
             audio[s.slot] = s.frontend.pop(hop)
             mask[s.slot] = True
 
-        tails, pendings, gap, _frames = self._step_fn(
+        args = (
             jnp.asarray(audio), jnp.asarray(mask),
             tuple(self._tails), tuple(self._pendings), self._gap,
         )
+        logits_h = post_h = None
+        if self.emit_logits:
+            tails, pendings, gap, logits, post = self._model.step(
+                *args, emit=True
+            )
+            logits_h = np.asarray(logits)  # one bulk transfer per hop
+            post_h = np.asarray(post)
+        else:
+            tails, pendings, gap = self._model.step(*args, emit=False)
         self._tails = list(tails)
         self._pendings = list(pendings)
         self._gap = gap
 
         out = []
-        host = self._host_state() if self.emit_logits else None
         for s in ready:
             s.frames += self.plan.frames_per_hop
-            logits = det = None
+            logits_row = det = None
             if self.emit_logits:
-                logits = self._peek_stream(s, host)
-                det = s.detector.update(s.frames, logits)
+                logits_row = logits_h[s.slot].copy()
+                det = s.detector.update_posterior(s.frames, post_h[s.slot])
                 if det is not None:
                     self.metrics.on_detection(s.sid)
-            out.append((s.sid, s.frames, logits, det))
+            out.append((s.sid, s.frames, logits_row, det))
         self.metrics.on_step(
             [s.sid for s in ready], self.plan.frames_per_hop,
             time.perf_counter() - t0,
@@ -338,19 +547,30 @@ class StreamScheduler:
 
     def peek(self, sid: int) -> np.ndarray:
         """Finalized logits if the stream ended now (inbox included) —
-        bit-exact with the offline executor on the audio pushed so far."""
-        return self._peek_stream(self._streams[sid], None)
+        bit-exact with the offline executor on the audio pushed so far.
 
-    def _peek_stream(self, s: _Stream, host) -> np.ndarray:
+        On a hop boundary (empty inbox) this reads the in-jit finalization
+        tail; with leftover sub-hop samples it drops to the exact numpy
+        fallback (``StreamState.peek_logits``)."""
+        s = self._streams[sid]
+        if s.primed and len(s.frontend) == 0:
+            logits, _ = self._model.finalize(
+                tuple(self._tails), tuple(self._pendings), self._gap
+            )
+            return np.asarray(logits[s.slot])
+        return self._peek_fallback(s)
+
+    def _peek_fallback(self, s: _Stream) -> np.ndarray:
         if s.primed:
-            st = self._extract_slot(s, host)
+            st = self._extract_slot(s)
         else:
             st = StreamState(self.plan, self.weights, self.thresholds)
         leftover = s.frontend.peek_all() if len(s.frontend) else None
         return st.peek_logits(leftover)
 
     def close_stream(self, sid: int) -> StreamResult:
-        """Flush (right-pad + drop incomplete pools), free the slot."""
+        """Flush (right-pad + drop incomplete pools), free the slot, and
+        shrink the pool once occupancy drops to a quarter."""
         s = self._streams.pop(sid)
         if s.primed:
             st = self._extract_slot(s)
@@ -364,6 +584,7 @@ class StreamScheduler:
         self._slots[s.slot] = None
         self._clear_slot(s.slot)  # scrub so the next tenant starts clean
         self.metrics.on_close(sid)
+        self._maybe_shrink()
         return StreamResult(
             stream_id=sid,
             logits=logits,

@@ -14,10 +14,13 @@ Steady-state geometry (``plan_stream``): once a stream has been primed with
 ``prime_samples``, every hop of ``hop_samples`` audio makes each layer
 consume/emit a *constant* number of frames and keeps each tail at a
 *constant* length with a *constant* pool phase.  That is what lets the
-scheduler run one jitted batched step with fully static shapes.  Priming,
-odd-sized chunks, end-of-stream flush and mid-stream peeks run through the
-generic numpy path in ``StreamState`` — the bit-exact reference
-implementation of the same math.
+scheduler run one jitted batched step with fully static shapes — including
+the per-hop *finalization tail* (ghost flush + classifier), whose emission
+counts are the ``flush_*`` fields below.  Priming, odd-sized chunks,
+end-of-stream flush and mid-hop peeks over leftover (sub-hop) samples run
+through the generic numpy path in ``StreamState`` — the bit-exact
+reference implementation of the same math, kept as the oracle and the
+exact fallback.
 
 Bit-exactness contract with core/executor.py (verified in test_stream.py):
   * layer-0 spatial padding uses the offset code (ref_bitserial_conv1d)
@@ -116,7 +119,15 @@ class FrameRing:
 
 @dataclasses.dataclass(frozen=True)
 class ConvStage:
-    """One conv layer's static streaming geometry."""
+    """One conv layer's static streaming geometry.
+
+    The ``flush_*`` fields describe the *finalization tail*: the extra work
+    an end-of-stream flush performs from the steady state (append the right
+    pad, convolve what fits, pool with drop-remainder).  Because the steady
+    tail/phase lengths are constants of the plan, so are these counts —
+    which is what lets the scheduler compute "logits as if the stream ended
+    now" *inside* the jitted batched step instead of on the host.
+    """
 
     layer_idx: int
     name: str
@@ -133,6 +144,9 @@ class ConvStage:
     n_in: int      # frames consumed per hop
     n_conv: int    # conv positions emitted per hop
     n_out: int     # pooled frames emitted per hop
+    flush_in: int    # extra frames received from the layer above at flush
+    flush_conv: int  # extra conv positions a flush emits (tail + right pad)
+    flush_out: int   # extra pooled frames a flush emits (remainder dropped)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -282,6 +296,17 @@ def plan_stream(
             f"hop {hop} / prime {prime_samples} does not reach steady state"
         )
 
+    # finalization-tail geometry: what an end-of-stream flush emits from the
+    # steady state (mirrors StreamState._advance_once with flush=True)
+    flush_geom = []
+    f_in = 0
+    for i, (_, L) in enumerate(convs):
+        avail = tails[i] + f_in + L.pad  # tail ++ upstream flush ++ right pad
+        f_conv = (avail - L.k) // L.stride + 1 if avail >= L.k else 0
+        f_out = (phases[i] + f_conv) // L.pool
+        flush_geom.append((f_in, f_conv, f_out))
+        f_in = f_out
+
     stages = []
     n_in = hop
     for i, (li, L) in enumerate(convs):
@@ -297,6 +322,8 @@ def plan_stream(
                 pool=L.pool, cin=L.cin, cout=L.cout, in_bits=L.in_bits,
                 in_offset=L.in_offset, tail=tails[i], phase=phases[i],
                 n_in=n_in, n_conv=n_conv, n_out=n_conv // L.pool,
+                flush_in=flush_geom[i][0], flush_conv=flush_geom[i][1],
+                flush_out=flush_geom[i][2],
             )
         )
         assert n_conv * L.stride == n_in, (L.name, n_conv, n_in)
@@ -463,7 +490,13 @@ class StreamState:
     def peek_logits(self, extra_samples: np.ndarray | None = None) -> np.ndarray:
         """Logits as if the stream ended now (plus ``extra_samples``),
         without disturbing the live state — the per-frame logits contract:
-        peek after feeding audio[:L] == offline executor on audio[:L]."""
+        peek after feeding audio[:L] == offline executor on audio[:L].
+
+        This is the *exact fallback* path: the scheduler computes per-hop
+        finalized logits inside the jitted batched step (the fused
+        finalization tail) and only drops to this clone-and-flush numpy
+        path for mid-hop peeks that must include leftover sub-hop samples,
+        or for streams that are not yet primed."""
         ghost = self.clone()
         if extra_samples is None:
             extra_samples = np.zeros((0,), np.int32)

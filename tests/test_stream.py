@@ -1,6 +1,7 @@
 """Streaming runtime (repro.stream): golden equivalence with the offline
-executor, ring-buffer wraparound, mid-batch join/leave, detector hysteresis,
-and the batched Pallas kernel."""
+executor, ring-buffer wraparound, mid-batch join/leave, the in-jit
+finalization tail (per-hop logits == offline prefix), elastic slot-pool
+resize boundaries, detector hysteresis, and the batched Pallas kernels."""
 import itertools
 
 import jax
@@ -19,6 +20,7 @@ from repro.stream import (
     StreamState,
     plan_stream,
 )
+from repro.stream.detector import _softmax
 
 RNG = np.random.default_rng(7)
 
@@ -61,6 +63,28 @@ def test_plan_steady_state_geometry(smoke):
     # larger hops scale every stage linearly
     plan4 = plan_stream(spec, hop_frames=4)
     assert plan4.hop_samples == 256 and plan4.frames_per_hop == 4
+
+
+def test_plan_flush_geometry(smoke):
+    """The static finalization-tail counts must match both the count model
+    and what a real numpy flush emits from the steady state."""
+    spec, weights, thresholds, _ = smoke
+    for hf in (1, 4):
+        plan = plan_stream(spec, hop_frames=hf)
+        f_in = 0
+        for st in plan.convs:
+            assert st.flush_in == f_in
+            avail = st.tail + f_in + st.pad
+            want = (avail - st.k) // st.stride + 1 if avail >= st.k else 0
+            assert st.flush_conv == want
+            assert st.flush_out == (st.phase + st.flush_conv) // st.pool
+            f_in = st.flush_out
+        # a primed stream's ghost flush emits exactly flush_out final frames
+        st0 = StreamState(plan, weights, thresholds)
+        st0.advance(_clip(spec, 9)[: plan.prime_samples + plan.hop_samples])
+        ghost = st0.clone()
+        emitted = ghost.advance(np.zeros((0,), np.int32), flush=True)
+        assert emitted.shape[0] == plan.convs[-1].flush_out
 
 
 # ---------------------------------------------------------------------------
@@ -210,6 +234,142 @@ def test_scheduler_capacity_enforced(smoke):
 
 
 # ---------------------------------------------------------------------------
+# In-jit finalization tail: per-hop logits == offline executor on the prefix
+# ---------------------------------------------------------------------------
+
+def test_scheduler_hop_logits_match_offline_prefix(smoke):
+    """Each hop's emitted logits (computed on-device by the fused
+    finalization tail) equal an offline executor run over exactly the
+    samples consumed so far."""
+    spec, weights, thresholds, _ = smoke
+    sched = StreamScheduler(spec, weights, thresholds, capacity=2)
+    plan = sched.plan
+    x = _clip(spec, 40)
+    sid = sched.add_stream()
+    sched.push_audio(sid, x[: spec.in_len // 2])
+    outs = sched.run_until_starved()
+    assert len(outs) >= 2
+    for hop_i in (0, len(outs) - 1):  # first and latest hop boundaries
+        consumed = plan.prime_samples + (hop_i + 1) * plan.hop_samples
+        spec_l = kws.build_kws_spec(in_len=consumed, width=16)
+        prog_l = compiler.compile_model(spec_l, weights, thresholds)
+        np.testing.assert_array_equal(
+            outs[hop_i][2], _offline(prog_l, x[:consumed])
+        )
+
+
+def test_scheduler_peek_on_hop_boundary_uses_device_tail(smoke):
+    """peek() with an empty inbox reads the in-jit tail and must agree with
+    the logits emitted at the last hop."""
+    spec, weights, thresholds, _ = smoke
+    sched = StreamScheduler(spec, weights, thresholds, capacity=2)
+    plan = sched.plan
+    x = _clip(spec, 41)
+    sid = sched.add_stream()
+    sched.push_audio(sid, x[: plan.prime_samples + 2 * plan.hop_samples])
+    outs = sched.run_until_starved()
+    assert len(outs) == 2 and len(sched._streams[sid].frontend) == 0
+    np.testing.assert_array_equal(sched.peek(sid), outs[-1][2])
+
+
+def test_scheduler_pallas_hop_logits_match_jnp(smoke):
+    """The pallas step + fused classifier-tail kernel emit the same per-hop
+    logits as the jnp reference path."""
+    spec, weights, thresholds, _ = smoke
+    x = _clip(spec, 42)
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        sched = StreamScheduler(spec, weights, thresholds, capacity=2,
+                                hop_frames=4, backend=backend)
+        sid = sched.add_stream()
+        sched.push_audio(sid, x)
+        outs[backend] = sched.run_until_starved()
+    assert len(outs["jnp"]) == len(outs["pallas"]) >= 1
+    for a, b in zip(outs["jnp"], outs["pallas"]):
+        assert a[:2] == b[:2]
+        np.testing.assert_array_equal(a[2], b[2])
+
+
+# ---------------------------------------------------------------------------
+# Elastic slot pool: grow/shrink resize boundaries are bit-exact
+# ---------------------------------------------------------------------------
+
+def test_scheduler_elastic_capacity_lifecycle(smoke):
+    spec, weights, thresholds, _ = smoke
+    sched = StreamScheduler(spec, weights, thresholds, capacity=4)
+    assert sched.capacity == 2 and sched.max_capacity == 4
+    sids = [sched.add_stream() for _ in range(4)]  # forces a 2 -> 4 grow
+    assert sched.capacity == 4
+    with pytest.raises(MemoryError):
+        sched.add_stream()  # ceiling still enforced
+    for sid in sids:
+        sched.close_stream(sid)
+    assert sched.capacity == 2  # pool shrank back
+    assert sched.metrics.summary()["resizes"] >= 2.0
+
+
+def test_scheduler_grow_shrink_bitexact(smoke):
+    """A stream fed across a 4->8 grow and an 8->4 shrink produces per-hop
+    and flushed logits bit-identical to a fixed-capacity run."""
+    spec, weights, thresholds, prog = smoke
+    clips = {j: _clip(spec, 60 + j) for j in range(8)}
+    want = {j: _offline(prog, clips[j]) for j in range(8)}
+    el = StreamScheduler(spec, weights, thresholds, capacity=8,
+                         initial_capacity=4)
+    fx = StreamScheduler(spec, weights, thresholds, capacity=8,
+                         initial_capacity=8, min_capacity=8)  # pinned pool
+
+    def lockstep(stage):
+        a = el.run_until_starved()
+        b = fx.run_until_starved()
+        assert len(a) == len(b), stage
+        for ea, eb in zip(a, b):
+            assert ea[:2] == eb[:2], stage
+            np.testing.assert_array_equal(ea[2], eb[2])
+        return a
+
+    # 4 streams fit the elastic pool's initial capacity exactly
+    for sched in (el, fx):
+        sids = [sched.add_stream() for _ in range(4)]
+        assert sids == list(range(4))
+        for j in range(4):
+            sched.push_audio(j, clips[j][:300])
+    lockstep("warm")
+    assert el.capacity == 4
+
+    # 4 more join -> elastic pool grows 4 -> 8 with streams 0..3 mid-flight
+    for sched in (el, fx):
+        for j in range(4, 8):
+            assert sched.add_stream() == j
+            sched.push_audio(j, clips[j][:600] if j >= 6 else clips[j])
+        for j in range(4):
+            sched.push_audio(j, clips[j][300:])
+    lockstep("grow")
+    assert el.capacity == 8
+
+    # streams 0..5 leave -> pool shrinks 8 -> 4, relocating the survivors
+    # (sids 6/7) out of the doomed upper slots
+    for sched in (el, fx):
+        for j in range(6):
+            res = sched.close_stream(j)
+            np.testing.assert_array_equal(res.logits, want[j])
+    assert el.capacity == 4 and fx.capacity == 8
+    assert {el._streams[j].slot for j in (6, 7)} <= {0, 1, 2, 3}
+
+    # survivors keep streaming across the shrink boundary, then flush
+    for sched in (el, fx):
+        for j in (6, 7):
+            sched.push_audio(j, clips[j][600:])
+    lockstep("shrink")
+    for sched in (el, fx):
+        for j in (6, 7):
+            res = sched.close_stream(j)
+            np.testing.assert_array_equal(res.logits, want[j])
+    grows = [c for _, c in el.metrics.capacity_events]
+    assert 8 in grows and 4 in grows  # both directions actually happened
+
+
+# ---------------------------------------------------------------------------
 # Batched Pallas kernel vs oracle
 # ---------------------------------------------------------------------------
 
@@ -238,6 +398,31 @@ def test_bnn_conv1d_batched_kernel(b, l, cin, cout, k, stride, pad, pool):
         for i in range(b)
     ])
     np.testing.assert_array_equal(np.asarray(sa), np.asarray(want))
+
+
+def test_classifier_tail_kernel_matches_oracle():
+    """Fused GAP-saturate + fc cascade kernel vs StreamState.logits math."""
+    rng = np.random.default_rng(11)
+    b, c, h_dim, ncls = 5, 24, 40, 12
+    gap = rng.integers(0, 400, (b, c)).astype(np.int32)  # exceeds 255 ceiling
+    w1 = rng.integers(-1, 2, (c, h_dim)).astype(np.int32)
+    w2 = rng.integers(-1, 2, (h_dim, ncls)).astype(np.int32)
+    thr1 = rng.integers(-5, 6, (h_dim,)).astype(np.float64)
+    flip1 = rng.integers(0, 2, (h_dim,)).astype(bool)
+    # numpy oracle: int64 math, float64 compare (StreamState.logits)
+    h = np.minimum(gap.astype(np.int64), 255)
+    raw = h @ w1.astype(np.int64)
+    ge = raw >= thr1[None, :]
+    h = np.where(flip1[None, :], ~ge, ge).astype(np.int64)
+    want = h @ w2.astype(np.int64)
+    got = ops.classifier_tail(
+        jnp.asarray(gap),
+        (jnp.asarray(w1), jnp.asarray(w2)),
+        (jnp.asarray(thr1, jnp.float32), jnp.zeros((ncls,), jnp.float32)),
+        (jnp.asarray(flip1, jnp.int32), jnp.zeros((ncls,), jnp.int32)),
+        out_raw=(False, True),
+    )
+    np.testing.assert_array_equal(np.asarray(got), want.astype(np.int32))
 
 
 def test_scheduler_pallas_backend_matches_offline(smoke):
@@ -312,6 +497,25 @@ def test_detector_smoothing_suppresses_single_frame_glitch():
     assert det.update(4, _logit(6)) is None
     assert det.update(5, _logit(11)) is None
     assert det.events == []
+
+
+def test_detector_update_posterior_matches_update():
+    """Feeding device-computed posteriors must drive the state machine
+    exactly like feeding raw logits (the scheduler's per-hop path)."""
+    cfg = DetectorConfig(smooth_frames=2, on_threshold=0.4,
+                         off_threshold=0.2, refractory_frames=3)
+    via_logits = PosteriorDetector(0, cfg)
+    via_post = PosteriorDetector(0, cfg)
+    rng = np.random.default_rng(13)
+    for f in range(40):
+        z = rng.normal(0, 8, 12)
+        ea = via_logits.update(f, z)
+        eb = via_post.update_posterior(f, _softmax(z))
+        assert (ea is None) == (eb is None)
+    assert [(e.cls, e.frame) for e in via_logits.events] == [
+        (e.cls, e.frame) for e in via_post.events
+    ]
+    assert via_logits.events  # the random walk actually fired
 
 
 def test_detector_hysteresis_rearm_requires_decay():
