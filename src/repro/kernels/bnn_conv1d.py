@@ -124,6 +124,14 @@ def bnn_conv1d_packed(
 # "weights stay resident in the macro, activations stream past" economics of
 # the silicon, so the batch dimension rides free through the Pallas grid
 # (one extra grid axis, zero extra weight traffic).
+#
+# Shard-safety contract: pallas_call is opaque to GSPMD, so these kernels
+# must never see a mesh-sharded operand directly.  Under the mesh-wide slot
+# pool each device invokes the kernel on its LOCAL block of batch rows via
+# the shard_map entry points (ops.bnn_conv1d_batched_sharded /
+# ops.classifier_tail_sharded); per-shard batches can be as small as one
+# row, which the ops-layer entry points absorb (batch-block clamp for the
+# conv step, pad-to-block for the classifier tail).
 # ---------------------------------------------------------------------------
 
 DEFAULT_BB = 8

@@ -272,6 +272,102 @@ def bnn_conv1d_batched(
 
 
 # ---------------------------------------------------------------------------
+# Shard-safe batched entry points (mesh-wide slot pool)
+# ---------------------------------------------------------------------------
+#
+# pallas_call is opaque to GSPMD: called on operands sharded over a mesh it
+# would force an all-gather (or fail to partition).  The shard-safe entry
+# points wrap the batched kernels in shard_map over the mesh's data axes,
+# so each device runs the kernel on its *local* block of batch rows with
+# the (replicated) weights — zero collectives, exactly the semantics of
+# the slot pool where a stream's math never leaves its shard.
+
+def _shard_map():
+    try:  # moved out of experimental after 0.4.x
+        from jax import shard_map  # type: ignore[attr-defined]
+        return shard_map
+    except ImportError:  # pragma: no cover - depends on jax version
+        from jax.experimental.shard_map import shard_map
+        return shard_map
+
+
+def _batch_spec(mesh):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import dp_axes
+    # a PartitionSpec entry takes a tuple of axis names directly
+    return P(dp_axes(mesh)), P()
+
+
+def _data_size(mesh) -> int:
+    from repro.launch.mesh import dp_size
+    return dp_size(mesh)
+
+
+def bnn_conv1d_batched_sharded(
+    x_bits: jax.Array,
+    w_t: jax.Array,
+    thr: jax.Array | None = None,
+    flip: jax.Array | None = None,
+    *,
+    mesh=None,
+    stride: int = 1,
+    pad: int = 0,
+    pool: int = 1,
+    mode: str = "sa",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``bnn_conv1d_batched`` with the batch axis sharded over ``mesh``.
+
+    Each shard convolves its own rows; weights/thresholds are replicated.
+    With no mesh (or a 1-device mesh) this IS ``bnn_conv1d_batched`` —
+    the single-device path stays byte-identical.
+    """
+    kw = dict(stride=stride, pad=pad, pool=pool, mode=mode,
+              interpret=interpret)
+    if mesh is None or _data_size(mesh) == 1:
+        return bnn_conv1d_batched(x_bits, w_t, thr, flip, **kw)
+    bspec, rep = _batch_spec(mesh)
+    if mode == "sa":
+        fn = lambda x, w, t, f: bnn_conv1d_batched(x, w, t, f, **kw)
+        return _shard_map()(
+            fn, mesh=mesh, in_specs=(bspec, rep, rep, rep),
+            out_specs=bspec, check_rep=False,
+        )(x_bits, w_t, thr, flip)
+    fn = lambda x, w: bnn_conv1d_batched(x, w, **kw)
+    return _shard_map()(
+        fn, mesh=mesh, in_specs=(bspec, rep), out_specs=bspec,
+        check_rep=False,
+    )(x_bits, w_t)
+
+
+def classifier_tail_sharded(
+    gap: jax.Array,
+    fc_ws: tuple[jax.Array, ...],
+    fc_thrs: tuple[jax.Array, ...],
+    fc_flips: tuple[jax.Array, ...],
+    *,
+    mesh=None,
+    out_raw: tuple[bool, ...],
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``classifier_tail`` over a mesh-sharded batch of GAP counts."""
+    if mesh is None or _data_size(mesh) == 1:
+        return classifier_tail(gap, fc_ws, fc_thrs, fc_flips,
+                               out_raw=out_raw, interpret=interpret)
+    bspec, rep = _batch_spec(mesh)
+    n = len(fc_ws)
+    fn = lambda g, ws, ts, fs: classifier_tail(
+        g, ws, ts, fs, out_raw=out_raw, interpret=interpret
+    )
+    return _shard_map()(
+        fn, mesh=mesh,
+        in_specs=(bspec, (rep,) * n, (rep,) * n, (rep,) * n),
+        out_specs=bspec, check_rep=False,
+    )(gap, tuple(fc_ws), tuple(fc_thrs), tuple(fc_flips))
+
+
+# ---------------------------------------------------------------------------
 # Fused classifier tail (repro.stream in-jit finalization)
 # ---------------------------------------------------------------------------
 

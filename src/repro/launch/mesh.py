@@ -41,6 +41,30 @@ def make_host_mesh(model_parallel: int = 1):
     )
 
 
+def make_stream_mesh(n_shards: int | None = None):
+    """1-D data-parallel mesh for the streaming runtime's slot pool.
+
+    The streaming model is tiny and always replicated (one CIM macro's
+    weights serve every user), so there is no 'model' axis: the mesh is a
+    flat ``("data",)`` axis and the slot pool's batch dimension shards over
+    it — one logical pool spanning the whole mesh instead of one pool per
+    device.  Defaults to every visible device; force a multi-device host
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    n = jax.device_count() if n_shards is None else n_shards
+    if n > jax.device_count():
+        raise ValueError(
+            f"{n} shards > {jax.device_count()} devices (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} before jax init)"
+        )
+    if n == jax.device_count():
+        return jax.make_mesh((n,), ("data",), **_axis_kw(1))
+    # a strict prefix of the device list (tests sweep 1/2/8-shard meshes)
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(jax.devices()[:n]), ("data",))
+
+
 def dp_axes(mesh) -> tuple[str, ...]:
     """The data-parallel axes of a mesh (everything except 'model')."""
     return tuple(a for a in mesh.axis_names if a != "model")

@@ -1,7 +1,7 @@
 """Render results/dryrun/*.json into the EXPERIMENTS.md §Roofline markdown
-table.
+table, plus the streaming-runtime table from BENCH_stream.json.
 
-  PYTHONPATH=src python -m repro.launch.report [results/dryrun]
+  PYTHONPATH=src python -m repro.launch.report [results/dryrun] [BENCH_stream.json]
 """
 from __future__ import annotations
 
@@ -14,47 +14,112 @@ def fmt_s(x: float) -> str:
     return f"{x*1e3:.1f}ms" if x < 1 else f"{x:.2f}s"
 
 
-def main() -> None:
-    d = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
-    cells = []
-    for p in sorted(d.glob("*.json")):
-        cells.append(json.loads(p.read_text()))
-
-    print("| arch | shape | mesh | peak GB/dev | compute | memory | "
-          "collective | dominant | useful | status |")
-    print("|---|---|---|---|---|---|---|---|---|---|")
+def roofline_lines(cells: list[dict]) -> list[str]:
+    out = [
+        "| arch | shape | mesh | peak GB/dev | compute | memory | "
+        "collective | dominant | useful | status |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
     n_ok = n_fail = n_skip = 0
     for c in cells:
         if c["status"] == "skip":
             n_skip += 1
-            print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — "
-                  f"| — | — | — | skip (full-attn @500k) |")
+            out.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — "
+                f"| — | — | — | skip (full-attn @500k) |"
+            )
             continue
         if c["status"] == "fail":
             n_fail += 1
-            print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — "
-                  f"| — | — | — | FAIL: {c.get('error','')[:60]} |")
+            out.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — "
+                f"| — | — | — | FAIL: {c.get('error','')[:60]} |"
+            )
             continue
         n_ok += 1
         r, m = c["roofline"], c["mem"]
         uf = c.get("useful_flops_frac")
         if c.get("cost_note"):
-            print(f"| {c['arch']} | {c['shape']} | {c['mesh']} "
-                  f"| {m['peak_gb']:.1f} | — | — | — | — | — "
-                  f"| ok (compile+memory proof; cost pass skipped) |")
+            out.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+                f"| {m['peak_gb']:.1f} | — | — | — | — | — "
+                f"| ok (compile+memory proof; cost pass skipped) |"
+            )
             continue
-        print(
+        # a measured 0.0 is a legitimate value, not a missing one — only
+        # an absent field renders as "—"
+        uf_cell = f"{uf:.2f}" if uf is not None else "—"
+        out.append(
             f"| {c['arch']} | {c['shape']} | {c['mesh']} "
             f"| {m['peak_gb']:.1f} | {fmt_s(r['compute_s'])} "
             f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
-            f"| **{r['dominant']}** | {uf:.2f} | ok |" if uf else
-            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
-            f"| {m['peak_gb']:.1f} | {fmt_s(r['compute_s'])} "
-            f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
-            f"| **{r['dominant']}** | — | ok |"
+            f"| **{r['dominant']}** | {uf_cell} | ok |"
         )
-    print(f"\n{n_ok} ok / {n_fail} fail / {n_skip} skip "
-          f"of {len(cells)} recorded cells")
+    out.append(
+        f"\n{n_ok} ok / {n_fail} fail / {n_skip} skip "
+        f"of {len(cells)} recorded cells"
+    )
+    return out
+
+
+def _num(row: dict, key: str, fmt: str) -> str:
+    v = row.get(key)
+    return format(v, fmt) if isinstance(v, (int, float)) else "—"
+
+
+def stream_lines(bench: dict) -> list[str]:
+    """§Streaming table: the BENCH_stream.json steady-state sweep and the
+    mesh-sharded 1k-stream sweep, one row per configuration."""
+    out = [
+        "",
+        "## Streaming (BENCH_stream.json)",
+        "",
+        "| config | streams | shards | hop p50 ms | stream-hops/s | uJ/inference |",
+        "|---|---|---|---|---|---|",
+    ]
+
+    def row(label: str, streams, shards, r: dict) -> str:
+        return (
+            f"| {label} | {streams} | {shards} "
+            f"| {_num(r, 'hop_ms_p50', '.3f')} "
+            f"| {_num(r, 'stream_hops_per_sec', '.0f')} "
+            f"| {_num(r, 'uj_per_inference', '.4f')} |"
+        )
+
+    for b, r in sorted(
+        bench.get("sweep", {}).items(), key=lambda kv: int(kv[0])
+    ):
+        out.append(row("steady", b, 1, r))
+    sharded = bench.get("sharded") or {}  # may be committed as null
+    total = sharded.get("total_streams", "—")
+    stale = sharded.get("carried_from_prior_run")
+    label = "mesh-sharded (prior run)" if stale else "mesh-sharded"
+    for s, r in sorted(
+        sharded.get("configs", {}).items(), key=lambda kv: int(kv[0])
+    ):
+        out.append(row(label, total, s, r))
+    ratio = sharded.get("multi_vs_single")
+    if isinstance(ratio, (int, float)):
+        out.append(
+            f"\nbest multi-shard vs best single-device at "
+            f"{total} streams: {ratio:.2f}x aggregate stream-hops/s"
+            + (" (prior run)" if stale else "")
+        )
+    return out
+
+
+def main() -> None:
+    d = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    cells = [json.loads(p.read_text()) for p in sorted(d.glob("*.json"))]
+    for line in roofline_lines(cells):
+        print(line)
+
+    bench_path = pathlib.Path(
+        sys.argv[2] if len(sys.argv) > 2 else "BENCH_stream.json"
+    )
+    if bench_path.exists():
+        for line in stream_lines(json.loads(bench_path.read_text())):
+            print(line)
 
 
 if __name__ == "__main__":

@@ -12,13 +12,20 @@ power-of-two batch sizes.  The streaming math is bit-exact with the
 offline executor — see tests/test_stream.py for the golden-equivalence
 proof and docs/ARCHITECTURE.md for the full data-flow walkthrough.
 
+The slot pool can also span a whole device mesh (one logical pool, not
+one pool per device — the paper's one-large-macro argument): pass
+``mesh=launch.mesh.make_stream_mesh()`` and every batched state array
+shards its batch axis over the mesh's ``"data"`` axis with the weights
+replicated, bit-exactly (tests/test_stream_sharded.py).
+
 Modules:
   frontend   incremental PCM -> 8-bit offset-binary model frames
-  state      stream plan, ring buffers, per-stream + batched conv state
+  state      stream plan, ring buffers, per-stream + batched conv state,
+             slot->shard placement (SlotPlacement)
   scheduler  elastic continuous-batching scheduler (jitted step with
-             in-jit finalization tail)
+             in-jit finalization tail, optional mesh sharding)
   detector   posterior smoothing + hysteresis/refractory event logic
-  metrics    per-stream latency/throughput counters + energy estimates
+  metrics    per-stream/per-shard counters + measured EnergyLedger charges
 
 Quickstart — join / feed / poll / close (``pydoc repro.stream``):
 
@@ -50,9 +57,15 @@ produce if that stream's utterance ended at this hop.
 """
 from repro.stream.detector import Detection, DetectorConfig, PosteriorDetector
 from repro.stream.frontend import AudioFrontend, quantize_pcm
-from repro.stream.metrics import StreamMetrics
+from repro.stream.metrics import StreamMetrics, plan_hop_ledger
 from repro.stream.scheduler import StreamResult, StreamScheduler
-from repro.stream.state import FrameRing, StreamPlan, StreamState, plan_stream
+from repro.stream.state import (
+    FrameRing,
+    SlotPlacement,
+    StreamPlan,
+    StreamState,
+    plan_stream,
+)
 
 __all__ = [
     "AudioFrontend",
@@ -60,11 +73,13 @@ __all__ = [
     "DetectorConfig",
     "FrameRing",
     "PosteriorDetector",
+    "SlotPlacement",
     "StreamMetrics",
     "StreamPlan",
     "StreamResult",
     "StreamScheduler",
     "StreamState",
+    "plan_hop_ledger",
     "plan_stream",
     "quantize_pcm",
 ]

@@ -1,11 +1,14 @@
-"""Per-stream and fleet-level counters for the streaming runtime.
+"""Per-stream, per-shard and fleet-level counters for the streaming runtime.
 
 Tracks what a serving dashboard needs — frames/sec, streams/sec, step
-latency percentiles, real-time factor, slot-pool resizes — and bridges
-into the existing energy model (core/energy.py): each steady-state hop has
-a statically known MAC/SA budget from the StreamPlan, so the aggregator
-can report the silicon-equivalent energy/inference-second the fleet would
-draw, in the paper's Table-I accounting convention.
+latency percentiles, real-time factor, slot-pool resizes, per-shard
+occupancy under a mesh — and bridges into the existing energy model
+(core/energy.py): each steady-state hop has a statically known
+MAC/SA/SRAM/cycle budget from the StreamPlan, so every hop charges a real
+``EnergyLedger`` (the executor's accumulator, all components — not just
+``e_mac``) and ``energy_summary`` reports the *measured*
+silicon-equivalent TOPS/W the fleet would draw, in the paper's Table-I
+accounting convention.
 
 Step timing covers the whole per-hop pipeline *including* per-slot
 finalized logits: finalization runs inside the jitted step (the fused
@@ -19,8 +22,95 @@ import time
 
 import numpy as np
 
-from repro.core.energy import EnergyParams
+from repro.core import macro
+from repro.core.compiler import _pad16
+from repro.core.energy import EnergyLedger, EnergyParams
+from repro.core.executor import READOUT_CYCLES
 from repro.stream.state import StreamPlan
+
+# compiler.chunk_layer splits columns into one-SA-group chunks
+_SA_GROUP = macro.N_SA
+
+
+def plan_hop_ledger(plan: StreamPlan,
+                    params: EnergyParams | None = None) -> EnergyLedger:
+    """Ledger for ONE stream advancing ONE steady-state hop.
+
+    Charges exactly what the executor's per-chunk formulas would for the
+    hop's incremental work: the conv cascade reads each layer's
+    receptive-field window (tail ++ new frames) once per <=128-pair column
+    chunk, activates ``rows x channels x positions x in_bits`` physical
+    MACs, makes one SA decision per (position, pair, bit pass), and
+    writes the pooled OFM back — the streaming specialization of
+    ``Executor.run``'s MAC accounting, with the window length taken from
+    the plan instead of the whole clip.  The classifier tail (fc cascade
+    per emitted finalization) is charged separately by
+    ``plan_tail_ledger`` so logits-off deployments don't pay for it.
+    """
+    led = EnergyLedger(params=params or EnergyParams())
+    for st in plan.convs:
+        rows = st.k * st.cin
+        window = st.tail + st.n_in  # frames the hop streams past the macro
+        positions = st.n_conv
+        for c0 in range(0, st.cout, _SA_GROUP):
+            n_ch = min(_SA_GROUP, st.cout - c0)
+            pairs = _pad16(n_ch)
+            led.charge_mac_op(
+                rows * n_ch * positions,
+                rows * n_ch * positions * st.in_bits,
+                positions * pairs * st.in_bits,
+                positions * st.in_bits,
+            )
+            led.charge_sram(
+                read_bits=window * st.cin
+                * (st.in_bits if st.in_bits > 1 else 1)
+            )
+        led.charge_sram(write_bits=st.n_out * st.cout)  # pooled OFM (PWB)
+    # GAP: read the final frames, bump the saturating 8-bit counters
+    last = plan.convs[-1]
+    led.charge_sram(read_bits=last.n_out * plan.gap_channels,
+                    write_bits=plan.gap_channels * 8)
+    return led
+
+
+def plan_tail_ledger(plan: StreamPlan,
+                     params: EnergyParams | None = None) -> EnergyLedger:
+    """Ledger for ONE finalization (classifier tail) of one stream.
+
+    Drains the saturated GAP counts through the fc cascade: 8-bit counts
+    feed the first fc bit-serially, raw-output layers pay the thermometer
+    SA readout sweep, and each layer writes its activations back.
+    """
+    led = EnergyLedger(params=params or EnergyParams())
+    for st in plan.fcs:
+        rows = st.cin
+        for c0 in range(0, st.cout, _SA_GROUP):
+            n_ch = min(_SA_GROUP, st.cout - c0)
+            pairs = _pad16(n_ch)
+            cyc = st.in_bits + (READOUT_CYCLES if st.out_raw else 0)
+            led.charge_mac_op(
+                rows * n_ch,
+                rows * n_ch * st.in_bits,
+                pairs * st.in_bits,
+                cyc,
+            )
+            led.charge_sram(
+                read_bits=rows * (st.in_bits if st.in_bits > 1 else 1)
+            )
+        led.charge_sram(write_bits=st.cout * (8 if st.out_raw else 1))
+    return led
+
+
+def _charge_scaled(dst: EnergyLedger, src: EnergyLedger, n: int) -> None:
+    """Accumulate ``n`` copies of ``src``'s charges into ``dst``.
+
+    Field-generic so a counter added to EnergyLedger can never be
+    silently dropped from the streaming accumulation.
+    """
+    for f in dataclasses.fields(EnergyLedger):
+        if f.name == "params":
+            continue
+        setattr(dst, f.name, getattr(dst, f.name) + getattr(src, f.name) * n)
 
 
 @dataclasses.dataclass
@@ -35,16 +125,30 @@ class StreamCounters:
 
 
 class StreamMetrics:
-    """Aggregates per-stream counters + per-step wall latencies."""
+    """Aggregates per-stream counters + per-step wall latencies.
 
-    def __init__(self, plan: StreamPlan, sample_rate: int = 16000) -> None:
+    Under a mesh (``n_shards > 1``) each step also records how many ready
+    streams each shard advanced, so ``shard_summary`` can report per-shard
+    occupancy/throughput next to the fleet aggregate.
+    """
+
+    def __init__(self, plan: StreamPlan, sample_rate: int = 16000,
+                 n_shards: int = 1) -> None:
         self.plan = plan
         self.sample_rate = sample_rate
+        self.n_shards = n_shards
         self.streams: dict[int, StreamCounters] = {}
         self.retired: list[StreamCounters] = []  # closed tenants of reused sids
         self.step_wall_s: list[float] = []
         self.step_streams: list[int] = []
+        self.step_shard_streams: list[list[int]] = []  # per step, per shard
         self.capacity_events: list[tuple[float, int]] = []  # (t, new_cap)
+        # silicon-equivalent energy: static per-hop/-finalize charges from
+        # the plan, accumulated into one fleet ledger as hops execute
+        self._hop_ledger = plan_hop_ledger(plan)
+        self._tail_ledger = plan_tail_ledger(plan)
+        self.ledger = EnergyLedger()
+        self.finalizations = 0
         self._t0 = time.perf_counter()
 
     # -- recording -----------------------------------------------------------
@@ -58,9 +162,23 @@ class StreamMetrics:
     def on_audio(self, sid: int, n_samples: int) -> None:
         self.streams[sid].samples_in += n_samples
 
-    def on_step(self, ready_sids: list[int], frames_each: int, wall_s: float) -> None:
+    def on_step(self, ready_sids: list[int], frames_each: int, wall_s: float,
+                shard_counts: list[int] | None = None,
+                finalized: bool = True) -> None:
+        if shard_counts is None:
+            # only unambiguous without a mesh; sharded callers must say
+            # which shard advanced what or shard_summary would lie
+            assert self.n_shards == 1, "shard_counts required when sharded"
+            shard_counts = [len(ready_sids)]
+        assert len(shard_counts) == self.n_shards, (shard_counts, self.n_shards)
         self.step_wall_s.append(wall_s)
         self.step_streams.append(len(ready_sids))
+        self.step_shard_streams.append(list(shard_counts))
+        n = len(ready_sids)
+        _charge_scaled(self.ledger, self._hop_ledger, n)
+        if finalized:
+            _charge_scaled(self.ledger, self._tail_ledger, n)
+            self.finalizations += n
         for sid in ready_sids:
             c = self.streams[sid]
             c.steps += 1
@@ -95,6 +213,7 @@ class StreamMetrics:
             "steps": float(len(self.step_wall_s)),
             "frames_total": float(frames),
             "frames_per_sec": frames / elapsed,
+            "stream_hops_per_sec": sum(self.step_streams) / elapsed,
             "audio_sec_per_wall_sec": audio_s / elapsed,  # real-time factor
             "step_ms_p50": float(np.percentile(wall, 50) * 1e3),
             "step_ms_p95": float(np.percentile(wall, 95) * 1e3),
@@ -103,27 +222,68 @@ class StreamMetrics:
             "resizes": float(len(self.capacity_events)),
             "capacity_last": float(self.capacity_events[-1][1])
             if self.capacity_events else 0.0,
+            "n_shards": float(self.n_shards),
+        }
+
+    def shard_summary(self) -> dict[str, object]:
+        """Per-shard occupancy/throughput + the fleet aggregate.
+
+        ``per_shard[s]`` reports how many stream-hops shard ``s`` advanced
+        and its mean per-step occupancy; ``imbalance`` is the max/mean
+        stream-hop ratio (1.0 = perfectly balanced placement).
+        """
+        S = self.n_shards
+        hops = np.zeros(S, np.int64)
+        for counts in self.step_shard_streams:
+            for sh, n in enumerate(counts[:S]):
+                hops[sh] += n
+        steps = max(1, len(self.step_shard_streams))
+        mean_hops = float(hops.mean()) if S else 0.0
+        return {
+            "n_shards": S,
+            "per_shard": [
+                {
+                    "shard": sh,
+                    "stream_hops": int(hops[sh]),
+                    "mean_occupancy": float(hops[sh] / steps),
+                }
+                for sh in range(S)
+            ],
+            "fleet_stream_hops": int(hops.sum()),
+            "imbalance": float(hops.max() / mean_hops) if hops.sum() else 1.0,
         }
 
     def energy_summary(self, params: EnergyParams | None = None) -> dict[str, float]:
-        """Silicon-equivalent cost of the work done so far (Table-I terms).
+        """Measured silicon-equivalent cost of the work done so far.
 
-        Conv MACs per hop come from the plan; fc MACs are charged once per
-        emitted logit frame.  Bit-serial first-layer passes multiply the
-        physical activations exactly as the executor charges them.
+        Every hop charged the fleet ``EnergyLedger`` with the full Table-I
+        component model (macro MACs, SA decisions, feature-SRAM traffic,
+        controller cycles) from the plan's static per-hop geometry, so
+        this is the executor's accounting applied to the streaming
+        workload — not an e_mac-only estimate.  ``uj_per_inference`` is
+        the energy per finalized per-hop decision (the always-on "answer
+        now" cost).
         """
-        p = params or EnergyParams()
-        hops = self.frames_total() / max(1, self.plan.frames_per_hop)
-        conv_macs = self.plan.macs_per_hop() * hops
-        fc_macs = self.plan.fc_macs() * self.frames_total()
-        phys = sum(
-            c.n_conv * c.k * c.cin * c.cout * c.in_bits for c in self.plan.convs
-        ) * hops + fc_macs * 8  # fc input is 8-bit counts
-        macs = conv_macs + fc_macs
-        energy_j = p.e_mac * phys
+        led = self.ledger
+        if params is not None:
+            led = dataclasses.replace(led, params=params)
+        p = led.params
+        energy_j = led.energy_j
         return {
-            "macs_total": float(macs),
-            "phys_macs_total": float(phys),
+            "macs_total": float(led.macs),
+            "phys_macs_total": float(led.phys_macs),
+            "sa_decisions_total": float(led.sa_decisions),
+            "sram_bits_total": float(
+                led.sram_read_bits + led.sram_write_bits
+            ),
+            "cycles_total": float(led.cycles),
             "energy_uj": energy_j * 1e6,
-            "tops_per_w_equiv": (macs / energy_j / 1e12) if energy_j else 0.0,
+            "e_mac_uj": p.e_mac * led.phys_macs * 1e6,
+            "e_sa_uj": p.e_sa * led.sa_decisions * 1e6,
+            "e_sram_uj": (p.e_sram_r * led.sram_read_bits
+                          + p.e_sram_w * led.sram_write_bits) * 1e6,
+            "e_ctrl_uj": p.e_ctrl * led.cycles * 1e6,
+            "tops_per_w_equiv": led.tops_per_w,
+            "uj_per_inference": (energy_j * 1e6 / self.finalizations)
+            if self.finalizations else 0.0,
         }

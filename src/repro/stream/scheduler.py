@@ -11,14 +11,27 @@ axis and advances them with ONE jitted step per hop:
   * streams whose inbox holds less than a hop are masked out of the step
     (their state passes through untouched), so stragglers never force a
     re-trace — continuous batching, not synchronized batching;
-  * the slot pool grows and shrinks at power-of-two sizes (2 -> 4 -> ...
-    -> ``capacity``): a resize pads/slices the batched ring state along
-    the batch axis and lets jit re-trace at the new static shape, so
-    bursty arrivals are absorbed without provisioning for the peak and
-    results stay bit-exact across the resize boundary;
+  * the slot pool grows and shrinks at power-of-two sizes: a resize
+    pads/slices the batched ring state along the batch axis and lets jit
+    re-trace at the new static shape, so bursty arrivals are absorbed
+    without provisioning for the peak and results stay bit-exact across
+    the resize boundary;
   * the batched step is built on the batched Pallas conv kernel
     (kernels/bnn_conv1d.bnn_conv1d_step_packed) or an equivalent pure-jnp
     einsum path (default on CPU, where Pallas runs interpreted).
+
+**Mesh sharding (one pool, whole mesh).**  Pass ``mesh`` (see
+``launch.mesh.make_stream_mesh``) and the batch axis of every piece of
+per-stream state — conv tails, pool pendings, GAP counters — shards over
+the mesh's ``"data"`` axis while the (tiny) model weights replicate: the
+software analogue of the paper's one-large-macro argument (§II-A), one
+logical slot pool spanning every device instead of one pool per device.
+``SlotPlacement`` (state.py) keeps each stream's row inside one shard's
+contiguous block and performs the elastic pow-2 resize *per shard*, so
+grow/shrink never reshuffles rows across devices and a sharded run is
+bit-exact with the single-device scheduler (tests/test_stream_sharded.py).
+With no mesh (or a 1-device mesh) every code path collapses to the
+single-device behavior.
 
 Per emitted hop the step also runs the *in-jit finalization tail*: a ghost
 end-of-stream flush with statically known emission counts (the plan's
@@ -37,13 +50,20 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.cnn_spec import CNN1DSpec
 from repro.kernels import ops
+from repro.launch.mesh import dp_axes, dp_size
 from repro.stream.detector import Detection, DetectorConfig, PosteriorDetector
 from repro.stream.frontend import AudioFrontend, FrontendConfig
 from repro.stream.metrics import StreamMetrics
-from repro.stream.state import StreamPlan, StreamState, plan_stream
+from repro.stream.state import (
+    SlotPlacement,
+    StreamPlan,
+    StreamState,
+    plan_stream,
+)
 from repro.utils.logging import get_logger
 
 log = get_logger("stream")
@@ -68,10 +88,17 @@ class _Stream:
     detector: PosteriorDetector
     primed: bool = False
     frames: int = 0
+    stamp: int = 0  # emit-step from which cached hop logits cover this slot
 
 
 def _next_pow2(n: int) -> int:
     return 1 << max(0, n - 1).bit_length()
+
+
+def _mesh_data_axes(mesh):
+    """The mesh's data-parallel axes as a PartitionSpec entry (a tuple of
+    axis names is a valid single-dim entry)."""
+    return dp_axes(mesh)
 
 
 class _BatchedModel:
@@ -80,13 +107,20 @@ class _BatchedModel:
     Batch-size polymorphic: every entry point derives B from its operands,
     so the elastic slot pool only pays one re-trace per power-of-two
     capacity it ever visits (jit's shape-keyed cache does the rest).
+
+    With ``mesh`` the weights are replicated across it and the batch axis
+    of every operand/result is pinned to the data axes, so GSPMD keeps
+    each slot's row resident on its shard through the whole hop (the
+    Pallas backend routes through the shard_map entry points in
+    kernels/ops.py, which are opaque-kernel-safe).
     """
 
     def __init__(self, plan: StreamPlan, weights, thresholds,
-                 backend: str, interpret: bool | None) -> None:
+                 backend: str, interpret: bool | None, mesh=None) -> None:
         self.plan = plan
         self.backend = backend
         self.interpret = interpret
+        self.mesh = mesh
         stages = plan.convs
         self._w = [
             jnp.asarray(weights[st.layer_idx].reshape(st.k, st.cin, st.cout),
@@ -104,8 +138,30 @@ class _BatchedModel:
         self._fc_flip = tuple(jnp.asarray(thresholds[st.layer_idx][1],
                                           jnp.int32) for st in plan.fcs)
         self._fc_raw = tuple(st.out_raw for st in plan.fcs)
+        if mesh is not None:
+            # one macro, many shards: weights live replicated on every
+            # device; only per-stream state is sharded
+            rep = NamedSharding(mesh, P())
+            put = lambda t: jax.device_put(t, rep)  # noqa: E731
+            self._w = [put(w) for w in self._w]
+            self._thr = [put(t) for t in self._thr]
+            self._flip = [put(f) for f in self._flip]
+            self._wsum = [put(w) for w in self._wsum]
+            self._fc_w = tuple(put(w) for w in self._fc_w)
+            self._fc_thr = tuple(put(t) for t in self._fc_thr)
+            self._fc_flip = tuple(put(f) for f in self._fc_flip)
+            self._baxes = _mesh_data_axes(mesh)
         self.step = jax.jit(self._step, static_argnames=("emit",))
         self.finalize = jax.jit(self._finalize)
+
+    def _pin(self, x: jax.Array) -> jax.Array:
+        """Constrain the leading (batch) axis to the mesh's data sharding."""
+        if self.mesh is None:
+            return x
+        spec = P(self._baxes, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
 
     # -- shared conv math ----------------------------------------------------
 
@@ -118,9 +174,9 @@ class _BatchedModel:
                 acc = None
                 for b in range(st.in_bits):
                     plane = ((window >> b) & 1).astype(jnp.uint32)
-                    d = ops.bnn_conv1d_batched(
-                        plane, self._w[i], stride=st.stride, pad=0,
-                        mode="raw", interpret=self.interpret,
+                    d = ops.bnn_conv1d_batched_sharded(
+                        plane, self._w[i], mesh=self.mesh, stride=st.stride,
+                        pad=0, mode="raw", interpret=self.interpret,
                     )
                     acc = d * (1 << b) if acc is None else acc + d * (1 << b)
                 return acc - st.in_offset * self._wsum[i][None, None, :]
@@ -132,9 +188,9 @@ class _BatchedModel:
             xs = jnp.stack(taps, axis=1)  # (B, K, n_conv, Cin)
             return jnp.einsum("bknc,kco->bno", xs, self._w[i])
         if self.backend == "pallas":
-            return ops.bnn_conv1d_batched(
-                window.astype(jnp.uint32), self._w[i], stride=st.stride,
-                pad=0, mode="raw", interpret=self.interpret,
+            return ops.bnn_conv1d_batched_sharded(
+                window.astype(jnp.uint32), self._w[i], mesh=self.mesh,
+                stride=st.stride, pad=0, mode="raw", interpret=self.interpret,
             )
         taps = [
             window[:, t : t + (n_conv - 1) * st.stride + 1 : st.stride]
@@ -186,12 +242,15 @@ class _BatchedModel:
         gap2 = jnp.minimum(gap + cur.sum(axis=1, dtype=jnp.int32), 255)
 
         m3 = mask[:, None, None]
-        new_tails = [jnp.where(m3, nt, t) for nt, t in zip(new_tails, tails)]
+        new_tails = [
+            self._pin(jnp.where(m3, nt, t))
+            for nt, t in zip(new_tails, tails)
+        ]
         new_pendings = [
-            jnp.where(m3, np_, p) if p.shape[1] else p
+            self._pin(jnp.where(m3, np_, p)) if p.shape[1] else p
             for np_, p in zip(new_pendings, pendings)
         ]
-        gap2 = jnp.where(mask[:, None], gap2, gap)
+        gap2 = self._pin(jnp.where(mask[:, None], gap2, gap))
         state = tuple(new_tails), tuple(new_pendings), gap2
         if not emit:
             return state
@@ -223,7 +282,9 @@ class _BatchedModel:
             if st.pad:
                 pad_val = st.in_offset if st.in_bits > 1 else 0
                 pieces.append(
-                    jnp.full((B, st.pad, st.cin), pad_val, jnp.int32)
+                    self._pin(
+                        jnp.full((B, st.pad, st.cin), pad_val, jnp.int32)
+                    )
                 )
             if st.flush_conv > 0:
                 window = jnp.concatenate(pieces, axis=1)
@@ -236,16 +297,17 @@ class _BatchedModel:
                 B, st.flush_out, st.pool, st.cout
             ).max(axis=2)
         gap_f = jnp.minimum(gap + cur.sum(axis=1, dtype=jnp.int32), 255)
-        logits = self._classifier(gap_f)
+        logits = self._pin(self._classifier(gap_f))
         post = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
         return logits, post
 
     def _classifier(self, gap_f: jax.Array) -> jax.Array:
         """Saturated GAP counts (B, C) -> raw logits (B, n_classes)."""
         if self.backend == "pallas":
-            return ops.classifier_tail(
+            return ops.classifier_tail_sharded(
                 gap_f, self._fc_w, self._fc_thr, self._fc_flip,
-                out_raw=self._fc_raw, interpret=self.interpret,
+                mesh=self.mesh, out_raw=self._fc_raw,
+                interpret=self.interpret,
             )
         h = gap_f
         for j, st in enumerate(self.plan.fcs):
@@ -264,12 +326,19 @@ class StreamScheduler:
     """Continuous batching over an elastic pool of stream slots.
 
     ``capacity`` is the *ceiling*: the pool starts at ``initial_capacity``
-    (default ``min(2, capacity)``) and doubles on demand up to the ceiling;
+    (default ``min_capacity``) and doubles on demand up to the ceiling;
     ``close_stream`` halves it once occupancy falls to a quarter (never
     below ``min_capacity`` — set ``min_capacity == capacity`` to pin a
     fixed-size pool).  Each resize is a pure pad/slice of the batched ring
     state, so a stream fed across a resize boundary produces bit-identical
     logits to one fed at a fixed capacity.
+
+    With ``mesh`` the pool spans the mesh: every capacity is ``n_shards *
+    per_shard`` rows, a joining stream lands on the least-loaded shard,
+    and the elastic resize scales the *per-shard* capacity so rows never
+    cross devices (``SlotPlacement``).  ``capacity`` (and, if given,
+    ``min_capacity``/``initial_capacity``) must be multiples of the mesh's
+    data-axis size.
     """
 
     def __init__(
@@ -286,43 +355,66 @@ class StreamScheduler:
         sample_rate: int = 16000,
         initial_capacity: int | None = None,
         min_capacity: int | None = None,
+        mesh=None,
     ) -> None:
         assert backend in ("jnp", "pallas"), backend
         self.plan = plan_stream(spec, hop_frames=hop_frames)
         self.weights = {k: np.asarray(v) for k, v in weights.items()}
         self.thresholds = thresholds
+        self.mesh = mesh
+        if mesh is not None:
+            self.n_shards = dp_size(mesh)
+            self._baxes = _mesh_data_axes(mesh)
+        else:
+            self.n_shards = 1
+        S = self.n_shards
+        assert capacity % S == 0, (
+            f"capacity {capacity} not a multiple of {S} mesh shards"
+        )
         self.max_capacity = capacity
         self.backend = backend
         self.detector_cfg = detector_cfg or DetectorConfig()
         self.emit_logits = emit_logits
-        self.metrics = StreamMetrics(self.plan, sample_rate)
+        self.metrics = StreamMetrics(self.plan, sample_rate, n_shards=S)
         self._model = _BatchedModel(
-            self.plan, self.weights, thresholds, backend, interpret
+            self.plan, self.weights, thresholds, backend, interpret, mesh
         )
 
         self._min_capacity = (
-            min_capacity if min_capacity is not None else min(2, capacity)
+            min_capacity if min_capacity is not None
+            else S * min(2, capacity // S)
         )
-        assert 1 <= self._min_capacity <= capacity
+        assert S <= self._min_capacity <= capacity
+        assert self._min_capacity % S == 0
         cap0 = initial_capacity if initial_capacity is not None else (
             self._min_capacity
         )
         assert self._min_capacity <= cap0 <= capacity, (cap0, capacity)
+        assert cap0 % S == 0
         # batched state lives device-resident between hops; host copies are
         # made only on join/leave or fallback peeks — never the hot loop
         self._capacity = cap0
+        self._placement = SlotPlacement(S, cap0 // S)
         self._tails = [
-            jnp.zeros((cap0, st.tail, st.cin), jnp.int32)
+            self._shard(jnp.zeros((cap0, st.tail, st.cin), jnp.int32))
             for st in self.plan.convs
         ]
         self._pendings = [
-            jnp.zeros((cap0, st.phase, st.cout), jnp.int32)
+            self._shard(jnp.zeros((cap0, st.phase, st.cout), jnp.int32))
             for st in self.plan.convs
         ]
-        self._gap = jnp.zeros((cap0, self.plan.gap_channels), jnp.int32)
-        self._slots: list[int | None] = [None] * cap0
+        self._gap = self._shard(
+            jnp.zeros((cap0, self.plan.gap_channels), jnp.int32)
+        )
         self._streams: dict[int, _Stream] = {}
         self._next_sid = 0
+        # hop-boundary peeks are served from the last emit step's logits:
+        # _finalize covers EVERY primed slot (masked rows hold steady
+        # state), so the row stays valid until the slot is rewritten on
+        # the host (priming) or remapped (resize)
+        self._emit_step = 0
+        self._emit_cache: np.ndarray | None = None
+        self._emit_cache_step = -1
 
     # -- elastic slot pool ---------------------------------------------------
 
@@ -331,84 +423,92 @@ class StreamScheduler:
         """Current pool size (<= ``max_capacity``)."""
         return self._capacity
 
-    def _resize(self, new_cap: int) -> None:
-        """Pure pad/slice of the batched state to ``new_cap`` slots.
+    @property
+    def shard_capacity(self) -> int:
+        """Current per-shard pool size (== ``capacity`` with no mesh)."""
+        return self._placement.shard_capacity
 
-        Rows travel unchanged (a slot's math never depends on the batch
-        size), so resizes are invisible to the streams riding through them;
-        jit re-traces once per power-of-two capacity visited.
+    def _shard(self, x):
+        """Settle an array's batch axis onto the mesh's data sharding."""
+        if self.mesh is None:
+            return x
+        spec = P(self._baxes, *([None] * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(self.mesh, spec))
+
+    def _resize(self, new_cap: int) -> None:
+        """Per-shard pad/slice of the batched state to ``new_cap`` slots.
+
+        Rows travel unchanged and never cross shard blocks (a slot's math
+        never depends on the batch size or its neighbors), so resizes are
+        invisible to the streams riding through them and cost zero
+        collective communication; jit re-traces once per capacity visited.
         """
         old = self._capacity
         if new_cap == old:
             return
+        S = self.n_shards
+        old_sc, new_sc = old // S, new_cap // S
+        trail = lambda a: ((0, 0),) * (a.ndim - 1)  # noqa: E731
         if new_cap > old:
-            grow = new_cap - old
-            self._tails = [
-                jnp.pad(t, ((0, grow), (0, 0), (0, 0))) for t in self._tails
-            ]
-            self._pendings = [
-                jnp.pad(p, ((0, grow), (0, 0), (0, 0)))
-                for p in self._pendings
-            ]
-            self._gap = jnp.pad(self._gap, ((0, grow), (0, 0)))
-            self._slots.extend([None] * grow)
-        else:
-            # compact tenants out of the doomed upper slots, then slice;
-            # vacated destinations are already zero (scrubbed on close)
-            free_low = [i for i in range(new_cap) if self._slots[i] is None]
-            moves: list[tuple[int, int]] = []
-            for slot in range(new_cap, old):
-                sid = self._slots[slot]
-                if sid is None:
-                    continue
-                dst = free_low.pop(0)
-                moves.append((dst, slot))
-                self._slots[dst] = sid
-                self._slots[slot] = None
-                self._streams[sid].slot = dst
+            remap = self._placement.grow(new_sc)
 
-            def shrink(a):
+            def adjust(a):
+                a2 = a.reshape(S, old_sc, *a.shape[1:])
+                a2 = jnp.pad(a2, ((0, 0), (0, new_sc - old_sc)) + trail(a))
+                return self._shard(a2.reshape(S * new_sc, *a.shape[1:]))
+        else:
+            # compact tenants out of each shard's doomed upper slots, then
+            # slice every shard block; vacated destinations are already
+            # zero (scrubbed on close)
+            moves, remap = self._placement.shrink(new_sc)
+
+            def adjust(a):
                 for dst, src in moves:
                     a = a.at[dst].set(a[src])
-                return a[:new_cap]
+                a2 = a.reshape(S, old_sc, *a.shape[1:])[:, :new_sc]
+                return self._shard(a2.reshape(S * new_sc, *a.shape[1:]))
 
-            self._tails = [shrink(t) for t in self._tails]
-            self._pendings = [shrink(p) for p in self._pendings]
-            self._gap = shrink(self._gap)
-            del self._slots[new_cap:]
+        self._tails = [adjust(t) for t in self._tails]
+        self._pendings = [adjust(p) for p in self._pendings]
+        self._gap = adjust(self._gap)
+        for s in self._streams.values():
+            s.slot = remap[s.slot]
+        self._emit_cache = None  # cached rows are indexed by old slots
         self._capacity = new_cap
         self.metrics.on_resize(new_cap)
-        log.info("slot pool resized %d -> %d (%d active)",
-                 old, new_cap, len(self._streams))
+        log.info("slot pool resized %d -> %d (%d active on %d shard(s))",
+                 old, new_cap, len(self._streams), S)
 
     def _maybe_shrink(self) -> None:
-        cap = self._capacity
-        while cap > self._min_capacity and len(self._streams) <= cap // 4:
-            cap //= 2
-        cap = max(cap, self._min_capacity, _next_pow2(len(self._streams)))
-        if cap < self._capacity:
-            self._resize(cap)
+        S = self.n_shards
+        sc = self._capacity // S
+        min_sc = self._min_capacity // S
+        while sc > min_sc and len(self._streams) <= (S * sc) // 4:
+            sc //= 2
+        # floors: the configured minimum, and — because compaction is
+        # per-shard — the fullest shard's tenant count
+        sc = max(sc, min_sc, _next_pow2(max(self._placement.occupancy())))
+        if S * sc < self._capacity:
+            self._resize(S * sc)
 
     # -- stream lifecycle ----------------------------------------------------
 
     def add_stream(self, sid: int | None = None,
                    frontend_cfg: FrontendConfig | None = None) -> int:
-        """Claim a slot for a new stream (growing the pool if needed);
-        returns the stream id."""
-        try:
-            slot = self._slots.index(None)
-        except ValueError:
+        """Claim a slot for a new stream on the least-loaded shard (growing
+        the pool if needed); returns the stream id."""
+        sid = self._next_sid if sid is None else sid
+        assert sid not in self._streams, f"stream {sid} already exists"
+        slot = self._placement.alloc(sid)
+        if slot is None:
             if self._capacity >= self.max_capacity:
                 raise MemoryError(
                     f"all {self.max_capacity} stream slots busy; "
                     "close a stream first"
-                ) from None
+                )
             self._resize(min(self._capacity * 2, self.max_capacity))
-            slot = self._slots.index(None)
-        sid = self._next_sid if sid is None else sid
-        assert sid not in self._streams, f"stream {sid} already exists"
+            slot = self._placement.alloc(sid)
         self._next_sid = max(self._next_sid, sid) + 1
-        self._slots[slot] = sid
         self._streams[sid] = _Stream(
             sid=sid,
             slot=slot,
@@ -438,6 +538,9 @@ class StreamScheduler:
                 self._write_slot(s.slot, steady)
                 s.frames = st.frames
                 s.primed = True
+                # host wrote the slot: earlier cached logits don't cover
+                # it; the NEXT emit step (which includes this write) does
+                s.stamp = self._emit_step + 1
 
     def _write_slot(self, slot: int, steady: dict) -> None:
         for i in range(len(self.plan.convs)):
@@ -457,7 +560,8 @@ class StreamScheduler:
 
     def _host_state(self):
         """One bulk device->host view of the batched state (zero-copy on
-        CPU); per-slot rows are then plain numpy indexing."""
+        CPU, a gather across shards under a mesh); per-slot rows are then
+        plain numpy indexing."""
         return (
             [np.asarray(t) for t in self._tails],
             [np.asarray(p) for p in self._pendings],
@@ -496,12 +600,14 @@ class StreamScheduler:
         B = self._capacity
         audio = np.zeros((B, hop), np.int32)
         mask = np.zeros((B,), bool)
+        shard_counts = [0] * self.n_shards
         for s in ready:
             audio[s.slot] = s.frontend.pop(hop)
             mask[s.slot] = True
+            shard_counts[self._placement.shard_of(s.slot)] += 1
 
         args = (
-            jnp.asarray(audio), jnp.asarray(mask),
+            self._shard(jnp.asarray(audio)), self._shard(jnp.asarray(mask)),
             tuple(self._tails), tuple(self._pendings), self._gap,
         )
         logits_h = post_h = None
@@ -511,6 +617,9 @@ class StreamScheduler:
             )
             logits_h = np.asarray(logits)  # one bulk transfer per hop
             post_h = np.asarray(post)
+            self._emit_step += 1
+            self._emit_cache = logits_h
+            self._emit_cache_step = self._emit_step
         else:
             tails, pendings, gap = self._model.step(*args, emit=False)
         self._tails = list(tails)
@@ -530,6 +639,7 @@ class StreamScheduler:
         self.metrics.on_step(
             [s.sid for s in ready], self.plan.frames_per_hop,
             time.perf_counter() - t0,
+            shard_counts=shard_counts, finalized=self.emit_logits,
         )
         return out
 
@@ -549,11 +659,16 @@ class StreamScheduler:
         """Finalized logits if the stream ended now (inbox included) —
         bit-exact with the offline executor on the audio pushed so far.
 
-        On a hop boundary (empty inbox) this reads the in-jit finalization
-        tail; with leftover sub-hop samples it drops to the exact numpy
-        fallback (``StreamState.peek_logits``)."""
+        On a hop boundary (empty inbox) this reads the last emit step's
+        cached logits — the finalization tail already covered every primed
+        slot, so no recompute — or re-runs the in-jit tail when no emit
+        covers this slot yet; with leftover sub-hop samples it drops to
+        the exact numpy fallback (``StreamState.peek_logits``)."""
         s = self._streams[sid]
         if s.primed and len(s.frontend) == 0:
+            if (self._emit_cache is not None
+                    and s.stamp <= self._emit_cache_step):
+                return self._emit_cache[s.slot].copy()
             logits, _ = self._model.finalize(
                 tuple(self._tails), tuple(self._pendings), self._gap
             )
@@ -581,7 +696,7 @@ class StreamScheduler:
         det = s.detector.update(st.frames, logits)
         if det is not None:
             self.metrics.on_detection(sid)
-        self._slots[s.slot] = None
+        self._placement.free(s.slot)
         self._clear_slot(s.slot)  # scrub so the next tenant starts clean
         self.metrics.on_close(sid)
         self._maybe_shrink()

@@ -114,6 +114,140 @@ class FrameRing:
 
 
 # ---------------------------------------------------------------------------
+# Slot placement: one logical pool sharded over a device mesh
+# ---------------------------------------------------------------------------
+
+class SlotPlacement:
+    """Slot -> shard mapping for the mesh-wide slot pool.
+
+    The pool's batch axis is one global array of ``n_shards *
+    shard_capacity`` rows; under a mesh sharding over the ``"data"`` axis,
+    shard ``s`` owns the contiguous row block ``[s * shard_capacity, (s +
+    1) * shard_capacity)``.  All placement decisions respect that block
+    structure so *no resize or allocation ever moves a row across
+    devices*:
+
+      * ``alloc`` places a joining stream on the least-loaded shard
+        (lowest shard wins ties) at its lowest free local slot — with one
+        shard this degenerates to "lowest free slot", the pre-mesh
+        behavior;
+      * ``grow``/``shrink`` change the *per-shard* capacity: a grow
+        appends rows at the end of every shard block, a shrink compacts
+        each shard's tenants into its own surviving local slots and drops
+        the block tails.  Cross-shard motion is structurally impossible,
+        which is why an elastic resize under sharding costs zero
+        collective communication.
+
+    The placement is pure bookkeeping (plain python ints); the scheduler
+    applies the returned remaps/moves to the batched device arrays.
+    """
+
+    def __init__(self, n_shards: int, shard_capacity: int) -> None:
+        assert n_shards >= 1 and shard_capacity >= 1
+        self.n_shards = n_shards
+        self.shard_capacity = shard_capacity
+        self.slots: list[int | None] = [None] * (n_shards * shard_capacity)
+
+    @property
+    def capacity(self) -> int:
+        return self.n_shards * self.shard_capacity
+
+    def shard_of(self, slot: int) -> int:
+        return slot // self.shard_capacity
+
+    def occupancy(self) -> list[int]:
+        """Tenant count per shard."""
+        occ = [0] * self.n_shards
+        for slot, sid in enumerate(self.slots):
+            if sid is not None:
+                occ[self.shard_of(slot)] += 1
+        return occ
+
+    def alloc(self, sid: int) -> int | None:
+        """Place ``sid`` on the least-loaded shard; None when pool full."""
+        occ = self.occupancy()
+        c = self.shard_capacity
+        for sh in sorted(range(self.n_shards), key=lambda s: (occ[s], s)):
+            if occ[sh] == c:
+                continue
+            base = sh * c
+            for loc in range(c):
+                if self.slots[base + loc] is None:
+                    self.slots[base + loc] = sid
+                    return base + loc
+        return None
+
+    def free(self, slot: int) -> None:
+        assert self.slots[slot] is not None
+        self.slots[slot] = None
+
+    def grow(self, new_shard_capacity: int) -> dict[int, int]:
+        """Grow every shard block; returns {old_slot: new_slot} remap."""
+        old_c, c = self.shard_capacity, new_shard_capacity
+        assert c > old_c
+        remap: dict[int, int] = {}
+        slots: list[int | None] = [None] * (self.n_shards * c)
+        for slot, sid in enumerate(self.slots):
+            new_slot = self.shard_of(slot) * c + slot % old_c
+            slots[new_slot] = sid
+            remap[slot] = new_slot
+        self.slots, self.shard_capacity = slots, c
+        return remap
+
+    def shrink(
+        self, new_shard_capacity: int
+    ) -> tuple[list[tuple[int, int]], dict[int, int]]:
+        """Shrink every shard block to ``new_shard_capacity`` local slots.
+
+        Returns ``(moves, remap)``: ``moves`` are (dst, src) row copies in
+        the OLD global indexing — each within one shard block — that
+        compact tenants out of the doomed upper local slots; ``remap`` is
+        {old_slot: new_slot} for every surviving tenant after the slice.
+        """
+        old_c, c = self.shard_capacity, new_shard_capacity
+        assert c < old_c
+        moves: list[tuple[int, int]] = []
+        moved: dict[int, int] = {}  # original old slot -> post-move old slot
+        for sh in range(self.n_shards):
+            base = sh * old_c
+            if sum(s is not None for s in
+                   self.slots[base : base + old_c]) > c:
+                raise ValueError(
+                    f"shard {sh} holds more than {c} tenants; cross-shard "
+                    "relocation is not allowed"
+                )
+            free_low = [
+                base + loc for loc in range(c)
+                if self.slots[base + loc] is None
+            ]
+            for loc in range(c, old_c):
+                sid = self.slots[base + loc]
+                if sid is None:
+                    continue
+                dst = free_low.pop(0)
+                moves.append((dst, base + loc))
+                moved[base + loc] = dst
+                self.slots[dst] = sid
+                self.slots[base + loc] = None
+        # remap keys are the tenants' ORIGINAL old-capacity slots
+        remap: dict[int, int] = {}
+        slots: list[int | None] = [None] * (self.n_shards * c)
+        survivor_new = {}  # post-move old slot -> new slot
+        for sh in range(self.n_shards):
+            for loc in range(c):
+                sid = self.slots[sh * old_c + loc]
+                slots[sh * c + loc] = sid
+                if sid is not None:
+                    survivor_new[sh * old_c + loc] = sh * c + loc
+        for old_slot, new_slot in survivor_new.items():
+            remap[old_slot] = new_slot
+        for orig, interim in moved.items():
+            remap[orig] = survivor_new[interim]
+        self.slots, self.shard_capacity = slots, c
+        return moves, remap
+
+
+# ---------------------------------------------------------------------------
 # Stream plan: static per-hop geometry
 # ---------------------------------------------------------------------------
 

@@ -182,3 +182,59 @@ def test_active_param_count_moe():
     assert active < total
     # 27 MoE layers x 58 inactive experts x 3*2048*1408
     assert total - active == 27 * 58 * 3 * 2048 * 1408
+
+
+# ---------------------------------------------------------------------------
+# launch/report.py rendering
+# ---------------------------------------------------------------------------
+
+def _ok_cell(uf):
+    c = {
+        "arch": "a", "shape": "s", "mesh": "16x16", "status": "ok",
+        "roofline": {"compute_s": 0.5, "memory_s": 0.2, "collective_s": 0.1,
+                     "dominant": "compute"},
+        "mem": {"peak_gb": 1.0},
+    }
+    if uf is not None:
+        c["useful_flops_frac"] = uf
+    return c
+
+
+def test_report_zero_useful_flops_renders_as_value():
+    """useful_flops_frac == 0.0 is a measurement, not a missing field: it
+    must render as 0.00, while an absent field renders as em-dash."""
+    from repro.launch import report
+
+    line_zero = report.roofline_lines([_ok_cell(0.0)])[2]
+    assert "| 0.00 |" in line_zero and "| — |" not in line_zero
+    line_missing = report.roofline_lines([_ok_cell(None)])[2]
+    assert "| — |" in line_missing
+    line_half = report.roofline_lines([_ok_cell(0.5)])[2]
+    assert "| 0.50 |" in line_half
+
+
+def test_report_stream_table_renders_sweep_and_sharded():
+    from repro.launch import report
+
+    bench = {
+        "sweep": {"8": {"hop_ms_p50": 1.5, "stream_hops_per_sec": 4000.0,
+                        "uj_per_inference": 0.0005}},
+        "sharded": {
+            "total_streams": 1024,
+            "configs": {
+                "1": {"hop_ms_p50": 180.0, "stream_hops_per_sec": 5000.0,
+                      "uj_per_inference": 0.0005},
+                "8": {"hop_ms_p50": 150.0, "stream_hops_per_sec": 6000.0,
+                      "uj_per_inference": 0.0005},
+            },
+            "multi_vs_single": 1.2,
+        },
+    }
+    lines = report.stream_lines(bench)
+    text = "\n".join(lines)
+    assert "| steady | 8 | 1 | 1.500 | 4000 | 0.0005 |" in text
+    assert "| mesh-sharded | 1024 | 8 | 150.000 | 6000 | 0.0005 |" in text
+    assert "1.20x aggregate stream-hops/s" in text
+    # rows missing the newer fields (older artifacts) degrade to em-dash
+    legacy = report.stream_lines({"sweep": {"8": {"hop_ms_p50": 1.5}}})
+    assert "| steady | 8 | 1 | 1.500 | — | — |" in "\n".join(legacy)

@@ -272,6 +272,36 @@ def test_scheduler_peek_on_hop_boundary_uses_device_tail(smoke):
     np.testing.assert_array_equal(sched.peek(sid), outs[-1][2])
 
 
+def test_scheduler_peek_cached_across_masked_steps(smoke):
+    """A stream idle at a hop boundary keeps peeking its own last logits
+    (served from the emit cache) while OTHER streams advance — masked
+    rows ride through later finalizations unchanged."""
+    spec, weights, thresholds, _ = smoke
+    sched = StreamScheduler(spec, weights, thresholds, capacity=2)
+    plan = sched.plan
+    a, b = sched.add_stream(), sched.add_stream()
+    xa, xb = _clip(spec, 43), _clip(spec, 44)
+    sched.push_audio(a, xa[: plan.prime_samples + 2 * plan.hop_samples])
+    sched.push_audio(b, xb[: plan.prime_samples + 2 * plan.hop_samples])
+    outs = sched.run_until_starved()
+    want_a = [o[2] for o in outs if o[0] == a][-1]
+    # only b advances now; a sits masked at its hop boundary
+    sched.push_audio(b, xb[plan.prime_samples + 2 * plan.hop_samples :
+                           plan.prime_samples + 4 * plan.hop_samples])
+    sched.run_until_starved()
+    np.testing.assert_array_equal(sched.peek(a), want_a)
+    # and a freshly primed stream (no emit step yet) still peeks exactly
+    c_sched = StreamScheduler(spec, weights, thresholds, capacity=2)
+    c = c_sched.add_stream()
+    c_sched.push_audio(c, xa[: c_sched.plan.prime_samples])
+    c_sched.step()  # primes c; nothing ready -> no emit
+    spec_l = kws.build_kws_spec(in_len=c_sched.plan.prime_samples, width=16)
+    prog_l = compiler.compile_model(spec_l, weights, thresholds)
+    np.testing.assert_array_equal(
+        c_sched.peek(c), _offline(prog_l, xa[: c_sched.plan.prime_samples])
+    )
+
+
 def test_scheduler_pallas_hop_logits_match_jnp(smoke):
     """The pallas step + fused classifier-tail kernel emit the same per-hop
     logits as the jnp reference path."""
@@ -436,6 +466,67 @@ def test_scheduler_pallas_backend_matches_offline(smoke):
     sched.run_until_starved()
     res = sched.close_stream(sid)
     np.testing.assert_array_equal(res.logits, _offline(prog, x))
+
+
+# ---------------------------------------------------------------------------
+# Streaming energy: measured ledger charges, all Table-I components
+# ---------------------------------------------------------------------------
+
+def test_stream_energy_ledger_covers_all_components(smoke):
+    """Each hop charges the executor's EnergyLedger from the static plan:
+    the summary must carry real (non-zero) SA/SRAM/controller components,
+    not just e_mac, and scale linearly with hops executed."""
+    spec, weights, thresholds, _ = smoke
+    sched = StreamScheduler(spec, weights, thresholds, capacity=2)
+    plan = sched.plan
+    sid = sched.add_stream()
+    x = _clip(spec, 70)
+    sched.push_audio(sid, x[: plan.prime_samples + 4 * plan.hop_samples])
+    outs = sched.run_until_starved()
+    assert len(outs) == 4
+    e = sched.metrics.energy_summary()
+    for k in ("e_mac_uj", "e_sa_uj", "e_sram_uj", "e_ctrl_uj"):
+        assert e[k] > 0.0, k
+    assert e["energy_uj"] == pytest.approx(
+        e["e_mac_uj"] + e["e_sa_uj"] + e["e_sram_uj"] + e["e_ctrl_uj"]
+    )
+    assert e["tops_per_w_equiv"] > 0
+    # 4 hops, 4 finalizations: per-inference energy is the per-hop charge
+    assert e["uj_per_inference"] == pytest.approx(e["energy_uj"] / 4)
+    # the conv-cascade MAC count must match the plan's static budget
+    from repro.stream import plan_hop_ledger
+    hop = plan_hop_ledger(plan)
+    assert hop.macs == plan.macs_per_hop()
+    # another 2 hops scale every component linearly
+    sched.push_audio(
+        sid, x[plan.prime_samples + 4 * plan.hop_samples :
+               plan.prime_samples + 6 * plan.hop_samples]
+    )
+    sched.run_until_starved()
+    e2 = sched.metrics.energy_summary()
+    assert e2["energy_uj"] == pytest.approx(e["energy_uj"] * 6 / 4)
+
+
+def test_stream_energy_tail_only_when_finalizing(smoke):
+    """With emit_logits off the classifier tail is never executed, so its
+    fc MACs must not be charged."""
+    spec, weights, thresholds, _ = smoke
+    runs = {}
+    for emit in (True, False):
+        sched = StreamScheduler(spec, weights, thresholds, capacity=2,
+                                emit_logits=emit)
+        sid = sched.add_stream()
+        x = _clip(spec, 71)
+        sched.push_audio(
+            sid, x[: sched.plan.prime_samples + 2 * sched.plan.hop_samples]
+        )
+        sched.run_until_starved()
+        runs[emit] = sched.metrics
+    on, off = runs[True], runs[False]
+    fc_macs_per_hop = on.plan.fc_macs()
+    assert on.ledger.macs - off.ledger.macs == 2 * fc_macs_per_hop
+    assert off.finalizations == 0 and on.finalizations == 2
+    assert off.energy_summary()["uj_per_inference"] == 0.0
 
 
 # ---------------------------------------------------------------------------

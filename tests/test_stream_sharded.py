@@ -1,0 +1,297 @@
+"""Mesh-sharded streaming runtime: the sharded scheduler must be bit-exact
+with the single-device scheduler for identical stream traces — full-clip
+logits, per-hop logits, mid-hop peeks, join/leave churn, and elastic
+resize boundaries — across 1-, 2- and 8-shard meshes.
+
+Multi-shard cases need a forced multi-device host:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest tests/test_stream_sharded.py
+
+(the CI multi-device leg); on a 1-device host they skip and the 1-shard
+mesh case still proves the mesh path collapses to today's behavior.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import compiler, executor
+from repro.launch.mesh import make_stream_mesh
+from repro.models import kws
+from repro.stream import SlotPlacement, StreamScheduler
+
+SHARD_SWEEP = (1, 2, 8)
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    spec = kws.build_kws_smoke_spec()
+    params = kws.init_kws_params(jax.random.PRNGKey(0), spec)
+    weights, thresholds = kws.export_kws(params, spec)
+    prog = compiler.compile_model(spec, weights, thresholds)
+    return spec, weights, thresholds, prog
+
+
+def _mesh(n):
+    if jax.device_count() < n:
+        pytest.skip(
+            f"needs {n} devices (XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n})"
+        )
+    return make_stream_mesh(n)
+
+
+def _offline(prog, x):
+    return executor.Executor(prog).run(x[:, None]).output.ravel()
+
+
+def _clip(spec, seed):
+    return np.random.default_rng(seed).integers(
+        0, 256, (spec.in_len,)
+    ).astype(np.uint8)
+
+
+def _by_sid(outs):
+    d = {}
+    for sid, frame, logits, _ in outs:
+        d.setdefault(sid, []).append((frame, logits))
+    return d
+
+
+def _assert_outs_equal(a, b, stage=""):
+    da, db = _by_sid(a), _by_sid(b)
+    assert da.keys() == db.keys(), stage
+    for sid in da:
+        assert len(da[sid]) == len(db[sid]), (stage, sid)
+        for (fa, la), (fb, lb) in zip(da[sid], db[sid]):
+            assert fa == fb, (stage, sid)
+            if la is None or lb is None:
+                assert la is None and lb is None, (stage, sid)
+            else:
+                np.testing.assert_array_equal(la, lb)
+
+
+# ---------------------------------------------------------------------------
+# Placement unit behavior
+# ---------------------------------------------------------------------------
+
+def test_placement_least_loaded_alloc_and_balance():
+    p = SlotPlacement(4, 2)
+    slots = [p.alloc(sid) for sid in range(8)]
+    assert sorted(slots) == list(range(8))
+    # first 4 streams spread one per shard before any shard takes a second
+    assert sorted(p.shard_of(s) for s in slots[:4]) == [0, 1, 2, 3]
+    assert p.alloc(99) is None  # full
+    p.free(slots[3])
+    assert p.alloc(99) == slots[3]  # freed slot's shard is least loaded
+
+
+def test_placement_single_shard_is_lowest_free_slot():
+    # one shard must reproduce the pre-mesh scheduler's slot choice
+    p = SlotPlacement(1, 4)
+    assert [p.alloc(s) for s in range(3)] == [0, 1, 2]
+    p.free(1)
+    assert p.alloc(7) == 1
+
+
+def test_placement_grow_shrink_never_cross_shards():
+    p = SlotPlacement(2, 2)
+    for sid in range(4):
+        p.alloc(sid)
+    shard_before = {sid: p.shard_of(p.slots.index(sid)) for sid in range(4)}
+    remap = p.grow(4)
+    assert p.capacity == 8 and set(remap) == {0, 1, 2, 3}
+    for old, new in remap.items():
+        assert old // 2 == new // 4  # same shard block
+    # occupy the new upper local slots, then vacate the low ones so the
+    # shrink has to compact within each shard
+    for sid in (4, 5):
+        p.alloc(sid)
+    for sid in (0, 1):
+        p.free(p.slots.index(sid))
+    shard_up = {sid: p.shard_of(p.slots.index(sid)) for sid in (2, 3, 4, 5)}
+    moves, remap2 = p.shrink(2)
+    assert p.capacity == 4 and moves  # compaction actually happened
+    for dst, src in moves:
+        assert dst // 4 == src // 4  # moves stay inside one old shard block
+    for sid in (2, 3, 4, 5):
+        slot = p.slots.index(sid)
+        assert p.shard_of(slot) == shard_up[sid]
+    # every survivor's pre-shrink slot is remapped into the new indexing
+    assert set(remap2.values()) == {p.slots.index(sid) for sid in (2, 3, 4, 5)}
+    assert shard_before[2] == p.shard_of(p.slots.index(2))
+
+
+def test_placement_shrink_refuses_overfull_shard():
+    p = SlotPlacement(2, 4)
+    for sid in range(3):  # least-loaded spreads 2/1
+        p.alloc(sid)
+    p.alloc(3)
+    p.alloc(4)  # shard 0 now holds 3 tenants
+    with pytest.raises(ValueError):
+        p.shrink(2)
+
+
+# ---------------------------------------------------------------------------
+# Sharded == single-device, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", SHARD_SWEEP)
+def test_sharded_full_clip_and_hop_logits_bitexact(smoke, n_shards):
+    """Identical traces through a sharded and a single-device scheduler:
+    every per-hop logit row and every flushed close() must agree, and both
+    must equal the offline executor."""
+    spec, weights, thresholds, prog = smoke
+    mesh = _mesh(n_shards)
+    n = 2 * n_shards
+    clips = {j: _clip(spec, 300 + j) for j in range(n)}
+    ref = StreamScheduler(spec, weights, thresholds, capacity=n)
+    sh = StreamScheduler(spec, weights, thresholds, capacity=n, mesh=mesh)
+    for sched in (ref, sh):
+        for j in range(n):
+            assert sched.add_stream() == j
+            sched.push_audio(j, clips[j])
+    _assert_outs_equal(ref.run_until_starved(), sh.run_until_starved())
+    for j in range(n):
+        ra, rb = ref.close_stream(j), sh.close_stream(j)
+        np.testing.assert_array_equal(ra.logits, rb.logits)
+        np.testing.assert_array_equal(rb.logits, _offline(prog, clips[j]))
+
+
+@pytest.mark.parametrize("n_shards", SHARD_SWEEP)
+def test_sharded_mid_hop_peek_bitexact(smoke, n_shards):
+    """peek() with leftover sub-hop samples (exact numpy fallback) and on a
+    hop boundary (device finalization tail) both match the single-device
+    scheduler and the offline prefix."""
+    spec, weights, thresholds, _ = smoke
+    mesh = _mesh(n_shards)
+    x = _clip(spec, 310)
+    prefix = 520  # not hop-aligned: leaves leftover samples in the inbox
+    spec_l = kws.build_kws_spec(in_len=prefix, width=16)
+    off = _offline(compiler.compile_model(spec_l, weights, thresholds),
+                   x[:prefix])
+    peeks = {}
+    for label, mesh_ in (("ref", None), ("sharded", mesh)):
+        sched = StreamScheduler(spec, weights, thresholds,
+                                capacity=n_shards, mesh=mesh_)
+        sid = sched.add_stream()
+        sched.push_audio(sid, x[:prefix])
+        sched.run_until_starved()
+        assert len(sched._streams[sid].frontend) > 0  # mid-hop leftover
+        peeks[label] = sched.peek(sid)
+        # drain to a hop boundary: peek now reads the in-jit tail
+        sched.push_audio(sid, x[prefix:])
+        outs = sched.run_until_starved()
+        assert len(sched._streams[sid].frontend) < sched.plan.hop_samples
+        peeks[label + "_hop"] = (outs[-1][2], sched.peek(sid))
+    np.testing.assert_array_equal(peeks["ref"], off)
+    np.testing.assert_array_equal(peeks["sharded"], off)
+    np.testing.assert_array_equal(peeks["ref_hop"][0], peeks["sharded_hop"][0])
+
+
+@pytest.mark.parametrize("n_shards", SHARD_SWEEP)
+def test_sharded_churn_and_resize_bitexact(smoke, n_shards):
+    """Join/leave churn across elastic grow AND shrink boundaries: the
+    sharded elastic pool must emit the same logits as a pinned
+    single-device pool, and resizes must stay per-shard."""
+    spec, weights, thresholds, prog = smoke
+    mesh = _mesh(n_shards)
+    n = 4 * n_shards  # ceiling; elastic pool starts at 2 * n_shards
+    clips = {j: _clip(spec, 330 + j) for j in range(n)}
+    el = StreamScheduler(spec, weights, thresholds, capacity=n, mesh=mesh)
+    fx = StreamScheduler(spec, weights, thresholds, capacity=n,
+                         initial_capacity=n, min_capacity=n)  # pinned, 1 dev
+    assert el.capacity == 2 * n_shards and el.shard_capacity == 2
+
+    def lockstep(stage):
+        _assert_outs_equal(el.run_until_starved(), fx.run_until_starved(),
+                           stage)
+
+    half = n // 2
+    for sched in (el, fx):
+        for j in range(half):
+            assert sched.add_stream() == j
+            sched.push_audio(j, clips[j][:400])
+    lockstep("warm")
+    assert el.capacity == 2 * n_shards  # no grow yet
+
+    # the second half joins -> elastic pool grows per-shard (2 -> 4 local)
+    for sched in (el, fx):
+        for j in range(half, n):
+            assert sched.add_stream() == j
+            sched.push_audio(j, clips[j])
+        for j in range(half):
+            sched.push_audio(j, clips[j][400:])
+    lockstep("grow")
+    assert el.capacity == n and el.shard_capacity == 4
+
+    # most streams leave -> pool shrinks; survivors keep streaming
+    survivors = list(range(n - max(1, n_shards // 2), n))
+    for sched in (el, fx):
+        for j in range(n):
+            if j in survivors:
+                continue
+            res = sched.close_stream(j)
+            np.testing.assert_array_equal(
+                res.logits, _offline(prog, clips[j])
+            )
+    assert el.capacity < n  # actually shrank
+    for sched in (el, fx):
+        for j in survivors:
+            sched.push_audio(j, clips[j][:0])  # no-op keeps traces aligned
+    lockstep("shrink")
+    for sched in (el, fx):
+        for j in survivors:
+            res = sched.close_stream(j)
+            np.testing.assert_array_equal(
+                res.logits, _offline(prog, clips[j])
+            )
+    caps = [c for _, c in el.metrics.capacity_events]
+    assert any(c == n for c in caps) and caps[-1] < n  # grew and shrank
+
+
+@pytest.mark.parametrize("n_shards", [2, 8])
+def test_sharded_pallas_backend_matches_jnp(smoke, n_shards):
+    """The shard_map kernel entry points emit the same per-hop logits as
+    the GSPMD-partitioned jnp path."""
+    spec, weights, thresholds, _ = smoke
+    mesh = _mesh(n_shards)
+    x = _clip(spec, 350)
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        sched = StreamScheduler(spec, weights, thresholds,
+                                capacity=n_shards, hop_frames=4,
+                                backend=backend, mesh=mesh)
+        sid = sched.add_stream()
+        sched.push_audio(sid, x)
+        outs[backend] = sched.run_until_starved()
+    assert len(outs["jnp"]) == len(outs["pallas"]) >= 1
+    _assert_outs_equal(outs["jnp"], outs["pallas"])
+
+
+def test_sharded_capacity_must_divide(smoke):
+    spec, weights, thresholds, _ = smoke
+    mesh = _mesh(2)
+    with pytest.raises(AssertionError):
+        StreamScheduler(spec, weights, thresholds, capacity=3, mesh=mesh)
+
+
+@pytest.mark.parametrize("n_shards", [2, 8])
+def test_shard_metrics_cover_all_shards(smoke, n_shards):
+    spec, weights, thresholds, _ = smoke
+    mesh = _mesh(n_shards)
+    sched = StreamScheduler(spec, weights, thresholds,
+                            capacity=2 * n_shards, mesh=mesh)
+    for j in range(n_shards):
+        sched.add_stream()
+        sched.push_audio(
+            j, _clip(spec, 360 + j)[: sched.plan.prime_samples
+                                    + 2 * sched.plan.hop_samples]
+        )
+    sched.run_until_starved()
+    ss = sched.metrics.shard_summary()
+    assert ss["n_shards"] == n_shards
+    # least-loaded placement spreads one stream per shard
+    assert all(p["stream_hops"] == 2 for p in ss["per_shard"])
+    assert ss["imbalance"] == pytest.approx(1.0)
+    assert ss["fleet_stream_hops"] == 2 * n_shards
