@@ -12,8 +12,13 @@ IS hop-to-logits latency.  Reported:
 
   * steady-state hop latency p50/p95, frames/sec and measured silicon-
     equivalent uJ/inference at B in {8, 64, 256} (every slot active,
-    per-hop logits on)
+    per-hop logits on), with the hop split into host-pack vs device time
+    (``host_pack_ms_p50`` / ``device_ms_p50`` per config)
   * before/after vs the previous committed BENCH_stream.json at B=8
+  * the host-pack microbench at B=1024: the pre-arena per-slot ring walk
+    (one python pop per stream per hop) vs ``RingArena.pack_hops``'s one
+    vectorized gather — the ``host_pack_ms`` field CI asserts on, with
+    the before/after reduction recorded
   * a join/leave churn scenario against the elastic slot pool: staggered
     arrivals/departures, pool resizes counted, hop latency under churn
   * the offline re-run baseline frames/sec and the speedup
@@ -51,7 +56,7 @@ from repro.core.executor import Executor
 from repro.data import gscd
 from repro.launch.mesh import make_stream_mesh
 from repro.models import kws
-from repro.stream import StreamScheduler
+from repro.stream import FrameRing, RingArena, StreamScheduler, plan_stream
 
 SMOKE = os.environ.get("STREAM_BENCH_SMOKE", "") not in ("", "0")
 
@@ -90,39 +95,85 @@ def _steady(spec, weights, thresholds, n_streams: int, mesh=None,
     audio = rng.integers(0, 256, (n_streams, need)).astype(np.uint8)
     sids = [sched.add_stream() for _ in range(n_streams)]
 
-    # prime + trace the jitted step outside the timed region
+    # prime + trace the jitted step outside the timed region; results are
+    # consumed columnar (sched.drain) — the per-stream tuple collation of
+    # run_until_starved is exactly the per-slot python the vectorized
+    # ingest plane removed, so the bench measures the hot path itself
     pos = plan.prime_samples + plan.hop_samples
-    for i, sid in enumerate(sids):
-        sched.push_audio(sid, audio[i, :pos])
-    sched.run_until_starved()
+    sched.push_audio_batch(sids, list(audio[:, :pos]))
+    sched.drain()
     for r in range(warm_rounds):
-        for i, sid in enumerate(sids):
-            sched.push_audio(sid, audio[i, pos : pos + chunk])
-        sched.run_until_starved()
+        sched.push_audio_batch(sids, list(audio[:, pos : pos + chunk]))
+        sched.drain()
         pos += chunk
 
     warm_steps = len(sched.metrics.step_wall_s)
     frames_warm = sched.metrics.frames_total()
     t0 = time.perf_counter()
     for r in range(timed_rounds):
-        for i, sid in enumerate(sids):
-            sched.push_audio(sid, audio[i, pos : pos + chunk])
-        sched.run_until_starved()
+        sched.push_audio_batch(sids, list(audio[:, pos : pos + chunk]))
+        sched.drain()
         pos += chunk
     wall = time.perf_counter() - t0
 
     steady = np.asarray(sched.metrics.step_wall_s[warm_steps:])
+    pack = np.asarray(sched.metrics.step_pack_s[warm_steps:])
     frames = sched.metrics.frames_total() - frames_warm
     p50, p95 = np.percentile(steady, [50, 95]) * 1e3
     energy = sched.metrics.energy_summary()
     return {
         "hop_ms_p50": float(p50),
         "hop_ms_p95": float(p95),
+        "host_pack_ms_p50": float(np.percentile(pack, 50) * 1e3),
+        "device_ms_p50": float(np.percentile(steady - pack, 50) * 1e3),
         "frames_per_sec": frames / wall,
         "stream_hops_per_sec": frames / plan.frames_per_hop / wall,
         "audio_sec_per_wall_sec": frames * plan.samples_per_frame
         / gscd.SR / wall,
         "uj_per_inference": energy["uj_per_inference"],
+    }
+
+
+def _host_pack_micro(hop_samples: int, n_streams: int = 1024,
+                     rounds: int = 8) -> dict[str, float]:
+    """Host-side hop packing in isolation, before vs after the arena.
+
+    "Before" reconstructs the PR-3 packing loop: one per-stream ring
+    object (u8 codes as (n, 1) int32 — the old AudioFrontend layout) and
+    one python pop per stream per hop, scattered row by row into the
+    batched step input.  "After" is the shared RingArena's one-shot
+    ``pack_hops`` gather.  Same data, same output, no device work — this
+    isolates exactly the serial floor the ingest refactor removes.
+    """
+    rng = np.random.default_rng(7)
+    need = (rounds + 1) * hop_samples
+    codes = rng.integers(0, 256, (n_streams, need)).astype(np.uint8)
+
+    rings = [FrameRing(need, 1, np.int32) for _ in range(n_streams)]
+    for i, r in enumerate(rings):
+        r.push(codes[i].astype(np.int32)[:, None])
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        audio = np.zeros((n_streams, hop_samples), np.int32)
+        for i, r in enumerate(rings):
+            audio[i] = r.pop(hop_samples)[:, 0]
+    t_before = (time.perf_counter() - t0) / rounds
+    check_before = audio.sum()
+
+    arena = RingArena(n_streams, need)
+    arena.push_batch(np.arange(n_streams), list(codes))
+    slots = np.arange(n_streams)
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        audio = arena.pack_hops(slots, hop_samples)
+    t_after = (time.perf_counter() - t0) / rounds
+    assert audio.sum() == check_before  # same final hop, both paths
+    return {
+        "streams": float(n_streams),
+        "hop_samples": float(hop_samples),
+        "host_pack_ms_before": t_before * 1e3,
+        "host_pack_ms_after": t_after * 1e3,
+        "reduction": t_before / t_after,
     }
 
 
@@ -227,8 +278,11 @@ def run() -> list[str]:
     # every new frame on every stream would pay one full re-run
     baseline_fps = BATCH_SWEEP[0] / t_rerun
 
-    # ---- steady-state sweep + churn + mesh-sharded sweep --------------------
+    # ---- steady-state sweep + host-pack micro + churn + sharded sweep ------
     sweep = {b: _steady(spec, weights, thresholds, b) for b in BATCH_SWEEP}
+    pack_plan = plan_stream(spec, hop_frames=SHARD_HOP_FRAMES)
+    host_pack = _host_pack_micro(pack_plan.hop_samples,
+                                 rounds=2 if SMOKE else 8)
     churn = _churn(spec, weights, thresholds)
     sharded = _sharded_sweep(spec, weights, thresholds)
     sharded_skipped = sharded is None
@@ -260,6 +314,11 @@ def run() -> list[str]:
         "speedup_vs_rerun": speedup,
         "prev_step_ms_p50": prev_p50,
         "hop_speedup_vs_prev": hop_speedup,
+        # host-side per-hop packing at B=1024: the field CI asserts on
+        # (vectorized arena gather), with the pre-arena per-slot loop and
+        # the reduction recorded next to it
+        "host_pack_ms": host_pack["host_pack_ms_after"],
+        "host_pack": host_pack,
         "sweep": {str(b): sweep[b] for b in BATCH_SWEEP},
         "churn": churn,
         "sharded": sharded,
@@ -274,6 +333,12 @@ def run() -> list[str]:
             f"B={BATCH_SWEEP[0]} streams, per-hop logits on"),
         row("stream.hop_ms_p50", f"{b0['hop_ms_p50']:.3f}",
             "steady-state hop -> finalized logits"),
+        row("stream.host_pack_ms_b1024", f"{host_pack['host_pack_ms_after']:.3f}",
+            f"arena gather; per-slot loop was "
+            f"{host_pack['host_pack_ms_before']:.3f}"),
+        row("stream.host_pack_reduction", f"{host_pack['reduction']:.1f}",
+            f"{'PASS' if host_pack['reduction'] >= 5 else 'FAIL'} "
+            "(floor 5x, B=1024)"),
         row("stream.uj_per_inference", f"{b0['uj_per_inference']:.4f}",
             "measured ledger: mac+sa+sram+ctrl"),
     ]

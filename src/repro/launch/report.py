@@ -69,19 +69,25 @@ def _num(row: dict, key: str, fmt: str) -> str:
 
 def stream_lines(bench: dict) -> list[str]:
     """§Streaming table: the BENCH_stream.json steady-state sweep and the
-    mesh-sharded 1k-stream sweep, one row per configuration."""
+    mesh-sharded 1k-stream sweep, one row per configuration, with each
+    hop's latency split into its host-pack and device halves."""
     out = [
         "",
         "## Streaming (BENCH_stream.json)",
         "",
-        "| config | streams | shards | hop p50 ms | stream-hops/s | uJ/inference |",
-        "|---|---|---|---|---|---|",
+        "| config | streams | shards | hop p50 ms | host-pack ms | "
+        "device ms | stream-hops/s | uJ/inference |",
+        "|---|---|---|---|---|---|---|---|",
     ]
 
     def row(label: str, streams, shards, r: dict) -> str:
+        # _num is falsy-safe: a measured 0.0 renders as a number, only a
+        # missing field (pre-arena artifacts) renders as "—"
         return (
             f"| {label} | {streams} | {shards} "
             f"| {_num(r, 'hop_ms_p50', '.3f')} "
+            f"| {_num(r, 'host_pack_ms_p50', '.3f')} "
+            f"| {_num(r, 'device_ms_p50', '.3f')} "
             f"| {_num(r, 'stream_hops_per_sec', '.0f')} "
             f"| {_num(r, 'uj_per_inference', '.4f')} |"
         )
@@ -104,6 +110,14 @@ def stream_lines(bench: dict) -> list[str]:
             f"\nbest multi-shard vs best single-device at "
             f"{total} streams: {ratio:.2f}x aggregate stream-hops/s"
             + (" (prior run)" if stale else "")
+        )
+    hp = bench.get("host_pack") or {}
+    if isinstance(hp.get("reduction"), (int, float)):
+        out.append(
+            f"\nhost-side hop packing at {hp.get('streams', 0):.0f} "
+            f"streams: {hp['host_pack_ms_before']:.3f} ms (per-slot loop) "
+            f"-> {hp['host_pack_ms_after']:.3f} ms (arena gather), "
+            f"{hp['reduction']:.1f}x"
         )
     return out
 

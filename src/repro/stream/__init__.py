@@ -18,14 +18,25 @@ one pool per device — the paper's one-large-macro argument): pass
 shards its batch axis over the mesh's ``"data"`` axis with the weights
 replicated, bit-exactly (tests/test_stream_sharded.py).
 
+The host ingest plane is struct-of-arrays: every stream's sample inbox is
+one row of a shared ``RingArena`` (uint8, widened to int32 only at pack
+time), so the steady-state hop packs all ready inboxes with one vectorized
+gather, pushes land via ``StreamScheduler.push_audio_batch`` (one quantize
++ one scatter for many streams), and detection advances through the
+slot-vectorized ``BatchedDetector`` — zero per-slot python on the hop hot
+path.
+
 Modules:
-  frontend   incremental PCM -> 8-bit offset-binary model frames
-  state      stream plan, ring buffers, per-stream + batched conv state,
-             slot->shard placement (SlotPlacement)
+  frontend   incremental PCM -> 8-bit offset-binary model frames (thin
+             per-stream facade over the shared RingArena)
+  state      stream plan, ring buffers + shared RingArena, per-stream +
+             batched conv state, slot->shard placement (SlotPlacement)
   scheduler  elastic continuous-batching scheduler (jitted step with
              in-jit finalization tail, optional mesh sharding)
   detector   posterior smoothing + hysteresis/refractory event logic
-  metrics    per-stream/per-shard counters + measured EnergyLedger charges
+             (per-stream oracle + slot-vectorized BatchedDetector)
+  metrics    fleet counters split host-pack vs device per hop + measured
+             EnergyLedger charges
 
 Quickstart — join / feed / poll / close (``pydoc repro.stream``):
 
@@ -55,12 +66,18 @@ batched call and returns ``(sid, frame, logits, event)`` per advanced
 stream, where ``logits`` are the exact logits the offline executor would
 produce if that stream's utterance ended at this hop.
 """
-from repro.stream.detector import Detection, DetectorConfig, PosteriorDetector
+from repro.stream.detector import (
+    BatchedDetector,
+    Detection,
+    DetectorConfig,
+    PosteriorDetector,
+)
 from repro.stream.frontend import AudioFrontend, quantize_pcm
 from repro.stream.metrics import StreamMetrics, plan_hop_ledger
-from repro.stream.scheduler import StreamResult, StreamScheduler
+from repro.stream.scheduler import HopBatch, StreamResult, StreamScheduler
 from repro.stream.state import (
     FrameRing,
+    RingArena,
     SlotPlacement,
     StreamPlan,
     StreamState,
@@ -69,10 +86,13 @@ from repro.stream.state import (
 
 __all__ = [
     "AudioFrontend",
+    "BatchedDetector",
     "Detection",
     "DetectorConfig",
     "FrameRing",
+    "HopBatch",
     "PosteriorDetector",
+    "RingArena",
     "SlotPlacement",
     "StreamMetrics",
     "StreamPlan",

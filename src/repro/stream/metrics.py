@@ -13,7 +13,12 @@ accounting convention.
 Step timing covers the whole per-hop pipeline *including* per-slot
 finalized logits: finalization runs inside the jitted step (the fused
 tail), so there is no separate host-side peek bucket to account for — the
-step latency percentile IS the hop-to-logits latency.
+step latency percentile IS the hop-to-logits latency.  Each step records
+the split between *host packing* (building the batched audio/mask from
+the shared ``RingArena`` — the part the vectorized ingest plane exists to
+shrink) and everything else (device step + transfers + batched detector),
+so a regression in either half is visible on its own
+(``host_pack_ms_p50`` / ``device_ms_p50`` in ``summary``).
 """
 from __future__ import annotations
 
@@ -115,11 +120,19 @@ def _charge_scaled(dst: EnergyLedger, src: EnergyLedger, n: int) -> None:
 
 @dataclasses.dataclass
 class StreamCounters:
+    """Per-stream dashboard counters.
+
+    ``detections`` updates live; ``samples_in`` (owned live by the shared
+    arena's vectorized per-slot counter) and ``frames_out`` fold in when
+    the stream closes — neither the hop hot path nor the bulk ingest path
+    walks per-stream counter objects (fleet totals come from the
+    step-level aggregates in ``StreamMetrics``).
+    """
+
     stream_id: int
     joined_at: float
     samples_in: int = 0
     frames_out: int = 0
-    steps: int = 0
     detections: int = 0
     closed_at: float | None = None
 
@@ -140,8 +153,10 @@ class StreamMetrics:
         self.streams: dict[int, StreamCounters] = {}
         self.retired: list[StreamCounters] = []  # closed tenants of reused sids
         self.step_wall_s: list[float] = []
+        self.step_pack_s: list[float] = []  # host-side packing share of wall
         self.step_streams: list[int] = []
         self.step_shard_streams: list[list[int]] = []  # per step, per shard
+        self._frames_emitted = 0  # fleet total, accumulated per step
         self.capacity_events: list[tuple[float, int]] = []  # (t, new_cap)
         # silicon-equivalent energy: static per-hop/-finalize charges from
         # the plan, accumulated into one fleet ledger as hops execute
@@ -159,30 +174,29 @@ class StreamMetrics:
             self.retired.append(old)
         self.streams[sid] = StreamCounters(sid, time.perf_counter() - self._t0)
 
-    def on_audio(self, sid: int, n_samples: int) -> None:
-        self.streams[sid].samples_in += n_samples
-
-    def on_step(self, ready_sids: list[int], frames_each: int, wall_s: float,
+    def on_step(self, n_ready: int, frames_each: int, wall_s: float,
+                host_pack_s: float = 0.0,
                 shard_counts: list[int] | None = None,
                 finalized: bool = True) -> None:
+        """Record one batched hop: ``n_ready`` streams advanced in
+        ``wall_s`` seconds of which ``host_pack_s`` was host-side batch
+        packing.  Aggregate-only — the hot path never walks per-stream
+        counter objects (that was the pre-arena serial floor)."""
         if shard_counts is None:
             # only unambiguous without a mesh; sharded callers must say
             # which shard advanced what or shard_summary would lie
             assert self.n_shards == 1, "shard_counts required when sharded"
-            shard_counts = [len(ready_sids)]
+            shard_counts = [n_ready]
         assert len(shard_counts) == self.n_shards, (shard_counts, self.n_shards)
         self.step_wall_s.append(wall_s)
-        self.step_streams.append(len(ready_sids))
+        self.step_pack_s.append(host_pack_s)
+        self.step_streams.append(n_ready)
         self.step_shard_streams.append(list(shard_counts))
-        n = len(ready_sids)
-        _charge_scaled(self.ledger, self._hop_ledger, n)
+        self._frames_emitted += n_ready * frames_each
+        _charge_scaled(self.ledger, self._hop_ledger, n_ready)
         if finalized:
-            _charge_scaled(self.ledger, self._tail_ledger, n)
-            self.finalizations += n
-        for sid in ready_sids:
-            c = self.streams[sid]
-            c.steps += 1
-            c.frames_out += frames_each
+            _charge_scaled(self.ledger, self._tail_ledger, n_ready)
+            self.finalizations += n_ready
 
     def on_detection(self, sid: int) -> None:
         self.streams[sid].detections += 1
@@ -193,18 +207,25 @@ class StreamMetrics:
             (time.perf_counter() - self._t0, new_capacity)
         )
 
-    def on_close(self, sid: int) -> None:
-        self.streams[sid].closed_at = time.perf_counter() - self._t0
+    def on_close(self, sid: int, frames_out: int = 0,
+                 samples_in: int | None = None) -> None:
+        c = self.streams[sid]
+        c.closed_at = time.perf_counter() - self._t0
+        c.frames_out = frames_out
+        if samples_in is not None:
+            # the shared arena's vectorized per-slot counter is the truth;
+            # it folds in here instead of being twinned on every push
+            c.samples_in = samples_in
 
     # -- reporting -----------------------------------------------------------
 
     def frames_total(self) -> int:
-        return sum(c.frames_out for c in self.streams.values()) + sum(
-            c.frames_out for c in self.retired
-        )
+        """Fleet total of final-conv frames emitted by batched hops."""
+        return self._frames_emitted
 
     def summary(self) -> dict[str, float]:
         wall = np.asarray(self.step_wall_s) if self.step_wall_s else np.zeros(1)
+        pack = np.asarray(self.step_pack_s) if self.step_pack_s else np.zeros(1)
         frames = self.frames_total()
         elapsed = sum(self.step_wall_s) or 1e-12
         audio_s = frames * self.plan.samples_per_frame / self.sample_rate
@@ -217,6 +238,12 @@ class StreamMetrics:
             "audio_sec_per_wall_sec": audio_s / elapsed,  # real-time factor
             "step_ms_p50": float(np.percentile(wall, 50) * 1e3),
             "step_ms_p95": float(np.percentile(wall, 95) * 1e3),
+            # the hop's host/device split: pack = building the batched
+            # audio+mask from the arena; device = step + transfers +
+            # batched detector.  Regressions in either half show alone.
+            "host_pack_ms_p50": float(np.percentile(pack, 50) * 1e3),
+            "host_pack_ms_p95": float(np.percentile(pack, 95) * 1e3),
+            "device_ms_p50": float(np.percentile(wall - pack, 50) * 1e3),
             "mean_batch_occupancy": float(np.mean(self.step_streams))
             if self.step_streams else 0.0,
             "resizes": float(len(self.capacity_events)),

@@ -11,6 +11,14 @@ axis and advances them with ONE jitted step per hop:
   * streams whose inbox holds less than a hop are masked out of the step
     (their state passes through untouched), so stragglers never force a
     re-trace — continuous batching, not synchronized batching;
+  * **the ingest plane is struct-of-arrays** (``state.RingArena``): every
+    stream's inbox is one row of a shared uint8 sample arena, so the
+    steady-state hop packs all ready inboxes with ONE vectorized gather
+    (``pack_hops``), readiness is one compare, audio lands via one
+    scatter (``push_audio_batch``), and detection advances through the
+    slot-vectorized ``BatchedDetector`` — zero per-slot python anywhere
+    on the hop hot path (``step_batch``; the tuple-per-stream ``step``
+    API survives as a thin collation wrapper);
   * the slot pool grows and shrinks at power-of-two sizes: a resize
     pads/slices the batched ring state along the batch axis and lets jit
     re-trace at the new static shape, so bursty arrivals are absorbed
@@ -55,14 +63,21 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.cnn_spec import CNN1DSpec
 from repro.kernels import ops
 from repro.launch.mesh import dp_axes, dp_size
-from repro.stream.detector import Detection, DetectorConfig, PosteriorDetector
+from repro.stream.detector import (
+    BatchedDetector,
+    Detection,
+    DetectorConfig,
+    _softmax,
+)
 from repro.stream.frontend import AudioFrontend, FrontendConfig
 from repro.stream.metrics import StreamMetrics
 from repro.stream.state import (
+    RingArena,
     SlotPlacement,
     StreamPlan,
     StreamState,
     plan_stream,
+    remap_rows,
 )
 from repro.utils.logging import get_logger
 
@@ -81,13 +96,26 @@ class StreamResult:
 
 
 @dataclasses.dataclass
+class HopBatch:
+    """One batched hop's results in columnar (struct-of-arrays) form —
+    what ``step_batch`` returns without ever materializing per-stream
+    python objects.  ``detections`` is sparse: one entry per fired event,
+    usually empty."""
+
+    sids: np.ndarray                 # (R,) stream ids advanced this hop
+    frames: np.ndarray               # (R,) final-conv frame counts after it
+    logits: np.ndarray | None        # (R, n_classes) finalized logits
+    posteriors: np.ndarray | None    # (R, n_classes) on-device softmax
+    detections: list[Detection]
+
+
+@dataclasses.dataclass
 class _Stream:
     sid: int
     slot: int
-    frontend: AudioFrontend
-    detector: PosteriorDetector
+    frontend: AudioFrontend   # facade over the shared arena row
+    events: list[Detection]
     primed: bool = False
-    frames: int = 0
     stamp: int = 0  # emit-step from which cached hop logits cover this slot
 
 
@@ -356,6 +384,7 @@ class StreamScheduler:
         initial_capacity: int | None = None,
         min_capacity: int | None = None,
         mesh=None,
+        inbox_samples: int | None = None,
     ) -> None:
         assert backend in ("jnp", "pallas"), backend
         self.plan = plan_stream(spec, hop_frames=hop_frames)
@@ -406,7 +435,26 @@ class StreamScheduler:
         self._gap = self._shard(
             jnp.zeros((cap0, self.plan.gap_channels), jnp.int32)
         )
+        # the ingest plane: ONE shared sample arena + slot-vectorized
+        # detector + slot-indexed bookkeeping vectors, all resized through
+        # the same SlotPlacement remap as the device arrays
+        base_inbox = (
+            inbox_samples if inbox_samples is not None
+            else FrontendConfig().capacity_samples
+        )
+        # whole hops only: keeps primed slots on pack_hops' block-aligned
+        # contiguous fast path (see RingArena.rebase)
+        hop = self.plan.hop_samples
+        self._inbox_samples = -(-base_inbox // hop) * hop
+        self._arena = RingArena(cap0, self._inbox_samples)
+        self._detector = BatchedDetector(
+            cap0, self.plan.fcs[-1].cout, self.detector_cfg
+        )
+        self._slot_sid = np.full(cap0, -1, np.int64)
+        self._primed_mask = np.zeros(cap0, bool)
+        self._frames_v = np.zeros(cap0, np.int64)  # frames per slot
         self._streams: dict[int, _Stream] = {}
+        self._unprimed: set[int] = set()  # empty in steady state
         self._next_sid = 0
         # hop-boundary peeks are served from the last emit step's logits:
         # _finalize covers EVERY primed slot (masked rows hold steady
@@ -471,8 +519,16 @@ class StreamScheduler:
         self._tails = [adjust(t) for t in self._tails]
         self._pendings = [adjust(p) for p in self._pendings]
         self._gap = adjust(self._gap)
+        # the host-side ingest plane rides the same placement remap, so a
+        # stream's inbox/detector/bookkeeping rows stay glued to its slot
+        self._arena.apply_remap(remap, new_cap)
+        self._detector.apply_remap(remap, new_cap)
+        self._slot_sid = remap_rows(self._slot_sid, remap, new_cap, fill=-1)
+        self._primed_mask = remap_rows(self._primed_mask, remap, new_cap)
+        self._frames_v = remap_rows(self._frames_v, remap, new_cap)
         for s in self._streams.values():
             s.slot = remap[s.slot]
+            s.frontend._slot = s.slot
         self._emit_cache = None  # cached rows are indexed by old slots
         self._capacity = new_cap
         self.metrics.on_resize(new_cap)
@@ -512,16 +568,43 @@ class StreamScheduler:
         self._streams[sid] = _Stream(
             sid=sid,
             slot=slot,
-            frontend=AudioFrontend(frontend_cfg),
-            detector=PosteriorDetector(sid, self.detector_cfg),
+            frontend=AudioFrontend(frontend_cfg, arena=self._arena,
+                                   slot=slot),
+            events=[],
         )
+        self._slot_sid[slot] = sid
+        self._detector.reset_slot(slot)
+        self._unprimed.add(sid)
         self.metrics.on_join(sid)
         return sid
 
+    def _require(self, sid: int) -> _Stream:
+        s = self._streams.get(sid)
+        if s is None:
+            live = sorted(self._streams)
+            shown = live if len(live) <= 8 else live[:8] + ["..."]
+            raise KeyError(
+                f"unknown or already-closed stream sid {sid}; "
+                f"{len(live)} live sid(s): {shown}"
+            )
+        return s
+
     def push_audio(self, sid: int, audio: np.ndarray) -> None:
-        s = self._streams[sid]
-        s.frontend.push(audio)
-        self.metrics.on_audio(sid, np.asarray(audio).shape[0])
+        s = self._require(sid)
+        s.frontend.push(audio)  # arena counts samples_in; folded at close
+
+    def push_audio_batch(self, sids: list[int],
+                         chunks: list[np.ndarray]) -> None:
+        """Bulk twin of ``push_audio``: one vectorized quantize + scatter
+        lands every stream's chunk in the shared arena
+        (``RingArena.push_batch``) — the ingest half of the zero-per-slot
+        hop path.  Float PCM and u8 chunks may be mixed; each sid may
+        appear at most once per call.  Per-stream ``samples_in`` counters
+        are NOT walked here — the arena's vectorized counter is the truth
+        and folds into the stream's metrics at close."""
+        streams = [self._require(sid) for sid in sids]
+        slots = np.fromiter((s.slot for s in streams), np.int64, len(streams))
+        self._arena.push_batch(slots, chunks)
 
     @property
     def active(self) -> list[int]:
@@ -530,14 +613,23 @@ class StreamScheduler:
     # -- the batched hop -----------------------------------------------------
 
     def _prime_ready(self) -> None:
-        for s in self._streams.values():
-            if not s.primed and len(s.frontend) >= self.plan.prime_samples:
+        # priming is the numpy warm-up path: looping here is fine because
+        # self._unprimed is EMPTY in steady state — the hop hot path never
+        # enters this loop once the fleet is primed
+        for sid in sorted(self._unprimed):
+            s = self._streams[sid]
+            if len(s.frontend) >= self.plan.prime_samples:
                 st = StreamState(self.plan, self.weights, self.thresholds)
                 st.advance(s.frontend.pop(self.plan.prime_samples))
+                # priming consumed a non-hop-multiple; realign the inbox
+                # so every future hop window is one contiguous block
+                self._arena.rebase(s.slot)
                 steady = st.export_steady()
                 self._write_slot(s.slot, steady)
-                s.frames = st.frames
+                self._frames_v[s.slot] = st.frames
                 s.primed = True
+                self._primed_mask[s.slot] = True
+                self._unprimed.discard(sid)
                 # host wrote the slot: earlier cached logits don't cover
                 # it; the NEXT emit step (which includes this write) does
                 s.stamp = self._emit_step + 1
@@ -575,39 +667,43 @@ class StreamScheduler:
             [t[s.slot] for t in tails],
             [p[s.slot] for p in pendings],
             gap[s.slot],
-            s.frames,
+            int(self._frames_v[s.slot]),
         )
         st.samples_seen = s.frontend.samples_in - len(s.frontend)
         return st
 
-    def step(self) -> list[tuple[int, int, np.ndarray | None, Detection | None]]:
-        """Advance every stream that has a full hop buffered.
+    def step_batch(self) -> HopBatch | None:
+        """Advance every stream that has a full hop buffered; None when no
+        stream is ready.
 
-        Returns one (sid, frame_idx, logits, detection) tuple per advanced
-        stream; logits is None when ``emit_logits`` is off.  With
-        ``emit_logits`` the logits/posteriors come from the in-jit
-        finalization tail — no host-side re-inference per hop.
+        This is the steady-state hot path and it contains NO python loop
+        over slots: readiness is one vectorized compare over the arena,
+        hop packing is one gather (``RingArena.pack_hops``), shard counts
+        come from ``np.bincount``, bookkeeping updates are fancy-indexed
+        vector ops, and detection advances through the slot-vectorized
+        ``BatchedDetector``.  Per-slot python survives only off this path
+        (priming, teardown, fallback peeks) and for detections that
+        actually fire.
         """
-        self._prime_ready()  # numpy warm-up path, excluded from step timing
+        if self._unprimed:
+            self._prime_ready()  # numpy warm-up, excluded from step timing
         hop = self.plan.hop_samples
-        ready = [
-            s for s in self._streams.values()
-            if s.primed and len(s.frontend) >= hop
-        ]
-        if not ready:
-            return []
         t0 = time.perf_counter()
-        B = self._capacity
-        audio = np.zeros((B, hop), np.int32)
-        mask = np.zeros((B,), bool)
-        shard_counts = [0] * self.n_shards
-        for s in ready:
-            audio[s.slot] = s.frontend.pop(hop)
-            mask[s.slot] = True
-            shard_counts[self._placement.shard_of(s.slot)] += 1
-
+        ready_mask = self._primed_mask & self._arena.ready_mask(hop)
+        ready_slots = np.nonzero(ready_mask)[0]
+        if ready_slots.size == 0:
+            return None
+        audio = self._arena.pack_hops(ready_slots, hop)
+        shard_counts = np.bincount(
+            ready_slots // self._placement.shard_capacity,
+            minlength=self.n_shards,
+        )
+        # pack bucket ends here: staging (jnp.asarray/device_put) and the
+        # step itself are charged to the device half of the hop
+        t_pack = time.perf_counter() - t0
         args = (
-            self._shard(jnp.asarray(audio)), self._shard(jnp.asarray(mask)),
+            self._shard(jnp.asarray(audio)),
+            self._shard(jnp.asarray(ready_mask)),
             tuple(self._tails), tuple(self._pendings), self._gap,
         )
         logits_h = post_h = None
@@ -626,22 +722,60 @@ class StreamScheduler:
         self._pendings = list(pendings)
         self._gap = gap
 
-        out = []
-        for s in ready:
-            s.frames += self.plan.frames_per_hop
-            logits_row = det = None
-            if self.emit_logits:
-                logits_row = logits_h[s.slot].copy()
-                det = s.detector.update_posterior(s.frames, post_h[s.slot])
-                if det is not None:
-                    self.metrics.on_detection(s.sid)
-            out.append((s.sid, s.frames, logits_row, det))
+        self._frames_v[ready_slots] += self.plan.frames_per_hop
+        sids = self._slot_sid[ready_slots]
+        frames = self._frames_v[ready_slots]
+        rows_logits = rows_post = None
+        detections: list[Detection] = []
+        if self.emit_logits:
+            rows_logits = logits_h[ready_slots]
+            rows_post = post_h[ready_slots]
+            fired, f_cls, f_score = self._detector.update_batch(
+                ready_slots, frames, rows_post
+            )
+            for r, c, sc in zip(fired.tolist(), f_cls.tolist(),
+                                f_score.tolist()):
+                det = Detection(int(sids[r]), int(c), int(frames[r]),
+                                float(sc))
+                self._streams[det.stream_id].events.append(det)
+                self.metrics.on_detection(det.stream_id)
+                detections.append(det)
         self.metrics.on_step(
-            [s.sid for s in ready], self.plan.frames_per_hop,
-            time.perf_counter() - t0,
-            shard_counts=shard_counts, finalized=self.emit_logits,
+            ready_slots.size, self.plan.frames_per_hop,
+            time.perf_counter() - t0, host_pack_s=t_pack,
+            shard_counts=shard_counts.tolist(), finalized=self.emit_logits,
         )
-        return out
+        return HopBatch(sids=sids, frames=frames, logits=rows_logits,
+                        posteriors=rows_post, detections=detections)
+
+    def step(self) -> list[tuple[int, int, np.ndarray | None, Detection | None]]:
+        """Advance every stream that has a full hop buffered.
+
+        Returns one (sid, frame_idx, logits, detection) tuple per advanced
+        stream; logits is None when ``emit_logits`` is off.  With
+        ``emit_logits`` the logits/posteriors come from the in-jit
+        finalization tail — no host-side re-inference per hop.
+
+        This is a compatibility collation of ``step_batch`` — building
+        one tuple per stream is inherently O(ready) python, so throughput
+        callers (the benchmark's steady loop) should consume the columnar
+        ``HopBatch`` directly.
+        """
+        batch = self.step_batch()
+        if batch is None:
+            return []
+        det_by_sid = {d.stream_id: d for d in batch.detections}
+        if batch.logits is None:
+            return [
+                (int(sid), int(fr), None, None)
+                for sid, fr in zip(batch.sids.tolist(), batch.frames.tolist())
+            ]
+        return [
+            (int(sid), int(fr), batch.logits[r].copy(), det_by_sid.get(sid))
+            for r, (sid, fr) in enumerate(
+                zip(batch.sids.tolist(), batch.frames.tolist())
+            )
+        ]
 
     def run_until_starved(self) -> list[tuple[int, int, np.ndarray | None,
                                               Detection | None]]:
@@ -652,6 +786,15 @@ class StreamScheduler:
             if not r:
                 return out
             out.extend(r)
+
+    def drain(self) -> int:
+        """Run ``step_batch`` until starved; returns hops executed.  The
+        zero-collation twin of ``run_until_starved`` for callers that read
+        results from metrics/peeks instead of per-stream tuples."""
+        hops = 0
+        while self.step_batch() is not None:
+            hops += 1
+        return hops
 
     # -- inspection / teardown ----------------------------------------------
 
@@ -664,7 +807,7 @@ class StreamScheduler:
         slot, so no recompute — or re-runs the in-jit tail when no emit
         covers this slot yet; with leftover sub-hop samples it drops to
         the exact numpy fallback (``StreamState.peek_logits``)."""
-        s = self._streams[sid]
+        s = self._require(sid)
         if s.primed and len(s.frontend) == 0:
             if (self._emit_cache is not None
                     and s.stamp <= self._emit_cache_step):
@@ -686,24 +829,40 @@ class StreamScheduler:
     def close_stream(self, sid: int) -> StreamResult:
         """Flush (right-pad + drop incomplete pools), free the slot, and
         shrink the pool once occupancy drops to a quarter."""
-        s = self._streams.pop(sid)
+        s = self._require(sid)
+        del self._streams[sid]
+        self._unprimed.discard(sid)
+        samples_in = s.frontend.samples_in  # before the slot is scrubbed
         if s.primed:
             st = self._extract_slot(s)
         else:
             st = StreamState(self.plan, self.weights, self.thresholds)
         st.advance(s.frontend.pop_all(), flush=True)
         logits = st.logits()
-        det = s.detector.update(st.frames, logits)
-        if det is not None:
+        # one last detector update with the flushed logits (host softmax),
+        # through the same slot-vectorized state machine the hops drove
+        fired, f_cls, f_score = self._detector.update_batch(
+            np.array([s.slot], np.int64), np.array([st.frames], np.int64),
+            _softmax(logits)[None, :],
+        )
+        if fired.size:
+            det = Detection(sid, int(f_cls[0]), st.frames, float(f_score[0]))
+            s.events.append(det)
             self.metrics.on_detection(sid)
         self._placement.free(s.slot)
         self._clear_slot(s.slot)  # scrub so the next tenant starts clean
-        self.metrics.on_close(sid)
+        self._arena.clear_slot(s.slot)
+        self._detector.reset_slot(s.slot)
+        self._slot_sid[s.slot] = -1
+        self._primed_mask[s.slot] = False
+        self._frames_v[s.slot] = 0
+        self.metrics.on_close(sid, frames_out=st.frames,
+                              samples_in=samples_in)
         self._maybe_shrink()
         return StreamResult(
             stream_id=sid,
             logits=logits,
             frames=st.frames,
             samples=st.samples_seen,
-            events=list(s.detector.events),
+            events=list(s.events),
         )

@@ -114,6 +114,258 @@ class FrameRing:
 
 
 # ---------------------------------------------------------------------------
+# Ring arena: one shared sample inbox for every stream slot
+# ---------------------------------------------------------------------------
+
+IN_OFFSET = 128  # offset-binary zero code (models/kws.py)
+
+
+def quantize_pcm(x: np.ndarray, gain=1.0) -> np.ndarray:
+    """float PCM in [-1, 1] -> u8 offset-binary codes.
+
+    ``gain`` may be a scalar or a per-sample vector (the arena repeats each
+    stream's fixed gain across its samples so many streams quantize in one
+    call); streaming cannot use the offline corpus's per-clip peak
+    normalization because the clip never ends.
+    """
+    q = np.round(np.clip(x * gain, -1.0, 1.0) * 127.0) + IN_OFFSET
+    return np.clip(q, 0, 255).astype(np.uint8)
+
+
+def remap_rows(a: np.ndarray, remap: dict[int, int], new_rows: int,
+               fill=0) -> np.ndarray:
+    """Reindex the leading axis through a slot remap (one vectorized
+    gather); rows without a surviving tenant reset to ``fill``."""
+    out = np.full((new_rows,) + a.shape[1:], fill, a.dtype)
+    if remap:
+        olds = np.fromiter(remap.keys(), np.int64, len(remap))
+        news = np.fromiter(remap.values(), np.int64, len(remap))
+        out[news] = a[olds]
+    return out
+
+
+class RingArena:
+    """Struct-of-arrays sample inbox shared by EVERY stream slot.
+
+    The pre-arena runtime gave each stream its own ``AudioFrontend`` ring
+    object, so packing a hop at B streams cost B python ring pops — the
+    serial floor of the whole runtime at B=1024.  The arena instead holds
+    ONE ``(capacity_slots, capacity_samples)`` uint8 buffer plus per-slot
+    monotonic read/write counters, the array-of-objects ->
+    struct-of-arrays turn of the paper's §II-D ping-pong feature SRAM
+    argument: one shared, layout-flexible buffer beats per-tenant buffers.
+    Every hot-path operation is one vectorized call:
+
+      * ``push_batch``   quantize + scatter chunks for many streams at once
+      * ``ready_mask``   which slots hold >= n samples (one compare)
+      * ``pack_hops``    gather every ready slot's hop window into the
+                         batched ``(capacity_slots, hop)`` int32 step input
+                         and consume it — pure fancy indexing
+
+    Samples are stored as uint8 codes (4x smaller than the old per-stream
+    ``(n, 1)`` int32 rings) and widened to int32 only at pack time.  Rows
+    follow ``SlotPlacement`` through elastic resizes via ``apply_remap``,
+    so a slot's inbox never crosses shard blocks.  Like ``FrameRing``,
+    over/under-runs raise ``MemoryError``; unlike it, a malformed push is
+    rejected at the boundary (wrong dtype, out-of-range codes) instead of
+    being silently widened.
+    """
+
+    def __init__(self, capacity_slots: int, capacity_samples: int) -> None:
+        assert capacity_slots > 0 and capacity_samples > 0
+        self.capacity_samples = capacity_samples
+        self.data = np.zeros((capacity_slots, capacity_samples), np.uint8)
+        self.rd = np.zeros(capacity_slots, np.int64)  # monotonic, per slot
+        self.wr = np.zeros(capacity_slots, np.int64)  # monotonic, per slot
+        self.samples_in = np.zeros(capacity_slots, np.int64)
+        self.gain = np.ones(capacity_slots, np.float64)
+
+    @property
+    def capacity_slots(self) -> int:
+        return self.data.shape[0]
+
+    def fill(self) -> np.ndarray:
+        """Live sample count per slot, (capacity_slots,) int64."""
+        return self.wr - self.rd
+
+    def fill_of(self, slot: int) -> int:
+        return int(self.wr[slot] - self.rd[slot])
+
+    def ready_mask(self, n: int) -> np.ndarray:
+        """Which slots hold at least ``n`` samples — the scheduler's
+        readiness test, one vectorized compare over the whole pool."""
+        return (self.wr - self.rd) >= n
+
+    def set_gain(self, slot: int, gain: float) -> None:
+        self.gain[slot] = gain
+
+    # -- ingest (quantize + scatter) -----------------------------------------
+
+    def push(self, slot: int, audio: np.ndarray) -> None:
+        """Append one stream's chunk (float PCM or u8 codes)."""
+        self.push_batch(np.array([slot], np.int64), [audio])
+
+    def push_batch(self, slots: np.ndarray, chunks: list[np.ndarray]) -> None:
+        """Append one chunk per slot for many streams in one call.
+
+        Float chunks are quantized in a single vectorized pass (each
+        stream's fixed gain repeated across its samples), integer chunks
+        are range-checked in a single pass, and everything lands in the
+        arena with ONE flat scatter — no python loop over samples.  Slots
+        must be unique within a call (chunk order per slot would otherwise
+        be ambiguous).
+        """
+        slots = np.asarray(slots, np.int64)
+        assert slots.size == len(chunks), (slots.size, len(chunks))
+        if slots.size == 0:
+            return
+        if np.unique(slots).size != slots.size:
+            raise ValueError("push_batch slots must be unique per call")
+        chunks = [np.asarray(c).reshape(-1) for c in chunks]
+        lens = np.array([c.size for c in chunks], np.int64)
+        free = self.capacity_samples - (self.wr[slots] - self.rd[slots])
+        if (lens > free).any():
+            worst = int(np.argmax(lens - free))
+            raise MemoryError(
+                f"arena overflow: push {lens[worst]} into {free[worst]} "
+                f"free of {self.capacity_samples} samples (slot "
+                f"{slots[worst]})"
+            )
+        is_f = np.array([c.dtype.kind == "f" for c in chunks], bool)
+        total = int(lens.sum())
+        flat = np.empty(total, np.uint8)
+        sample_is_f = np.repeat(is_f, lens)
+        if is_f.any():
+            pcm = np.concatenate([c for c, f in zip(chunks, is_f) if f])
+            g = np.repeat(self.gain[slots[is_f]], lens[is_f])
+            flat[sample_is_f] = quantize_pcm(pcm, g)
+        if not is_f.all():
+            ints = [c for c, f in zip(chunks, is_f) if not f]
+            for c in ints:
+                if c.dtype.kind not in "iu":
+                    raise TypeError(
+                        f"audio must be float PCM or integer u8 codes, "
+                        f"got dtype {c.dtype}"
+                    )
+            codes = np.concatenate(ints)
+            if codes.dtype != np.uint8 and codes.size and (
+                codes.min() < 0 or codes.max() > 255
+            ):
+                raise ValueError(
+                    f"integer sample codes out of u8 range [0, 255]: "
+                    f"min {codes.min()}, max {codes.max()}"
+                )
+            flat[~sample_is_f] = codes.astype(np.uint8, copy=False)
+        # flat scatter: (slot row, wrapped column) per sample
+        starts = np.cumsum(lens) - lens
+        rows = np.repeat(slots, lens)
+        offs = np.arange(total) - np.repeat(starts, lens)
+        cols = (np.repeat(self.wr[slots], lens) + offs) % self.capacity_samples
+        self.data[rows, cols] = flat
+        self.wr[slots] += lens
+        self.samples_in[slots] += lens
+
+    # -- drain ---------------------------------------------------------------
+
+    def pack_hops(self, ready_slots: np.ndarray, hop: int) -> np.ndarray:
+        """Consume one ``hop``-sample window from every ready slot into the
+        batched ``(capacity_slots, hop)`` int32 step input.
+
+        Pure fancy indexing — one flat gather, one pointer bump —
+        regardless of how many streams are ready; rows not in
+        ``ready_slots`` are zero (they ride through the jitted step
+        masked).  ``ready_slots`` must be sorted unique slot indices (what
+        ``np.nonzero(ready_mask(...))`` yields).  The per-sample index
+        math runs un-wrapped and only rows whose window crosses the region
+        end pay the wrap fix, so the steady-state gather is one
+        broadcast-add plus one take over the flat arena.
+        """
+        out = np.zeros((self.capacity_slots, hop), np.int32)
+        ready_slots = np.asarray(ready_slots, np.int64)
+        if ready_slots.size == 0:
+            return out
+        if ((self.wr[ready_slots] - self.rd[ready_slots]) < hop).any():
+            raise MemoryError(
+                f"arena underflow: pack_hops({hop}) on a slot holding less"
+            )
+        cap = self.capacity_samples
+        start = self.rd[ready_slots] % cap
+        if cap % hop == 0 and not (start % hop).any():
+            # aligned fast path: every window is one whole block of a
+            # (slots, blocks, hop) view of the arena, so the gather is a
+            # contiguous block-row take — no per-sample index array.  The
+            # scheduler keeps slots on this path by rebasing each inbox
+            # once at priming (rebase) and sizing the arena in whole hops.
+            view = self.data.reshape(self.capacity_slots, cap // hop, hop)
+            gathered = view[ready_slots, start // hop]
+        else:
+            idx = (ready_slots * cap + start)[:, None] + np.arange(hop)
+            over = start + hop > cap  # windows wrapping past the region end
+            if over.any():
+                row_end = ((ready_slots[over] + 1) * cap)[:, None]
+                sub = idx[over]
+                idx[over] = np.where(sub >= row_end, sub - cap, sub)
+            gathered = self.data.reshape(-1)[idx]
+        if ready_slots.size == self.capacity_slots:
+            out = gathered.astype(np.int32)  # all ready: skip the scatter
+        else:
+            out[ready_slots] = gathered
+        self.rd[ready_slots] += hop
+        return out
+
+    def rebase(self, slot: int) -> None:
+        """Move one slot's live samples to offset 0 (pointers reset, data
+        compacted).  The scheduler calls this once per stream right after
+        priming: from then on the hot path only consumes whole hops, so
+        the slot's windows stay block-aligned and ``pack_hops`` takes the
+        contiguous fast path forever."""
+        n = self.fill_of(slot)
+        if n:
+            idx = (self.rd[slot] + np.arange(n)) % self.capacity_samples
+            self.data[slot, :n] = self.data[slot, idx]
+        self.rd[slot] = 0
+        self.wr[slot] = n
+
+    def peek(self, slot: int, n: int | None = None) -> np.ndarray:
+        """Oldest ``n`` samples (default: all) of one slot as (n,) int32
+        u8-codes, without consuming — the host-path (priming/flush) view."""
+        have = self.fill_of(slot)
+        n = have if n is None else int(n)
+        if n > have:
+            raise MemoryError(f"arena underflow: peek {n} of {have} "
+                              f"(slot {slot})")
+        idx = (self.rd[slot] + np.arange(n)) % self.capacity_samples
+        return self.data[slot, idx].astype(np.int32)
+
+    def pop(self, slot: int, n: int) -> np.ndarray:
+        out = self.peek(slot, n)
+        self.rd[slot] += n
+        return out
+
+    # -- slot lifecycle ------------------------------------------------------
+
+    def clear_slot(self, slot: int) -> None:
+        """Scrub one row so the next tenant starts clean."""
+        self.data[slot] = 0
+        self.rd[slot] = self.wr[slot] = 0
+        self.samples_in[slot] = 0
+        self.gain[slot] = 1.0
+
+    def apply_remap(self, remap: dict[int, int], new_capacity_slots: int
+                    ) -> None:
+        """Follow a ``SlotPlacement`` grow/shrink: surviving rows move to
+        their new slots with one vectorized gather per array; vacated rows
+        reset.  Rows never cross shard blocks because the remap never does.
+        """
+        self.data = remap_rows(self.data, remap, new_capacity_slots)
+        self.rd = remap_rows(self.rd, remap, new_capacity_slots)
+        self.wr = remap_rows(self.wr, remap, new_capacity_slots)
+        self.samples_in = remap_rows(self.samples_in, remap,
+                                     new_capacity_slots)
+        self.gain = remap_rows(self.gain, remap, new_capacity_slots, fill=1.0)
+
+
+# ---------------------------------------------------------------------------
 # Slot placement: one logical pool sharded over a device mesh
 # ---------------------------------------------------------------------------
 

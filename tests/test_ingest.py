@@ -1,0 +1,345 @@
+"""Vectorized ingest plane (stream.state.RingArena + scheduler hot path):
+arena push/pop/pack semantics incl. wraparound and boundary validation,
+batched pushes == sequential pushes, the slot-vectorized detector ==
+the per-stream state machine, scheduler sid errors, and the property-style
+bit-exactness sweep (random ragged float/u8 chunks, B in {1, 8, 64},
+across one grow + one shrink) against the offline executor."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import compiler, executor
+from repro.models import kws
+from repro.stream import (
+    AudioFrontend,
+    BatchedDetector,
+    DetectorConfig,
+    PosteriorDetector,
+    RingArena,
+    StreamScheduler,
+    quantize_pcm,
+)
+from repro.stream.detector import _softmax
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    spec = kws.build_kws_smoke_spec()
+    params = kws.init_kws_params(jax.random.PRNGKey(0), spec)
+    weights, thresholds = kws.export_kws(params, spec)
+    prog = compiler.compile_model(spec, weights, thresholds)
+    return spec, weights, thresholds, prog
+
+
+def _offline(prog, x):
+    return executor.Executor(prog).run(x[:, None]).output.ravel()
+
+
+# ---------------------------------------------------------------------------
+# RingArena semantics
+# ---------------------------------------------------------------------------
+
+def test_arena_push_pop_wraparound():
+    arena = RingArena(3, 7)  # tiny so pointers lap the region many times
+    rng = np.random.default_rng(0)
+    fed = {s: [] for s in range(3)}
+    drained = {s: [] for s in range(3)}
+    for i in range(40):
+        slot = i % 3
+        free = 7 - arena.fill_of(slot)
+        chunk = rng.integers(
+            0, 256, min(free, int(rng.integers(1, 5)))
+        ).astype(np.uint8)
+        arena.push(slot, chunk)
+        fed[slot].append(chunk)
+        n = min(arena.fill_of(slot), int(rng.integers(1, 6)))
+        drained[slot].append(arena.pop(slot, n))
+    for s in range(3):
+        drained[s].append(arena.pop(s, arena.fill_of(s)))
+        np.testing.assert_array_equal(
+            np.concatenate(fed[s]), np.concatenate(drained[s])
+        )
+    assert arena.fill().tolist() == [0, 0, 0]
+    # monotonic counters, wrapped storage
+    assert (arena.rd == arena.wr).all() and (arena.wr > 7).all()
+
+
+def test_arena_over_underflow():
+    arena = RingArena(2, 4)
+    arena.push(0, np.ones(3, np.uint8))
+    with pytest.raises(MemoryError):
+        arena.push(0, np.ones(2, np.uint8))
+    with pytest.raises(MemoryError):
+        arena.pop(0, 4)
+    with pytest.raises(MemoryError):
+        arena.pack_hops(np.array([0, 1]), 2)  # slot 1 holds nothing
+    assert arena.fill_of(0) == 3  # failed ops leave the arena intact
+
+
+def test_arena_push_boundary_validation():
+    """Satellite: malformed audio is rejected AT the push boundary with a
+    clear error, not silently widened like the old (n, 1) int32 rings."""
+    arena = RingArena(2, 16)
+    with pytest.raises(ValueError, match=r"out of u8 range"):
+        arena.push(0, np.array([0, 300], np.int32))
+    with pytest.raises(ValueError, match=r"out of u8 range"):
+        arena.push(0, np.array([-1, 5], np.int64))
+    with pytest.raises(TypeError, match=r"float PCM or integer u8"):
+        arena.push(0, np.array([True, False]))
+    with pytest.raises(ValueError, match=r"unique"):
+        arena.push_batch(np.array([1, 1]), [np.ones(1, np.uint8)] * 2)
+    assert arena.fill().tolist() == [0, 0]  # nothing landed
+    # in-range non-uint8 integers are fine (offline clips arrive as such)
+    arena.push(0, np.array([0, 128, 255], np.int64))
+    assert arena.pop(0, 3).tolist() == [0, 128, 255]
+    # the arena stores u8, 4x smaller than the old int32 rings
+    assert arena.data.dtype == np.uint8
+    assert arena.pack_hops(np.array([], np.int64), 4).dtype == np.int32
+
+
+def test_arena_push_batch_matches_sequential():
+    """One vectorized quantize+scatter == per-stream pushes, with float
+    PCM and u8 codes mixed in the same call and per-slot gains honored."""
+    rng = np.random.default_rng(1)
+    a = RingArena(5, 64)
+    b = RingArena(5, 64)
+    for arena in (a, b):
+        arena.set_gain(2, 0.5)
+        arena.set_gain(4, 2.0)
+    chunks = [
+        rng.integers(0, 256, 7).astype(np.uint8),
+        rng.uniform(-1.2, 1.2, 9),                      # float64, clips
+        rng.uniform(-1, 1, 5).astype(np.float32),       # gain 0.5
+        np.zeros(0, np.uint8),                          # empty is legal
+        rng.uniform(-1, 1, 11),                         # gain 2.0
+    ]
+    a.push_batch(np.arange(5), chunks)
+    for slot, c in enumerate(chunks):
+        b.push(slot, c)
+    np.testing.assert_array_equal(a.data, b.data)
+    assert a.fill().tolist() == b.fill().tolist() == [7, 9, 5, 0, 11]
+    np.testing.assert_array_equal(
+        a.peek(2), quantize_pcm(chunks[2], 0.5).astype(np.int32)
+    )
+
+
+def test_arena_pack_hops_gathers_and_consumes():
+    arena = RingArena(4, 8)
+    arena.push_batch(
+        np.array([0, 2, 3]),
+        [np.full(6, 9, np.uint8), np.arange(5, dtype=np.uint8),
+         np.full(3, 7, np.uint8)],
+    )
+    ready = np.nonzero(arena.ready_mask(4))[0]
+    assert ready.tolist() == [0, 2]
+    out = arena.pack_hops(ready, 4)
+    assert out.shape == (4, 4) and out.dtype == np.int32
+    assert out[0].tolist() == [9, 9, 9, 9]
+    assert out[2].tolist() == [0, 1, 2, 3]
+    assert out[1].tolist() == out[3].tolist() == [0, 0, 0, 0]  # masked rows
+    assert arena.fill().tolist() == [2, 0, 1, 3]  # hop consumed
+    # wrapped second hop continues seamlessly
+    arena.push(2, np.array([5, 6, 7], np.uint8))
+    np.testing.assert_array_equal(arena.pack_hops(np.array([2]), 4)[2],
+                                  [4, 5, 6, 7])
+
+
+def test_frontend_facade_over_shared_arena():
+    """The per-stream AudioFrontend API is a view of one shared arena."""
+    arena = RingArena(3, 32)
+    f1 = AudioFrontend(arena=arena, slot=1)
+    f1.push(np.array([1, 2, 3], np.uint8))
+    assert len(f1) == 3 and f1.samples_in == 3
+    assert arena.fill().tolist() == [0, 3, 0]
+    np.testing.assert_array_equal(f1.peek_all(), [1, 2, 3])
+    np.testing.assert_array_equal(f1.pop(2), [1, 2])
+    assert f1.pop_all().tolist() == [3] and len(f1) == 0
+    # standalone construction still works (private 1-row arena)
+    f2 = AudioFrontend()
+    f2.push(np.zeros(4, np.uint8))
+    assert len(f2) == 4
+
+
+# ---------------------------------------------------------------------------
+# BatchedDetector == PosteriorDetector
+# ---------------------------------------------------------------------------
+
+def test_batched_detector_matches_per_stream():
+    """The slot-vectorized state machine is bit-identical to one
+    PosteriorDetector per stream: same events (frame/cls/score), same
+    hysteresis/refractory behavior, window longer than numpy's pairwise
+    threshold to pin the summation-order contract."""
+    cfg = DetectorConfig(smooth_frames=5, on_threshold=0.3,
+                         off_threshold=0.15, refractory_frames=4)
+    n_cls, n_streams = 12, 3
+    batched = BatchedDetector(8, n_cls, cfg)
+    slots = np.array([1, 4, 6])
+    refs = [PosteriorDetector(i, cfg) for i in range(n_streams)]
+    rng = np.random.default_rng(5)
+    got: dict[int, list] = {i: [] for i in range(n_streams)}
+    for frame in range(60):
+        posts = np.stack([_softmax(rng.normal(0, 6, n_cls))
+                          for _ in range(n_streams)])
+        frames = np.full(n_streams, frame)
+        rows, cls, score = batched.update_batch(slots, frames, posts)
+        for r, c, sc in zip(rows, cls, score):
+            got[int(r)].append((frame, int(c), float(sc)))
+        for i, ref in enumerate(refs):
+            ref.update_posterior(frame, posts[i])
+    fired_any = False
+    for i, ref in enumerate(refs):
+        want = [(e.frame, e.cls, e.score) for e in ref.events]
+        assert got[i] == want  # bitwise: scores compare exactly
+        fired_any |= bool(want)
+    assert fired_any  # the random walk actually exercised the machine
+
+
+def test_batched_detector_remap_carries_state():
+    """apply_remap moves a slot's window/hold/refractory state with it —
+    continuing on the new slot equals an uninterrupted reference."""
+    cfg = DetectorConfig(smooth_frames=3, on_threshold=0.3,
+                         off_threshold=0.15, refractory_frames=4)
+    n_cls = 12
+    batched = BatchedDetector(4, n_cls, cfg)
+    ref = PosteriorDetector(0, cfg)
+    rng = np.random.default_rng(9)
+    events = []
+    for frame in range(30):
+        if frame == 11:  # mid-run shrink: slot 3 -> 1
+            batched.apply_remap({3: 1, 0: 0}, 2)
+        slot = 3 if frame < 11 else 1
+        post = _softmax(rng.normal(0, 6, n_cls))
+        rows, cls, score = batched.update_batch(
+            np.array([slot]), np.array([frame]), post[None, :]
+        )
+        if rows.size:
+            events.append((frame, int(cls[0]), float(score[0])))
+        ref.update_posterior(frame, post)
+    assert events == [(e.frame, e.cls, e.score) for e in ref.events]
+    assert events  # state machine fired across the remap
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: sid errors + batched API
+# ---------------------------------------------------------------------------
+
+def test_push_audio_unknown_sid_raises_keyerror(smoke):
+    """Satellite: pushing to an unknown/ended sid raises KeyError naming
+    the live sid set, on both the scalar and the batched entry point."""
+    spec, weights, thresholds, _ = smoke
+    sched = StreamScheduler(spec, weights, thresholds, capacity=4)
+    a, b = sched.add_stream(), sched.add_stream()
+    with pytest.raises(KeyError, match=r"unknown.*sid 99.*2 live.*0.*1"):
+        sched.push_audio(99, np.zeros(8, np.uint8))
+    sched.push_audio(b, np.zeros(8, np.uint8))
+    sched.close_stream(b)  # ended: its sid must now be rejected too
+    with pytest.raises(KeyError, match=r"sid 1"):
+        sched.push_audio(b, np.zeros(8, np.uint8))
+    with pytest.raises(KeyError, match=r"sid 1"):
+        sched.push_audio_batch([a, b], [np.zeros(4, np.uint8)] * 2)
+    with pytest.raises(KeyError):
+        sched.close_stream(b)
+    assert len(sched._streams[a].frontend) == 0  # batch push was atomic
+
+
+def test_step_batch_columnar_matches_step_tuples(smoke):
+    """HopBatch (the zero-collation hot-path result) carries exactly what
+    the tuple-per-stream step() API reports."""
+    spec, weights, thresholds, _ = smoke
+    a = StreamScheduler(spec, weights, thresholds, capacity=4)
+    b = StreamScheduler(spec, weights, thresholds, capacity=4)
+    rng = np.random.default_rng(21)
+    clips = rng.integers(0, 256, (3, 600)).astype(np.uint8)
+    for sched in (a, b):
+        sids = [sched.add_stream() for _ in range(3)]
+        sched.push_audio_batch(sids, list(clips))
+    outs = a.run_until_starved()
+    hops = []
+    while True:
+        hb = b.step_batch()
+        if hb is None:
+            break
+        hops.append(hb)
+    flat = [
+        (int(sid), int(fr), hb.logits[r])
+        for hb in hops
+        for r, (sid, fr) in enumerate(zip(hb.sids, hb.frames))
+    ]
+    assert len(outs) == len(flat)
+    for (sid_a, fr_a, lg_a, _), (sid_b, fr_b, lg_b) in zip(outs, flat):
+        assert (sid_a, fr_a) == (sid_b, fr_b)
+        np.testing.assert_array_equal(lg_a, lg_b)
+    m = b.metrics.summary()
+    assert m["host_pack_ms_p50"] >= 0.0
+    assert m["step_ms_p50"] >= m["host_pack_ms_p50"]
+    assert m["device_ms_p50"] > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Property-style bit-exactness sweep: ragged mixed-dtype chunks, elastic pool
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_streams,emit", [(1, True), (8, True), (64, False)])
+def test_random_chunks_bitexact_across_grow_and_shrink(smoke, n_streams, emit):
+    """Feed random-sized chunks (1..hop*3 samples, float PCM and u8 codes
+    mixed, batched and scalar pushes mixed) through the arena path while
+    the elastic pool grows once and shrinks once; every finalized logit
+    must equal one whole-clip offline run."""
+    spec, weights, thresholds, prog = smoke
+    rng = np.random.default_rng(100 + n_streams)
+    # float PCM is the source of truth; the offline run eats the codes the
+    # arena's quantizer produces, so both paths see identical u8 streams
+    pcm = rng.uniform(-1.1, 1.1, (n_streams, spec.in_len))
+    codes = quantize_pcm(pcm)
+    want = {j: _offline(prog, codes[j]) for j in range(n_streams)}
+
+    cap0 = max(1, n_streams // 4)
+    sched = StreamScheduler(
+        spec, weights, thresholds, capacity=n_streams,
+        initial_capacity=cap0, min_capacity=1, emit_logits=emit,
+        inbox_samples=1024,  # small inbox: arena pointers wrap in-run
+    )
+    hop = sched.plan.hop_samples
+    # first quarter joins early; the rest join mid-run to force a grow
+    joined = [sched.add_stream() for _ in range(cap0)]
+    pos = {j: 0 for j in joined}
+    round_i = 0
+    while any(p < spec.in_len for p in pos.values()):
+        if round_i == 2 and len(joined) < n_streams:
+            for j in range(len(joined), n_streams):
+                assert sched.add_stream() == j
+                joined.append(j)
+                pos[j] = 0
+        live = [j for j in joined if pos[j] < spec.in_len]
+        sids, chunks = [], []
+        for j in live:
+            n = int(rng.integers(1, hop * 3 + 1))
+            lo, hi = pos[j], min(pos[j] + n, spec.in_len)
+            # mix dtypes: float PCM chunks and u8 code chunks interleave
+            chunk = pcm[j, lo:hi] if rng.random() < 0.5 else codes[j, lo:hi]
+            pos[j] = hi
+            if rng.random() < 0.3:
+                sched.push_audio(j, chunk)  # scalar path
+            else:
+                sids.append(j)
+                chunks.append(chunk)
+        if sids:
+            sched.push_audio_batch(sids, chunks)
+        sched.run_until_starved()
+        round_i += 1
+    grew_to = sched.capacity
+    assert grew_to == n_streams or n_streams == 1
+    # close three quarters -> the pool shrinks; survivors then flush too
+    survivors = joined[-max(1, n_streams // 4):]
+    for j in joined:
+        if j in survivors:
+            continue
+        np.testing.assert_array_equal(sched.close_stream(j).logits, want[j])
+    assert sched.capacity <= grew_to
+    if n_streams > 1:
+        assert sched.capacity < grew_to  # actually shrank
+    for j in survivors:
+        np.testing.assert_array_equal(sched.close_stream(j).logits, want[j])
+    caps = [c for _, c in sched.metrics.capacity_events]
+    if n_streams > 1:
+        assert max(caps) == n_streams and caps[-1] < n_streams

@@ -217,24 +217,37 @@ def test_report_stream_table_renders_sweep_and_sharded():
     from repro.launch import report
 
     bench = {
-        "sweep": {"8": {"hop_ms_p50": 1.5, "stream_hops_per_sec": 4000.0,
+        "sweep": {"8": {"hop_ms_p50": 1.5, "host_pack_ms_p50": 0.2,
+                        "device_ms_p50": 1.3,
+                        "stream_hops_per_sec": 4000.0,
                         "uj_per_inference": 0.0005}},
         "sharded": {
             "total_streams": 1024,
             "configs": {
-                "1": {"hop_ms_p50": 180.0, "stream_hops_per_sec": 5000.0,
+                "1": {"hop_ms_p50": 180.0, "host_pack_ms_p50": 4.0,
+                      "device_ms_p50": 176.0,
+                      "stream_hops_per_sec": 5000.0,
                       "uj_per_inference": 0.0005},
-                "8": {"hop_ms_p50": 150.0, "stream_hops_per_sec": 6000.0,
+                "8": {"hop_ms_p50": 150.0, "host_pack_ms_p50": 4.0,
+                      "device_ms_p50": 146.0,
+                      "stream_hops_per_sec": 6000.0,
                       "uj_per_inference": 0.0005},
             },
             "multi_vs_single": 1.2,
         },
+        "host_pack": {"streams": 1024.0, "host_pack_ms_before": 20.0,
+                      "host_pack_ms_after": 2.0, "reduction": 10.0},
     }
     lines = report.stream_lines(bench)
     text = "\n".join(lines)
-    assert "| steady | 8 | 1 | 1.500 | 4000 | 0.0005 |" in text
-    assert "| mesh-sharded | 1024 | 8 | 150.000 | 6000 | 0.0005 |" in text
+    assert "| steady | 8 | 1 | 1.500 | 0.200 | 1.300 | 4000 | 0.0005 |" in text
+    assert ("| mesh-sharded | 1024 | 8 | 150.000 | 4.000 | 146.000 "
+            "| 6000 | 0.0005 |") in text
     assert "1.20x aggregate stream-hops/s" in text
-    # rows missing the newer fields (older artifacts) degrade to em-dash
-    legacy = report.stream_lines({"sweep": {"8": {"hop_ms_p50": 1.5}}})
-    assert "| steady | 8 | 1 | 1.500 | — | — |" in "\n".join(legacy)
+    assert "10.0x" in text  # host-pack before/after footer
+    # rows missing the newer fields (older artifacts) degrade to em-dash;
+    # a measured 0.0 in any column must still render as a number
+    legacy = report.stream_lines(
+        {"sweep": {"8": {"hop_ms_p50": 1.5, "host_pack_ms_p50": 0.0}}}
+    )
+    assert "| steady | 8 | 1 | 1.500 | 0.000 | — | — | — |" in "\n".join(legacy)
