@@ -21,6 +21,12 @@ IS hop-to-logits latency.  Reported:
     the before/after reduction recorded
   * a join/leave churn scenario against the elastic slot pool: staggered
     arrivals/departures, pool resizes counted, hop latency under churn
+  * the skewed-churn scenario: leaves concentrated onto one shard, steady
+    capacity with vs without the cross-shard rebalance plane — the
+    rebalanced pool must shrink to within 2x of the balanced floor
+    ``S * next_pow2(ceil(active/S))`` where the no-rebalance pool stays
+    pinned at the fullest shard's count (``skewed_churn`` in the
+    artifact, asserted by the multi-device CI leg)
   * the offline re-run baseline frames/sec and the speedup
   * the mesh-sharded sweep: >=1024 concurrent streams on one logical slot
     pool spanning 1, 2 and 8 shards of a forced multi-device host
@@ -57,6 +63,7 @@ from repro.data import gscd
 from repro.launch.mesh import make_stream_mesh
 from repro.models import kws
 from repro.stream import FrameRing, RingArena, StreamScheduler, plan_stream
+from repro.stream.scheduler import _next_pow2
 
 SMOKE = os.environ.get("STREAM_BENCH_SMOKE", "") not in ("", "0")
 
@@ -222,6 +229,74 @@ def _churn(spec, weights, thresholds) -> dict[str, float]:
     }
 
 
+def _skewed_churn(spec, weights, thresholds) -> dict[str, object] | None:
+    """Leaves skewed onto one shard: shrink floor with vs without the
+    cross-shard rebalance plane.
+
+    Every stream joins, then every tenant off shard 0 leaves — the
+    churn-unlucky shape that pinned the PR 3 pool at ``S *
+    _next_pow2(fullest shard)`` because rows could not cross devices.
+    The survivors keep streaming a few hops so the migrate-on-idle
+    rebalance (and the shrink it unpins) actually executes; recorded is
+    each pool's steady capacity next to the balanced floor ``S *
+    _next_pow2(ceil(active / S))`` the acceptance criterion bounds
+    against (rebalanced capacity <= 2x that floor).  Returns None on a
+    1-device host, like ``_sharded_sweep``.
+    """
+    if jax.device_count() < 2:
+        return None
+    S = min(8, jax.device_count())
+    mesh = make_stream_mesh(S)
+    total = 8 * S
+    rng = np.random.default_rng(3)
+    out: dict[str, object] = {}
+    for label, thr in (("no_rebalance", None), ("rebalance", 1)):
+        sched = StreamScheduler(
+            spec, weights, thresholds, capacity=total,
+            initial_capacity=total, min_capacity=S,
+            hop_frames=HOP_FRAMES, mesh=mesh, rebalance_threshold=thr,
+        )
+        plan = sched.plan
+        warm = plan.prime_samples + 2 * plan.hop_samples
+        tail = 4 * plan.hop_samples
+        audio = rng.integers(0, 256, (total, warm + tail)).astype(np.uint8)
+        sids = [sched.add_stream() for _ in range(total)]
+        sched.push_audio_batch(sids, list(audio[:, :warm]))
+        sched.drain()
+        survivors = [
+            sid for sid in sids
+            if sched._streams[sid].slot < sched.shard_capacity
+        ]
+        for sid in sids:
+            if sid not in survivors:
+                sched.close_stream(sid)
+        sched.push_audio_batch(survivors,
+                               list(audio[survivors][:, warm:]))
+        sched.drain()
+        m = sched.metrics.summary()
+        out[label] = {
+            "steady_capacity": float(sched.capacity),
+            "rebalances": m["rebalances"],
+            "rows_migrated": m["rows_migrated"],
+        }
+        active = len(survivors)
+    floor = S * _next_pow2(-(-active // S))
+    out.update(
+        shards=S, total_streams=total, active_after_churn=active,
+        floor_capacity=float(floor),
+        # the acceptance criterion: rebalanced steady capacity within 2x
+        # of the balanced floor while the pinned pool cannot get there
+        rebalance_within_2x_floor=bool(
+            out["rebalance"]["steady_capacity"] <= 2 * floor
+        ),
+        pinned_capacity_ratio=(
+            out["no_rebalance"]["steady_capacity"]
+            / out["rebalance"]["steady_capacity"]
+        ),
+    )
+    return out
+
+
 def _sharded_sweep(spec, weights, thresholds) -> dict[str, object] | None:
     """>=1024 streams on one logical pool across 1/2/8 shards.
 
@@ -292,6 +367,12 @@ def run() -> list[str]:
         sharded = prev.get("sharded")
         if sharded is not None:
             sharded = {**sharded, "carried_from_prior_run": True}
+    skewed = _skewed_churn(spec, weights, thresholds)
+    skewed_skipped = skewed is None
+    if skewed_skipped:
+        skewed = prev.get("skewed_churn")
+        if skewed is not None:
+            skewed = {**skewed, "carried_from_prior_run": True}
 
     b0 = sweep[BATCH_SWEEP[0]]
     speedup = b0["frames_per_sec"] / baseline_fps
@@ -322,6 +403,9 @@ def run() -> list[str]:
         "sweep": {str(b): sweep[b] for b in BATCH_SWEEP},
         "churn": churn,
         "sharded": sharded,
+        # shrink-floor capacity with vs without the cross-shard rebalance
+        # plane under one-shard-skewed leave churn (CI asserts on this)
+        "skewed_churn": skewed,
     }
     # smoke runs park their (low-round, noisy) numbers next to the real
     # artifact so they can never corrupt the committed perf trajectory
@@ -369,6 +453,23 @@ def run() -> list[str]:
                 f"{'PASS' if ratio > 1.0 else 'FAIL'} "
                 "(multi-shard > single device, same total streams)",
             ))
+    if skewed_skipped:
+        out.append(row(
+            "stream.skewed_churn", "SKIP",
+            "1 device visible; prior scenario kept" if skewed is not None
+            else "1 device visible",
+        ))
+    if skewed is not None:
+        reb = skewed["rebalance"]
+        pin = skewed["no_rebalance"]
+        out.append(row(
+            "stream.skewed_churn_capacity",
+            f"{reb['steady_capacity']:.0f}",
+            f"{'PASS' if skewed['rebalance_within_2x_floor'] else 'FAIL'} "
+            f"(<= 2x floor {skewed['floor_capacity']:.0f}; pinned pool "
+            f"stuck at {pin['steady_capacity']:.0f}, "
+            f"{reb['rows_migrated']:.0f} rows migrated)",
+        ))
     out.extend([
         row("stream.realtime_factor", f"{b0['audio_sec_per_wall_sec']:.1f}",
             "audio-sec per wall-sec"),

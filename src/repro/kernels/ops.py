@@ -341,6 +341,45 @@ def bnn_conv1d_batched_sharded(
     )(x_bits, w_t)
 
 
+@jax.jit
+def _gather_rows_keep(x: jax.Array, perm: jax.Array,
+                      keep: jax.Array) -> jax.Array:
+    out = jnp.take(x, perm, axis=0)
+    k = keep.reshape(keep.shape + (1,) * (x.ndim - 1))
+    return jnp.where(k, out, jnp.zeros_like(out))
+
+
+def remap_slot_rows(
+    x: jax.Array,
+    perm: np.ndarray,
+    keep: np.ndarray,
+    *,
+    mesh=None,
+) -> jax.Array:
+    """Permute the leading (slot) axis of one batched state array:
+    ``out[i] = x[perm[i]]`` where ``keep[i]``, else a zero row.
+
+    This is the device half of a cross-shard slot migration
+    (``SlotPlacement.rebalance``): the per-slot ring state lives inside
+    arrays the Pallas kernels consume, and ``pallas_call`` is opaque to
+    GSPMD, so the row motion cannot ride inside a kernel — it runs as
+    this standalone gather, where the partitioner is free to lower the
+    cross-shard rows into collectives while vacated rows scrub to zero.
+    With ``mesh`` the result is settled back onto the mesh's data-axis
+    sharding so subsequent hops see the same layout as after a resize.
+    """
+    out = _gather_rows_keep(
+        x, jnp.asarray(perm, jnp.int32), jnp.asarray(keep, bool)
+    )
+    if mesh is not None and _data_size(mesh) > 1:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from repro.launch.mesh import dp_axes
+        spec = P(dp_axes(mesh), *([None] * (out.ndim - 1)))
+        out = jax.device_put(out, NamedSharding(mesh, spec))
+    return out
+
+
 def classifier_tail_sharded(
     gap: jax.Array,
     fc_ws: tuple[jax.Array, ...],

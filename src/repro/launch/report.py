@@ -119,6 +119,19 @@ def stream_lines(bench: dict) -> list[str]:
             f"-> {hp['host_pack_ms_after']:.3f} ms (arena gather), "
             f"{hp['reduction']:.1f}x"
         )
+    sk = bench.get("skewed_churn") or {}  # may be committed as null
+    if isinstance(sk.get("floor_capacity"), (int, float)):
+        reb, pin = sk["rebalance"], sk["no_rebalance"]
+        out.append(
+            f"\nskewed-churn shrink floor ({sk['shards']} shards, "
+            f"{sk['active_after_churn']} of {sk['total_streams']} streams "
+            f"left, all on one shard): capacity "
+            f"{pin['steady_capacity']:.0f} pinned without rebalance -> "
+            f"{reb['steady_capacity']:.0f} with it "
+            f"({reb['rows_migrated']:.0f} rows migrated; balanced floor "
+            f"{sk['floor_capacity']:.0f})"
+            + (" (prior run)" if sk.get("carried_from_prior_run") else "")
+        )
     return out
 
 

@@ -82,6 +82,7 @@ from repro.stream.state import (
     StreamPlan,
     StreamState,
     plan_stream,
+    prime_batch,
 )
 
 __all__ = [
@@ -101,5 +102,6 @@ __all__ = [
     "StreamState",
     "plan_hop_ledger",
     "plan_stream",
+    "prime_batch",
     "quantize_pcm",
 ]

@@ -66,6 +66,12 @@ class AudioFrontend:
     def samples_in(self) -> int:
         return int(self._arena.samples_in[self._slot])
 
+    @property
+    def chunks_in(self) -> int:
+        """Chunks this stream has pushed (arena-counted, like
+        ``samples_in``; duplicate-sid batch pushes count each chunk)."""
+        return int(self._arena.chunks_in[self._slot])
+
     def push(self, audio: np.ndarray) -> None:
         self._arena.push(self._slot, audio)
 

@@ -132,6 +132,7 @@ class StreamCounters:
     stream_id: int
     joined_at: float
     samples_in: int = 0
+    chunks_in: int = 0
     frames_out: int = 0
     detections: int = 0
     closed_at: float | None = None
@@ -158,6 +159,14 @@ class StreamMetrics:
         self.step_shard_streams: list[list[int]] = []  # per step, per shard
         self._frames_emitted = 0  # fleet total, accumulated per step
         self.capacity_events: list[tuple[float, int]] = []  # (t, new_cap)
+        # cross-shard migrations (scheduler._maybe_rebalance)
+        self.rebalances = 0
+        self.rows_migrated = 0
+        # push-side fleet totals, folded from the arena's monotone scalar
+        # counters at hop boundaries — the push path itself never touches
+        # per-sid counter objects
+        self.samples_pushed = 0
+        self.chunks_pushed = 0
         # silicon-equivalent energy: static per-hop/-finalize charges from
         # the plan, accumulated into one fleet ledger as hops execute
         self._hop_ledger = plan_hop_ledger(plan)
@@ -207,15 +216,30 @@ class StreamMetrics:
             (time.perf_counter() - self._t0, new_capacity)
         )
 
+    def on_rebalance(self, n_moves: int) -> None:
+        """One cross-shard migration leveled the pool with ``n_moves``
+        slot rows crossing shard blocks."""
+        self.rebalances += 1
+        self.rows_migrated += n_moves
+
+    def on_push_fold(self, samples_total: int, chunks_total: int) -> None:
+        """Hop-boundary fold of the arena's monotone push counters (two
+        absolute scalars — O(1) regardless of stream count)."""
+        self.samples_pushed = int(samples_total)
+        self.chunks_pushed = int(chunks_total)
+
     def on_close(self, sid: int, frames_out: int = 0,
-                 samples_in: int | None = None) -> None:
+                 samples_in: int | None = None,
+                 chunks_in: int | None = None) -> None:
         c = self.streams[sid]
         c.closed_at = time.perf_counter() - self._t0
         c.frames_out = frames_out
         if samples_in is not None:
-            # the shared arena's vectorized per-slot counter is the truth;
-            # it folds in here instead of being twinned on every push
+            # the shared arena's vectorized per-slot counters are the
+            # truth; they fold in here instead of being twinned per push
             c.samples_in = samples_in
+        if chunks_in is not None:
+            c.chunks_in = chunks_in
 
     # -- reporting -----------------------------------------------------------
 
@@ -250,6 +274,10 @@ class StreamMetrics:
             "capacity_last": float(self.capacity_events[-1][1])
             if self.capacity_events else 0.0,
             "n_shards": float(self.n_shards),
+            "rebalances": float(self.rebalances),
+            "rows_migrated": float(self.rows_migrated),
+            "samples_pushed": float(self.samples_pushed),
+            "chunks_pushed": float(self.chunks_pushed),
         }
 
     def shard_summary(self) -> dict[str, object]:

@@ -41,6 +41,22 @@ bit-exact with the single-device scheduler (tests/test_stream_sharded.py).
 With no mesh (or a 1-device mesh) every code path collapses to the
 single-device behavior.
 
+**Cross-shard rebalance (migrate-on-idle).**  Resizes never move rows
+across devices, so churn that leaves one shard crowded would pin the
+whole pool's shrink floor at that shard's tenant count.  At hop
+boundaries, when occupancy skew exceeds ``rebalance_threshold``, the
+scheduler executes ``SlotPlacement.rebalance()``'s cross-shard (dst,
+src) moves: one device-side row gather over the sharded
+tails/pendings/GAP state (``ops.remap_slot_rows`` — standalone because
+``pallas_call`` is GSPMD-opaque) plus the usual host-side
+``remap_rows``/``RingArena.apply_remap`` remap, after which
+``_maybe_shrink``'s floor is ``ceil(active / n_shards)`` per shard
+instead of the fullest shard's count — the paper's flexible ping-pong
+re-layout argument (§II-E) applied to the slot pool.  Migrations are
+bit-invisible to the streams riding through them (rows travel
+unchanged); ``rebalance_threshold=None`` restores the PR 3 no-migration
+behavior.
+
 Per emitted hop the step also runs the *in-jit finalization tail*: a ghost
 end-of-stream flush with statically known emission counts (the plan's
 ``flush_*`` geometry) followed by the fused classifier tail
@@ -77,6 +93,8 @@ from repro.stream.state import (
     StreamPlan,
     StreamState,
     plan_stream,
+    prime_batch,
+    quantize_pcm,
     remap_rows,
 )
 from repro.utils.logging import get_logger
@@ -366,7 +384,10 @@ class StreamScheduler:
     and the elastic resize scales the *per-shard* capacity so rows never
     cross devices (``SlotPlacement``).  ``capacity`` (and, if given,
     ``min_capacity``/``initial_capacity``) must be multiples of the mesh's
-    data-axis size.
+    data-axis size.  When leave churn skews occupancy by more than
+    ``rebalance_threshold`` tenants between the fullest and emptiest
+    shard, the next hop boundary migrates tenants across shards to level
+    the pool (and re-checks the shrink); ``None`` disables migration.
     """
 
     def __init__(
@@ -385,6 +406,7 @@ class StreamScheduler:
         min_capacity: int | None = None,
         mesh=None,
         inbox_samples: int | None = None,
+        rebalance_threshold: int | None = 1,
     ) -> None:
         assert backend in ("jnp", "pallas"), backend
         self.plan = plan_stream(spec, hop_frames=hop_frames)
@@ -456,6 +478,10 @@ class StreamScheduler:
         self._streams: dict[int, _Stream] = {}
         self._unprimed: set[int] = set()  # empty in steady state
         self._next_sid = 0
+        if rebalance_threshold is not None:
+            assert rebalance_threshold >= 1, rebalance_threshold
+        self._rebalance_threshold = rebalance_threshold
+        self._skew_dirty = False  # set on close; checked at hop boundaries
         # hop-boundary peeks are served from the last emit step's logits:
         # _finalize covers EVERY primed slot (masked rows hold steady
         # state), so the row stays valid until the slot is rewritten on
@@ -541,11 +567,67 @@ class StreamScheduler:
         min_sc = self._min_capacity // S
         while sc > min_sc and len(self._streams) <= (S * sc) // 4:
             sc //= 2
-        # floors: the configured minimum, and — because compaction is
-        # per-shard — the fullest shard's tenant count
+        # floors: the configured minimum, and — because shrink compaction
+        # is per-shard — the fullest shard's tenant count.  The rebalance
+        # plane levels occupancy at hop boundaries, so under churn this
+        # floor settles at ceil(active / S) instead of wherever the most
+        # crowded shard happens to sit (an all-zero occupancy floors at
+        # one empty local slot, i.e. min_capacity wins).
         sc = max(sc, min_sc, _next_pow2(max(self._placement.occupancy())))
         if S * sc < self._capacity:
             self._resize(S * sc)
+
+    def _maybe_rebalance(self) -> bool:
+        """Migrate-on-idle: level shard occupancy with cross-shard slot
+        moves when churn has skewed it past ``rebalance_threshold``.
+
+        Runs only at hop boundaries (never inside the steady hot path).
+        The device half is one ``ops.remap_slot_rows`` gather per state
+        array — rows travel unchanged, so the migration is bit-invisible
+        to the streams riding through it; the host half is the same
+        ``remap_rows``/``apply_remap`` path every resize already takes.
+        Returns True when any row moved (the caller then re-checks the
+        shrink, whose per-shard floor the migration just lifted).
+        """
+        thr = self._rebalance_threshold
+        if self.n_shards == 1 or thr is None:
+            return False
+        occ = self._placement.occupancy()
+        if max(occ) - min(occ) <= thr:
+            return False
+        moves, remap = self._placement.rebalance()
+        if not moves:
+            return False
+        cap = self._capacity
+        perm = np.arange(cap, dtype=np.int64)
+        keep = np.zeros(cap, bool)
+        for old, new in remap.items():
+            perm[new] = old
+            keep[new] = True
+        self._tails = [
+            ops.remap_slot_rows(t, perm, keep, mesh=self.mesh)
+            for t in self._tails
+        ]
+        self._pendings = [
+            ops.remap_slot_rows(p, perm, keep, mesh=self.mesh)
+            for p in self._pendings
+        ]
+        self._gap = ops.remap_slot_rows(self._gap, perm, keep, mesh=self.mesh)
+        self._arena.apply_remap(remap, cap)
+        self._detector.apply_remap(remap, cap)
+        self._slot_sid = remap_rows(self._slot_sid, remap, cap, fill=-1)
+        self._primed_mask = remap_rows(self._primed_mask, remap, cap)
+        self._frames_v = remap_rows(self._frames_v, remap, cap)
+        for s in self._streams.values():
+            s.slot = remap[s.slot]
+            s.frontend._slot = s.slot
+        self._emit_cache = None  # cached rows are indexed by old slots
+        self.metrics.on_rebalance(len(moves))
+        log.info(
+            "rebalanced %d slot(s) across %d shard(s): occupancy %s -> %s",
+            len(moves), self.n_shards, occ, self._placement.occupancy(),
+        )
+        return True
 
     # -- stream lifecycle ----------------------------------------------------
 
@@ -598,13 +680,53 @@ class StreamScheduler:
         """Bulk twin of ``push_audio``: one vectorized quantize + scatter
         lands every stream's chunk in the shared arena
         (``RingArena.push_batch``) — the ingest half of the zero-per-slot
-        hop path.  Float PCM and u8 chunks may be mixed; each sid may
-        appear at most once per call.  Per-stream ``samples_in`` counters
-        are NOT walked here — the arena's vectorized counter is the truth
-        and folds into the stream's metrics at close."""
+        hop path.  Float PCM and u8 chunks may be mixed, and a sid may
+        appear multiple times: duplicate-sid chunks coalesce in arrival
+        order (float chunks pre-quantized with the slot's gain — the
+        exact math the arena would apply — so the single scatter stays
+        bit-identical to sequential pushes).  Per-stream ``samples_in``
+        counters are NOT walked here — the arena's vectorized counter is
+        the truth and folds into the stream's metrics at close."""
         streams = [self._require(sid) for sid in sids]
         slots = np.fromiter((s.slot for s in streams), np.int64, len(streams))
+        if np.unique(slots).size != slots.size:
+            slots, chunks, extra = self._coalesce_chunks(slots, chunks)
+        else:
+            extra = None
         self._arena.push_batch(slots, chunks)
+        if extra is not None:
+            # credit the chunks the coalesce merged away (push_batch
+            # counted one per slot) so chunks_in stays arrival-accurate
+            self._arena.chunks_in[slots] += extra
+            self._arena.total_chunks_in += int(extra.sum())
+
+    def _coalesce_chunks(self, slots: np.ndarray, chunks: list[np.ndarray]
+                         ) -> tuple[np.ndarray, list[np.ndarray], np.ndarray]:
+        """Merge duplicate-slot chunks into one chunk per slot (arrival
+        order preserved).  Float PCM is quantized here with the slot's
+        gain — identical to ``RingArena.push_batch``'s vectorized pass —
+        so a float chunk followed by a u8 chunk concatenates without the
+        dtype of one corrupting the other."""
+        merged: dict[int, list[np.ndarray]] = {}
+        for slot, chunk in zip(slots.tolist(), chunks):
+            c = np.asarray(chunk).reshape(-1)
+            if c.dtype.kind == "f":
+                c = quantize_pcm(c, self._arena.gain[slot])
+            elif c.dtype.kind not in "iu":
+                raise TypeError(
+                    f"audio must be float PCM or integer u8 codes, "
+                    f"got dtype {c.dtype}"
+                )
+            merged.setdefault(slot, []).append(c)
+        out_slots = np.fromiter(merged.keys(), np.int64, len(merged))
+        out_chunks = [
+            cs[0] if len(cs) == 1 else np.concatenate(cs)
+            for cs in merged.values()
+        ]
+        extra = np.fromiter(
+            (len(cs) - 1 for cs in merged.values()), np.int64, len(merged)
+        )
+        return out_slots, out_chunks, extra
 
     @property
     def active(self) -> list[int]:
@@ -613,35 +735,50 @@ class StreamScheduler:
     # -- the batched hop -----------------------------------------------------
 
     def _prime_ready(self) -> None:
-        # priming is the numpy warm-up path: looping here is fine because
-        # self._unprimed is EMPTY in steady state — the hop hot path never
-        # enters this loop once the fleet is primed
-        for sid in sorted(self._unprimed):
-            s = self._streams[sid]
-            if len(s.frontend) >= self.plan.prime_samples:
-                st = StreamState(self.plan, self.weights, self.thresholds)
-                st.advance(s.frontend.pop(self.plan.prime_samples))
-                # priming consumed a non-hop-multiple; realign the inbox
-                # so every future hop window is one contiguous block
-                self._arena.rebase(s.slot)
-                steady = st.export_steady()
-                self._write_slot(s.slot, steady)
-                self._frames_v[s.slot] = st.frames
-                s.primed = True
-                self._primed_mask[s.slot] = True
-                self._unprimed.discard(sid)
-                # host wrote the slot: earlier cached logits don't cover
-                # it; the NEXT emit step (which includes this write) does
-                s.stamp = self._emit_step + 1
-
-    def _write_slot(self, slot: int, steady: dict) -> None:
+        """Batched mass-join primer: every unprimed stream whose inbox
+        holds ``prime_samples`` warms up through ONE vectorized numpy
+        advance (``state.prime_batch`` — bit-exact with the per-stream
+        ``StreamState`` warm-up) and lands in the slot pool via one
+        batched scatter per state array, so a 256-stream mass join costs
+        one cascade instead of 256 per-stream numpy warm-ups.  Runs only
+        while ``self._unprimed`` is non-empty — never in steady state."""
+        prime = self.plan.prime_samples
+        sids = sorted(self._unprimed)
+        slots = np.fromiter(
+            (self._streams[sid].slot for sid in sids), np.int64, len(sids)
+        )
+        ready = (self._arena.wr[slots] - self._arena.rd[slots]) >= prime
+        if not ready.any():
+            return
+        sids = [sid for sid, r in zip(sids, ready.tolist()) if r]
+        slots = slots[ready]
+        samples = self._arena.pop_batch(slots, prime)
+        # priming consumed a non-hop-multiple; realign the inboxes so
+        # every future hop window is one contiguous block
+        self._arena.rebase_batch(slots)
+        steady = prime_batch(self.plan, self.weights, self.thresholds,
+                             samples)
+        jslots = jnp.asarray(slots)
         for i in range(len(self.plan.convs)):
-            self._tails[i] = self._tails[i].at[slot].set(steady["tails"][i])
+            self._tails[i] = self._tails[i].at[jslots].set(
+                jnp.asarray(steady["tails"][i])
+            )
             if self._pendings[i].shape[1]:
-                self._pendings[i] = self._pendings[i].at[slot].set(
-                    steady["pendings"][i]
+                self._pendings[i] = self._pendings[i].at[jslots].set(
+                    jnp.asarray(steady["pendings"][i])
                 )
-        self._gap = self._gap.at[slot].set(steady["gap"].astype(np.int32))
+        self._gap = self._gap.at[jslots].set(
+            jnp.asarray(steady["gap"].astype(np.int32))
+        )
+        self._frames_v[slots] = steady["frames"]
+        self._primed_mask[slots] = True
+        for sid in sids:
+            s = self._streams[sid]
+            s.primed = True
+            self._unprimed.discard(sid)
+            # host wrote the slot: earlier cached logits don't cover it;
+            # the NEXT emit step (which includes this write) does
+            s.stamp = self._emit_step + 1
 
     def _clear_slot(self, slot: int) -> None:
         for i in range(len(self.plan.convs)):
@@ -685,6 +822,13 @@ class StreamScheduler:
         (priming, teardown, fallback peeks) and for detections that
         actually fire.
         """
+        if self._skew_dirty:
+            # hop boundary: leave churn since the last hop may have
+            # skewed the shards — migrate-on-idle, then re-check the
+            # shrink the migration may have unpinned
+            self._skew_dirty = False
+            if self._maybe_rebalance():
+                self._maybe_shrink()
         if self._unprimed:
             self._prime_ready()  # numpy warm-up, excluded from step timing
         hop = self.plan.hop_samples
@@ -745,6 +889,11 @@ class StreamScheduler:
             time.perf_counter() - t0, host_pack_s=t_pack,
             shard_counts=shard_counts.tolist(), finalized=self.emit_logits,
         )
+        # fold the arena's push-side counters into the metrics at the hop
+        # boundary: two scalar reads, so neither the push path nor this
+        # hot path ever walks per-sid counter objects
+        self.metrics.on_push_fold(self._arena.total_samples_in,
+                                  self._arena.total_chunks_in)
         return HopBatch(sids=sids, frames=frames, logits=rows_logits,
                         posteriors=rows_post, detections=detections)
 
@@ -832,7 +981,9 @@ class StreamScheduler:
         s = self._require(sid)
         del self._streams[sid]
         self._unprimed.discard(sid)
-        samples_in = s.frontend.samples_in  # before the slot is scrubbed
+        # before the slot is scrubbed
+        samples_in = s.frontend.samples_in
+        chunks_in = s.frontend.chunks_in
         if s.primed:
             st = self._extract_slot(s)
         else:
@@ -857,7 +1008,11 @@ class StreamScheduler:
         self._primed_mask[s.slot] = False
         self._frames_v[s.slot] = 0
         self.metrics.on_close(sid, frames_out=st.frames,
-                              samples_in=samples_in)
+                              samples_in=samples_in, chunks_in=chunks_in)
+        # a leave can skew the shards; the migration itself waits for the
+        # next hop boundary (migrate-on-idle), but the shrink runs now so
+        # an emptying pool releases capacity without needing another hop
+        self._skew_dirty = True
         self._maybe_shrink()
         return StreamResult(
             stream_id=sid,

@@ -178,7 +178,12 @@ class RingArena:
         self.rd = np.zeros(capacity_slots, np.int64)  # monotonic, per slot
         self.wr = np.zeros(capacity_slots, np.int64)  # monotonic, per slot
         self.samples_in = np.zeros(capacity_slots, np.int64)
+        self.chunks_in = np.zeros(capacity_slots, np.int64)
         self.gain = np.ones(capacity_slots, np.float64)
+        # fleet totals: monotone even across slot clears, so the metrics
+        # fold at hop boundaries is two scalar reads, never a per-slot walk
+        self.total_samples_in = 0
+        self.total_chunks_in = 0
 
     @property
     def capacity_slots(self) -> int:
@@ -264,6 +269,9 @@ class RingArena:
         self.data[rows, cols] = flat
         self.wr[slots] += lens
         self.samples_in[slots] += lens
+        self.chunks_in[slots] += 1
+        self.total_samples_in += total
+        self.total_chunks_in += slots.size
 
     # -- drain ---------------------------------------------------------------
 
@@ -319,12 +327,26 @@ class RingArena:
         priming: from then on the hot path only consumes whole hops, so
         the slot's windows stay block-aligned and ``pack_hops`` takes the
         contiguous fast path forever."""
-        n = self.fill_of(slot)
-        if n:
-            idx = (self.rd[slot] + np.arange(n)) % self.capacity_samples
-            self.data[slot, :n] = self.data[slot, idx]
-        self.rd[slot] = 0
-        self.wr[slot] = n
+        self.rebase_batch(np.array([slot], np.int64))
+
+    def rebase_batch(self, slots: np.ndarray) -> None:
+        """``rebase`` for many slots in one vectorized gather/scatter —
+        the mass-join twin: a B-stream join realigns all B inboxes without
+        a python loop over slots."""
+        slots = np.asarray(slots, np.int64)
+        if slots.size == 0:
+            return
+        n = self.wr[slots] - self.rd[slots]
+        m = int(n.max())
+        if m:
+            idx = (self.rd[slots][:, None]
+                   + np.arange(m)) % self.capacity_samples
+            vals = self.data[slots[:, None], idx]
+            keep = np.arange(m)[None, :] < n[:, None]
+            cur = self.data[slots, :m]
+            self.data[slots, :m] = np.where(keep, vals, cur)
+        self.rd[slots] = 0
+        self.wr[slots] = n
 
     def peek(self, slot: int, n: int | None = None) -> np.ndarray:
         """Oldest ``n`` samples (default: all) of one slot as (n,) int32
@@ -342,26 +364,50 @@ class RingArena:
         self.rd[slot] += n
         return out
 
+    def pop_batch(self, slots: np.ndarray, n: int) -> np.ndarray:
+        """Consume the oldest ``n`` samples of many slots in one gather;
+        returns (len(slots), n) int32 u8-codes — the batched primer's
+        warm-up read (every joining stream pops ``prime_samples`` at
+        once)."""
+        slots = np.asarray(slots, np.int64)
+        if slots.size == 0:
+            return np.zeros((0, n), np.int32)
+        if ((self.wr[slots] - self.rd[slots]) < n).any():
+            raise MemoryError(
+                f"arena underflow: pop_batch({n}) on a slot holding less"
+            )
+        idx = (self.rd[slots][:, None] + np.arange(n)) % self.capacity_samples
+        out = self.data[slots[:, None], idx].astype(np.int32)
+        self.rd[slots] += n
+        return out
+
     # -- slot lifecycle ------------------------------------------------------
 
     def clear_slot(self, slot: int) -> None:
-        """Scrub one row so the next tenant starts clean."""
+        """Scrub one row so the next tenant starts clean (the fleet-level
+        ``total_*`` counters keep counting across tenants)."""
         self.data[slot] = 0
         self.rd[slot] = self.wr[slot] = 0
         self.samples_in[slot] = 0
+        self.chunks_in[slot] = 0
         self.gain[slot] = 1.0
 
     def apply_remap(self, remap: dict[int, int], new_capacity_slots: int
                     ) -> None:
-        """Follow a ``SlotPlacement`` grow/shrink: surviving rows move to
-        their new slots with one vectorized gather per array; vacated rows
-        reset.  Rows never cross shard blocks because the remap never does.
+        """Follow a ``SlotPlacement`` grow/shrink/rebalance: surviving
+        rows move to their new slots with one vectorized gather per
+        array; vacated rows reset.  Resizes keep rows inside their shard
+        block; a ``rebalance`` remap is the one path that moves rows
+        across blocks (mirroring the device-side
+        ``ops.remap_slot_rows`` gather).
         """
         self.data = remap_rows(self.data, remap, new_capacity_slots)
         self.rd = remap_rows(self.rd, remap, new_capacity_slots)
         self.wr = remap_rows(self.wr, remap, new_capacity_slots)
         self.samples_in = remap_rows(self.samples_in, remap,
                                      new_capacity_slots)
+        self.chunks_in = remap_rows(self.chunks_in, remap,
+                                    new_capacity_slots)
         self.gain = remap_rows(self.gain, remap, new_capacity_slots, fill=1.0)
 
 
@@ -386,9 +432,16 @@ class SlotPlacement:
       * ``grow``/``shrink`` change the *per-shard* capacity: a grow
         appends rows at the end of every shard block, a shrink compacts
         each shard's tenants into its own surviving local slots and drops
-        the block tails.  Cross-shard motion is structurally impossible,
+        the block tails.  A resize never moves a row across devices,
         which is why an elastic resize under sharding costs zero
-        collective communication.
+        collective communication;
+      * ``rebalance`` is the ONE deliberate cross-shard path — the
+        software twin of re-laying-out the paper's flexible ping-pong
+        feature SRAM when the workload shape changes (§II-E): at hop
+        boundaries, churn-induced occupancy skew is leveled by migrating
+        tenants from over-full shards to under-full ones, so the shrink
+        floor is ``ceil(active / n_shards)`` per shard instead of the
+        fullest shard's tenant count.
 
     The placement is pure bookkeeping (plain python ints); the scheduler
     applies the returned remaps/moves to the batched device arrays.
@@ -496,6 +549,53 @@ class SlotPlacement:
         for orig, interim in moved.items():
             remap[orig] = survivor_new[interim]
         self.slots, self.shard_capacity = slots, c
+        return moves, remap
+
+    def rebalance(self) -> tuple[list[tuple[int, int]], dict[int, int]]:
+        """Plan cross-shard migrations that level shard occupancy.
+
+        Tenants move from shards above ``target = ceil(active /
+        n_shards)`` to shards below it until no shard exceeds the target
+        — the leveled pool can then shrink to ``ceil(active / S)`` local
+        slots where the skewed pool was pinned at the fullest shard's
+        tenant count.  Donors give up their *highest* occupied local slot
+        (freeing the block tail a later shrink slices off); receivers
+        fill their *lowest* free local slot.  Deterministic: ties break
+        to the lowest shard index.
+
+        Returns ``(moves, remap)`` with capacity unchanged: ``moves`` are
+        (dst, src) row copies in the current global indexing — each one
+        crossing a shard block, unlike every other placement operation —
+        and ``remap`` is {original_slot: current_slot} for EVERY tenant
+        (identity when unmoved), i.e. ``RingArena.apply_remap``'s
+        contract.
+        """
+        c = self.shard_capacity
+        occ = self.occupancy()
+        active = sum(occ)
+        target = -(-active // self.n_shards) if active else 0
+        moves: list[tuple[int, int]] = []
+        while True:
+            hi = max(range(self.n_shards), key=lambda s: (occ[s], -s))
+            if occ[hi] <= target:
+                break
+            lo = min(range(self.n_shards), key=lambda s: (occ[s], s))
+            src = next(hi * c + loc for loc in range(c - 1, -1, -1)
+                       if self.slots[hi * c + loc] is not None)
+            dst = next(lo * c + loc for loc in range(c)
+                       if self.slots[lo * c + loc] is None)
+            self.slots[dst] = self.slots[src]
+            self.slots[src] = None
+            moves.append((dst, src))
+            occ[hi] -= 1
+            occ[lo] += 1
+        # every move is a single hop (donor shards only lose, receiver
+        # shards only gain), so {dst: src} inverts to the original slots
+        came_from = {dst: src for dst, src in moves}
+        remap = {
+            came_from.get(slot, slot): slot
+            for slot, sid in enumerate(self.slots) if sid is not None
+        }
         return moves, remap
 
 
@@ -932,3 +1032,83 @@ class StreamState:
             self.started[i] = True
         self.gap = np.asarray(gap, np.int64).copy()
         self.frames = frames
+
+
+# ---------------------------------------------------------------------------
+# Batched primer: warm up a mass join as ONE vectorized advance
+# ---------------------------------------------------------------------------
+
+def prime_batch(
+    plan: StreamPlan,
+    weights: dict[int, np.ndarray],
+    thresholds: dict[int, tuple[np.ndarray, np.ndarray]],
+    samples: np.ndarray,
+) -> dict[str, list[np.ndarray] | np.ndarray | int]:
+    """Warm up B fresh streams with one batched numpy advance.
+
+    ``samples`` is (B, prime_samples) u8 codes.  Returns the batched
+    steady-state interchange: ``tails[i]`` (B, tail_i, cin_i),
+    ``pendings[i]`` (B, phase_i, cout_i), ``gap`` (B, C) int64 and the
+    scalar ``frames`` every primed stream has emitted — row ``j`` equals
+    ``StreamState().advance(samples[j]); export_steady()`` exactly.  The
+    warm-up is integer arithmetic end to end (int64 conv accumulation,
+    integer SA thresholds, OR-pooling), so adding the batch axis cannot
+    change any value; bit-exactness is pinned by tests/test_rebalance.py.
+
+    This is what lets a B-stream mass join cost one vectorized cascade
+    instead of B per-stream ``StreamState`` warm-ups (the last
+    per-stream-python ingest edge the PR 4 arena left behind).
+    """
+    samples = np.asarray(samples)
+    if samples.ndim != 2 or samples.shape[1] != plan.prime_samples:
+        raise ValueError(
+            f"prime_batch wants (B, {plan.prime_samples}) samples, "
+            f"got {samples.shape}"
+        )
+    B = samples.shape[0]
+    cur = samples.reshape(B, -1, plan.convs[0].cin).astype(np.int32)
+    tails: list[np.ndarray] = []
+    pendings: list[np.ndarray] = []
+    for st in plan.convs:
+        # left pad arrives with the first real frame, exactly like
+        # StreamState._advance_once on a fresh stream
+        pad_val = st.in_offset if st.in_bits > 1 else 0
+        window = np.concatenate(
+            [np.full((B, st.pad, st.cin), pad_val, np.int32), cur], axis=1
+        )
+        avail = window.shape[1]
+        n_conv = (avail - st.k) // st.stride + 1 if avail >= st.k else 0
+        if n_conv <= 0 or avail - n_conv * st.stride != st.tail:
+            raise ValueError(
+                f"{st.name}: priming prefix does not reach the steady "
+                f"tail (plan prime_samples mismatch?)"
+            )
+        w = weights[st.layer_idx].reshape(st.k, st.cin, st.cout)
+        x = window.astype(np.int64)
+        if st.in_bits > 1:
+            x = x - st.in_offset  # offset-binary input (pads carry the code)
+        taps = np.stack(
+            [
+                x[:, t : t + (n_conv - 1) * st.stride + 1 : st.stride]
+                for t in range(st.k)
+            ],
+            axis=1,
+        )  # (B, K, n_conv, Cin)
+        raw = np.einsum("bknc,kco->bno", taps, w.astype(np.int64))
+        thr, flip = thresholds[st.layer_idx]
+        ge = raw >= thr[None, None, :]
+        y = np.where(flip[None, None, :], ~ge, ge).astype(np.int32)
+        tails.append(window[:, n_conv * st.stride :])
+        used = (n_conv // st.pool) * st.pool
+        if n_conv - used != st.phase:
+            raise ValueError(
+                f"{st.name}: pool phase {n_conv - used} != steady "
+                f"{st.phase} after priming"
+            )
+        pendings.append(y[:, used:])
+        cur = y[:, :used].reshape(
+            B, n_conv // st.pool, st.pool, st.cout
+        ).max(axis=2)
+    gap = cur.astype(np.int64).sum(axis=1)
+    return {"tails": tails, "pendings": pendings, "gap": gap,
+            "frames": cur.shape[1]}

@@ -275,6 +275,102 @@ def test_step_batch_columnar_matches_step_tuples(smoke):
     assert m["device_ms_p50"] > 0.0
 
 
+def test_push_audio_batch_coalesces_duplicate_sids(smoke):
+    """Satellite: a sid appearing multiple times in one batch coalesces
+    (arrival order, float/u8 dtypes preserved per chunk) instead of
+    tripping RingArena.push_batch's unique-slots ValueError — and the
+    result is bit-identical to sequential pushes."""
+    spec, weights, thresholds, _ = smoke
+    a = StreamScheduler(spec, weights, thresholds, capacity=4)
+    b = StreamScheduler(spec, weights, thresholds, capacity=4)
+    rng = np.random.default_rng(33)
+    f0 = rng.uniform(-1.0, 1.0, 37)                    # float PCM
+    u1 = rng.integers(0, 256, 21).astype(np.uint8)     # u8 codes
+    u0 = rng.integers(0, 256, 13).astype(np.uint8)
+    f0b = rng.uniform(-1.0, 1.0, 9).astype(np.float32)
+    for sched in (a, b):
+        s0, s1 = sched.add_stream(), sched.add_stream()
+    a.push_audio_batch([s0, s1, s0, s0], [f0, u1, u0, f0b])
+    for sid, chunk in ((s0, f0), (s1, u1), (s0, u0), (s0, f0b)):
+        b.push_audio(sid, chunk)
+    np.testing.assert_array_equal(a._arena.data, b._arena.data)
+    assert a._arena.fill().tolist() == b._arena.fill().tolist()
+    # chunk accounting stays arrival-accurate through the coalesce
+    assert a._arena.chunks_in.tolist() == b._arena.chunks_in.tolist()
+    assert a._arena.total_chunks_in == b._arena.total_chunks_in == 4
+    # and the streams compute identically from here
+    outs_a, outs_b = a.run_until_starved(), b.run_until_starved()
+    assert len(outs_a) == len(outs_b)
+    for (sa, fa, la, _), (sb, fb, lb, _) in zip(outs_a, outs_b):
+        assert (sa, fa) == (sb, fb)
+        np.testing.assert_array_equal(la, lb)
+    # malformed dtypes are still rejected on the coalesce path
+    with pytest.raises(TypeError, match=r"float PCM or integer u8"):
+        a.push_audio_batch([s0, s0], [np.array([True]), np.array([False])])
+
+
+def test_push_counters_fold_without_per_sid_python(smoke):
+    """Satellite: push-side counters accumulate in slot-indexed arena
+    arrays and fold into the metrics at hop boundaries (fleet totals) and
+    at close (per-stream) — the push path never walks per-sid counter
+    objects."""
+    spec, weights, thresholds, _ = smoke
+    sched = StreamScheduler(spec, weights, thresholds, capacity=4)
+    plan = sched.plan
+    sids = [sched.add_stream() for _ in range(3)]
+    n = plan.prime_samples + 2 * plan.hop_samples
+    rng = np.random.default_rng(8)
+    clips = rng.integers(0, 256, (3, n)).astype(np.uint8)
+    sched.push_audio_batch(sids, list(clips))          # 1 chunk each
+    sched.push_audio(sids[0], clips[0][:5])            # +1 chunk, +5 samples
+    assert sched.metrics.summary()["samples_pushed"] == 0.0  # no hop yet
+    sched.drain()
+    m = sched.metrics.summary()
+    assert m["samples_pushed"] == float(3 * n + 5)
+    assert m["chunks_pushed"] == 4.0
+    res = sched.close_stream(sids[0])
+    c = sched.metrics.streams[sids[0]]
+    assert c.samples_in == n + 5 and c.chunks_in == 2
+    assert res.samples == n + 5
+
+
+def test_step_batch_profile_has_no_per_sid_python(smoke):
+    """Satellite: the steady-state hop's python call count must not scale
+    with the number of streams — profile one hop at B=4 and B=32 and
+    demand identical call counts (any per-sid loop would add ~B calls)."""
+    import cProfile
+    import pstats
+
+    spec, weights, thresholds, _ = smoke
+
+    def profile_one_hop(B):
+        cfg = DetectorConfig(on_threshold=2.0)  # nothing ever fires
+        sched = StreamScheduler(spec, weights, thresholds, capacity=B,
+                                initial_capacity=B, min_capacity=B,
+                                detector_cfg=cfg)
+        plan = sched.plan
+        rng = np.random.default_rng(B)
+        sids = [sched.add_stream() for _ in range(B)]
+        warm = plan.prime_samples + plan.hop_samples
+        audio = rng.integers(0, 256, (B, warm + plan.hop_samples)
+                             ).astype(np.uint8)
+        sched.push_audio_batch(sids, list(audio[:, :warm]))
+        sched.drain()  # primes + traces the jitted step at this capacity
+        sched.push_audio_batch(sids, list(audio[:, warm:]))
+        prof = cProfile.Profile()
+        prof.enable()
+        batch = sched.step_batch()
+        prof.disable()
+        assert batch is not None and batch.sids.size == B
+        stats = pstats.Stats(prof)
+        for (_, _, name), (_, nc, *_rest) in stats.stats.items():
+            # nothing that smells per-sid may appear at all
+            assert "_require" not in name and "fill_of" not in name, name
+        return sum(nc for (_, nc, *_r) in stats.stats.values())
+
+    assert profile_one_hop(4) == profile_one_hop(32)
+
+
 # ---------------------------------------------------------------------------
 # Property-style bit-exactness sweep: ragged mixed-dtype chunks, elastic pool
 # ---------------------------------------------------------------------------

@@ -1,0 +1,364 @@
+"""Cross-shard rebalance plane + batched mass-join primer.
+
+The migrate-on-idle rebalance (SlotPlacement.rebalance executed by
+StreamScheduler at hop boundaries through ops.remap_slot_rows) must lift
+the elastic pool's shrink floor from the fullest shard's tenant count to
+ceil(active / n_shards) — and stay bit-exact with the single-device
+scheduler and the offline executor through every migration.  The batched
+primer (state.prime_batch) must warm up a B-stream mass join in one
+vectorized advance, bit-identical to B per-stream StreamState warm-ups.
+
+Multi-shard cases need a forced multi-device host (the CI multi-device
+leg):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest tests/test_rebalance.py
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import compiler, executor
+from repro.kernels import ops
+from repro.launch.mesh import make_stream_mesh
+from repro.models import kws
+from repro.stream import (
+    SlotPlacement,
+    StreamScheduler,
+    StreamState,
+    plan_stream,
+    prime_batch,
+)
+from repro.stream.scheduler import _next_pow2
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    spec = kws.build_kws_smoke_spec()
+    params = kws.init_kws_params(jax.random.PRNGKey(0), spec)
+    weights, thresholds = kws.export_kws(params, spec)
+    prog = compiler.compile_model(spec, weights, thresholds)
+    return spec, weights, thresholds, prog
+
+
+def _mesh(n):
+    if jax.device_count() < n:
+        pytest.skip(
+            f"needs {n} devices (XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n})"
+        )
+    return make_stream_mesh(n)
+
+
+def _offline(prog, x):
+    return executor.Executor(prog).run(x[:, None]).output.ravel()
+
+
+def _clip(spec, seed):
+    return np.random.default_rng(seed).integers(
+        0, 256, (spec.in_len,)
+    ).astype(np.uint8)
+
+
+def _by_sid(outs):
+    d = {}
+    for sid, frame, logits, _ in outs:
+        d.setdefault(sid, []).append((frame, logits))
+    return d
+
+
+def _assert_outs_equal(a, b, stage=""):
+    da, db = _by_sid(a), _by_sid(b)
+    assert da.keys() == db.keys(), stage
+    for sid in da:
+        assert len(da[sid]) == len(db[sid]), (stage, sid)
+        for (fa, la), (fb, lb) in zip(da[sid], db[sid]):
+            assert fa == fb, (stage, sid)
+            np.testing.assert_array_equal(la, lb)
+
+
+# ---------------------------------------------------------------------------
+# Planner unit behavior
+# ---------------------------------------------------------------------------
+
+def test_placement_rebalance_levels_skewed_occupancy():
+    p = SlotPlacement(4, 4)
+    for sid in range(8):
+        p.alloc(sid)  # least-loaded: 2 per shard
+    # churn: free everything off shard 0 -> occupancy [2, 0, 0, 0] ... plus
+    # pile 2 more onto shard 0 via direct placement
+    for slot, sid in enumerate(list(p.slots)):
+        if sid is not None and p.shard_of(slot) != 0:
+            p.free(slot)
+    p.slots[2], p.slots[3] = 90, 91  # shard 0 now holds 4 of 4 active... 6
+    occ = p.occupancy()
+    assert occ == [4, 0, 0, 0]
+    moves, remap = p.rebalance()  # target = ceil(4/4) = 1
+    assert p.occupancy() == [1, 1, 1, 1]
+    assert len(moves) == 3
+    for dst, src in moves:
+        assert p.shard_of(dst) != p.shard_of(src)  # genuinely cross-shard
+    # remap covers EVERY tenant: identity for unmoved, src->dst for moved
+    assert len(remap) == 4
+    for old, new in remap.items():
+        assert p.slots[new] is not None
+    moved = {src: dst for dst, src in moves}
+    for old, new in remap.items():
+        assert new == moved.get(old, old)
+
+
+def test_placement_rebalance_noop_when_level():
+    p = SlotPlacement(2, 4)
+    for sid in range(5):
+        p.alloc(sid)  # 3 / 2: max == ceil(5/2), already level
+    before = list(p.slots)
+    moves, remap = p.rebalance()
+    assert moves == [] and p.slots == before
+    assert remap == {s: s for s, sid in enumerate(before) if sid is not None}
+
+
+def test_placement_rebalance_deterministic_slots():
+    # donors give up their HIGHEST occupied local slot, receivers fill
+    # their LOWEST free local slot, ties break to the lowest shard
+    p = SlotPlacement(2, 4)
+    p.slots = [10, 11, 12, None, None, None, None, None]
+    moves, remap = p.rebalance()  # target ceil(3/2) = 2
+    assert moves == [(4, 2)]
+    assert remap == {0: 0, 1: 1, 2: 4}
+
+
+def test_remap_slot_rows_gathers_and_clears():
+    x = np.arange(24, dtype=np.int32).reshape(4, 3, 2)
+    # tenant at 0 stays, tenant at 3 migrates to 1, rows 2 and 3 vacate
+    perm = np.array([0, 3, 2, 3])
+    keep = np.array([True, True, False, False])
+    out = np.asarray(ops.remap_slot_rows(x, perm, keep))
+    np.testing.assert_array_equal(out[0], x[0])
+    np.testing.assert_array_equal(out[1], x[3])
+    assert (out[2] == 0).all() and (out[3] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Batched primer
+# ---------------------------------------------------------------------------
+
+def test_prime_batch_matches_streamstate(smoke):
+    """One vectorized warm-up == B per-stream StreamState warm-ups, bit
+    for bit (the export_steady interchange contract)."""
+    spec, weights, thresholds, _ = smoke
+    plan = plan_stream(spec, hop_frames=2)
+    rng = np.random.default_rng(42)
+    B = 5
+    codes = rng.integers(0, 256, (B, plan.prime_samples))
+    batched = prime_batch(plan, weights, thresholds, codes)
+    for j in range(B):
+        st = StreamState(plan, weights, thresholds)
+        st.advance(codes[j])
+        steady = st.export_steady()
+        for i in range(len(plan.convs)):
+            np.testing.assert_array_equal(
+                batched["tails"][i][j], steady["tails"][i]
+            )
+            np.testing.assert_array_equal(
+                batched["pendings"][i][j], steady["pendings"][i]
+            )
+        np.testing.assert_array_equal(batched["gap"][j], steady["gap"])
+        assert batched["frames"] == st.frames
+
+
+def test_prime_batch_rejects_wrong_prefix(smoke):
+    spec, weights, thresholds, _ = smoke
+    plan = plan_stream(spec)
+    with pytest.raises(ValueError, match="prime_batch wants"):
+        prime_batch(plan, weights, thresholds,
+                    np.zeros((2, plan.prime_samples - 1), np.uint8))
+
+
+def test_mass_join_bitexact_vs_sequential_joins(smoke):
+    """B streams joining in one hop (one batched primer cascade) emit the
+    same per-hop and final logits as B sequential join/prime/drain
+    rounds, and both equal the offline executor."""
+    spec, weights, thresholds, prog = smoke
+    B = 16
+    clips = {j: _clip(spec, 700 + j) for j in range(B)}
+
+    mass = StreamScheduler(spec, weights, thresholds, capacity=B,
+                           initial_capacity=B, min_capacity=B)
+    sids = [mass.add_stream() for _ in range(B)]
+    mass.push_audio_batch(sids, [clips[j] for j in range(B)])
+    outs_mass = mass.run_until_starved()  # all B prime in ONE call
+
+    seq = StreamScheduler(spec, weights, thresholds, capacity=B,
+                          initial_capacity=B, min_capacity=B)
+    outs_seq = []
+    for j in range(B):
+        assert seq.add_stream() == j
+        seq.push_audio(j, clips[j])
+        outs_seq.extend(seq.run_until_starved())
+
+    _assert_outs_equal(outs_mass, outs_seq, "mass vs sequential")
+    for j in range(B):
+        ra, rb = mass.close_stream(j), seq.close_stream(j)
+        np.testing.assert_array_equal(ra.logits, rb.logits)
+        np.testing.assert_array_equal(ra.logits, _offline(prog, clips[j]))
+
+
+# ---------------------------------------------------------------------------
+# Empty-pool shrink floor (satellite)
+# ---------------------------------------------------------------------------
+
+def test_empty_pool_shrinks_to_min_capacity(smoke):
+    """With occupancy all zeros mid-churn the _next_pow2(max(occ)) floor
+    must collapse to one empty slot, i.e. min_capacity wins."""
+    spec, weights, thresholds, prog = smoke
+    sched = StreamScheduler(spec, weights, thresholds, capacity=32,
+                            initial_capacity=32, min_capacity=2)
+    sids = [sched.add_stream() for _ in range(32)]
+    for sid in sids:  # close everything, never having fed audio
+        sched.close_stream(sid)
+    assert sched.capacity == 2
+    # and the pool regrows cleanly from the floor
+    clip = _clip(spec, 800)
+    sid = sched.add_stream()
+    sched.push_audio(sid, clip)
+    sched.run_until_starved()
+    np.testing.assert_array_equal(
+        sched.close_stream(sid).logits, _offline(prog, clip)
+    )
+    assert sched.capacity == 2
+
+
+def test_empty_pool_shrinks_to_min_capacity_sharded(smoke):
+    spec, weights, thresholds, _ = smoke
+    mesh = _mesh(2)
+    sched = StreamScheduler(spec, weights, thresholds, capacity=16,
+                            initial_capacity=16, min_capacity=2, mesh=mesh)
+    sids = [sched.add_stream() for _ in range(16)]
+    for sid in sids:
+        sched.close_stream(sid)
+    assert sched.capacity == 2
+
+
+# ---------------------------------------------------------------------------
+# Skewed churn: the rebalanced pool shrinks where the pinned pool cannot
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [2, 8])
+def test_skewed_churn_rebalance_lifts_shrink_floor(smoke, n_shards):
+    """Leaves skewed onto one shard: the rebalanced pool's steady
+    capacity reaches <= 2 * _next_pow2(ceil(active/S)) * S, the
+    no-rebalance pool stays pinned at the fullest shard's floor (at
+    S >= 4, where skew can exceed the elastic quarter-occupancy floor),
+    and logits stay bit-exact vs a single-device scheduler and the
+    offline executor through every migration."""
+    spec, weights, thresholds, prog = smoke
+    mesh = _mesh(n_shards)
+    total = 16 if n_shards == 2 else 4 * n_shards
+    n_keep = 2 if n_shards == 2 else 4
+    clips = {j: _clip(spec, 500 + j) for j in range(total)}
+
+    reb = StreamScheduler(spec, weights, thresholds, capacity=total,
+                          initial_capacity=total, min_capacity=n_shards,
+                          mesh=mesh)  # rebalance_threshold=1 (default)
+    pin = StreamScheduler(spec, weights, thresholds, capacity=total,
+                          initial_capacity=total, min_capacity=n_shards,
+                          mesh=mesh, rebalance_threshold=None)  # PR 3 mode
+    ref = StreamScheduler(spec, weights, thresholds, capacity=total,
+                          initial_capacity=total, min_capacity=total)
+    scheds = (reb, pin, ref)
+
+    plan = reb.plan
+    cut = plan.prime_samples + 2 * plan.hop_samples
+    prog_cut = compiler.compile_model(
+        kws.build_kws_spec(in_len=cut, width=16), weights, thresholds
+    )
+    for sched in scheds:
+        for j in range(total):
+            assert sched.add_stream() == j
+            sched.push_audio(j, clips[j][:cut])
+    outs = [s.run_until_starved() for s in scheds]
+    _assert_outs_equal(outs[0], outs[2], "warm reb-vs-ref")
+    _assert_outs_equal(outs[1], outs[2], "warm pin-vs-ref")
+
+    # leave skewed: keep only n_keep tenants, all on shard 0 (placements
+    # are identical across schedulers at this point — no migration yet)
+    shard0 = [j for j in range(total)
+              if reb._streams[j].slot < reb.shard_capacity]
+    assert [pin._streams[j].slot for j in shard0] == \
+        [reb._streams[j].slot for j in shard0]
+    survivors = shard0[:n_keep]
+    for sched in scheds:
+        for j in range(total):
+            if j in survivors:
+                continue
+            res = sched.close_stream(j)
+            np.testing.assert_array_equal(
+                res.logits, _offline(prog_cut, clips[j][:cut])
+            )
+
+    # survivors keep streaming: the next hop boundary migrates + shrinks
+    for sched in scheds:
+        for j in survivors:
+            sched.push_audio(j, clips[j][cut:])
+    outs = [s.run_until_starved() for s in scheds]
+    _assert_outs_equal(outs[0], outs[2], "post-migration reb-vs-ref")
+    _assert_outs_equal(outs[1], outs[2], "post-migration pin-vs-ref")
+
+    active = len(survivors)
+    balanced_floor = n_shards * _next_pow2(-(-active // n_shards))
+    assert reb.capacity <= 2 * balanced_floor  # the acceptance bound
+    assert reb.metrics.rebalances >= 1
+    assert reb.metrics.rows_migrated >= 1
+    occ = reb._placement.occupancy()
+    assert max(occ) - min(occ) <= 1  # leveled
+    assert pin.metrics.rebalances == 0
+    assert pin.capacity >= reb.capacity
+    if n_shards >= 4:
+        # skew beyond the quarter-occupancy elastic floor: only the
+        # rebalanced pool escapes the fullest shard's pin
+        assert pin.capacity == total
+        assert reb.capacity < pin.capacity
+
+    for j in survivors:
+        ra, rb, rc = (s.close_stream(j) for s in scheds)
+        np.testing.assert_array_equal(ra.logits, rc.logits)
+        np.testing.assert_array_equal(rb.logits, rc.logits)
+        np.testing.assert_array_equal(ra.logits, _offline(prog, clips[j]))
+
+
+@pytest.mark.parametrize("n_shards", [2, 8])
+def test_rebalance_mid_stream_peek_and_detector_state(smoke, n_shards):
+    """A migration carries inbox, detector and stamp state with the
+    stream: peeks right after a migration equal the offline prefix."""
+    spec, weights, thresholds, _ = smoke
+    mesh = _mesh(n_shards)
+    total = 4 * n_shards
+    clips = {j: _clip(spec, 600 + j) for j in range(total)}
+    sched = StreamScheduler(spec, weights, thresholds, capacity=total,
+                            initial_capacity=total, min_capacity=n_shards,
+                            mesh=mesh)
+    for j in range(total):
+        sched.add_stream()
+        sched.push_audio(j, clips[j])
+    sched.run_until_starved()
+    keep = [j for j in range(total)
+            if sched._streams[j].slot < sched.shard_capacity][:2]
+    for j in range(total):
+        if j not in keep:
+            sched.close_stream(j)
+    assert len({sched._streams[j].slot // sched.shard_capacity
+                for j in keep}) == 1  # both tenants crowd one shard
+    sched.run_until_starved()  # hop boundary: migration runs (no audio)
+    assert sched.metrics.rebalances >= 1
+    assert len({sched._streams[j].slot // sched.shard_capacity
+                for j in keep}) == 2  # the migration spread them apart
+    prog = smoke[3]
+    for j in keep:
+        # peek right after the migration covers ALL audio pushed so far
+        # (inbox leftovers via the exact fallback, drained state via the
+        # in-jit tail) — both must equal the offline full-clip run, so a
+        # migrated row with stale/shifted state cannot hide
+        np.testing.assert_array_equal(sched.peek(j), _offline(prog, clips[j]))
+        np.testing.assert_array_equal(
+            sched.close_stream(j).logits, _offline(prog, clips[j])
+        )
