@@ -64,7 +64,9 @@ def roofline_lines(cells: list[dict]) -> list[str]:
 
 def _num(row: dict, key: str, fmt: str) -> str:
     v = row.get(key)
-    return format(v, fmt) if isinstance(v, (int, float)) else "—"
+    # v == v filters NaN (an empty latency window reports NaN rather
+    # than a fabricated 0.0) — both it and a missing field render as "—"
+    return format(v, fmt) if isinstance(v, (int, float)) and v == v else "—"
 
 
 def stream_lines(bench: dict) -> list[str]:
@@ -75,17 +77,19 @@ def stream_lines(bench: dict) -> list[str]:
         "",
         "## Streaming (BENCH_stream.json)",
         "",
-        "| config | streams | shards | hop p50 ms | host-pack ms | "
-        "device ms | stream-hops/s | uJ/inference |",
-        "|---|---|---|---|---|---|---|---|",
+        "| config | streams | shards | hop p50 ms | hop p99 ms | "
+        "host-pack ms | device ms | stream-hops/s | uJ/inference |",
+        "|---|---|---|---|---|---|---|---|---|",
     ]
 
     def row(label: str, streams, shards, r: dict) -> str:
-        # _num is falsy-safe: a measured 0.0 renders as a number, only a
-        # missing field (pre-arena artifacts) renders as "—"
+        # _num is falsy- and NaN-safe: a measured 0.0 renders as a
+        # number; a missing field (pre-arena artifacts) or a NaN (no
+        # steps in the window) renders as "—"
         return (
             f"| {label} | {streams} | {shards} "
             f"| {_num(r, 'hop_ms_p50', '.3f')} "
+            f"| {_num(r, 'hop_ms_p99', '.3f')} "
             f"| {_num(r, 'host_pack_ms_p50', '.3f')} "
             f"| {_num(r, 'device_ms_p50', '.3f')} "
             f"| {_num(r, 'stream_hops_per_sec', '.0f')} "
@@ -110,6 +114,39 @@ def stream_lines(bench: dict) -> list[str]:
             f"\nbest multi-shard vs best single-device at "
             f"{total} streams: {ratio:.2f}x aggregate stream-hops/s"
             + (" (prior run)" if stale else "")
+        )
+    phases = bench.get("phases") or {}
+    if phases:
+        parts = [
+            f"{p} {_num(d, 'ms_p50', '.3f')}/{_num(d, 'ms_p99', '.3f')} ms "
+            f"({d.get('share_of_wall', 0.0) * 100:.0f}%)"
+            for p, d in phases.items()
+        ]
+        out.append(
+            "\nper-phase hop breakdown at B="
+            f"{bench.get('n_streams', '—')} (p50/p99, share of hop wall): "
+            + ", ".join(parts)
+        )
+    tr = bench.get("trace") or {}
+    if isinstance(tr.get("span_coverage"), (int, float)):
+        out.append(
+            f"\ntrace: {tr.get('events', 0)} spans -> {tr.get('artifact')} "
+            f"({tr['span_coverage'] * 100:.1f}% of hop wall covered); "
+            "open at ui.perfetto.dev"
+        )
+    ev = bench.get("event_log") or {}
+    if ev.get("counts"):
+        out.append(
+            f"\nevent log -> {ev.get('artifact')}: "
+            + ", ".join(f"{k}={v}" for k, v in sorted(ev["counts"].items()))
+        )
+    oo = bench.get("obs_overhead") or {}
+    if isinstance(oo.get("overhead_frac"), (int, float)):
+        out.append(
+            f"\nobservability overhead: "
+            f"{oo['instrument_ms_per_hop'] * 1e3:.1f} us/hop = "
+            f"{oo['overhead_frac'] * 100:.2f}% of hop p50 "
+            f"({'within' if oo.get('within_2pct') else 'OVER'} the 2% cap)"
         )
     hp = bench.get("host_pack") or {}
     if isinstance(hp.get("reduction"), (int, float)):

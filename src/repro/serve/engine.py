@@ -13,6 +13,7 @@ per-slot fill is a dynamic-update into the batch axis.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +21,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import api
+from repro.obs import Observability
 from repro.serve import sampler
 from repro.utils.logging import get_logger
 
@@ -38,13 +40,21 @@ class Request:
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params, batch_slots: int = 4,
-                 max_seq: int = 128, seed: int = 0):
+                 max_seq: int = 128, seed: int = 0,
+                 obs: Observability | None = None):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
         self.max_seq = max_seq
         self.key = jax.random.PRNGKey(seed)
 
+        # same observability plane as the streaming runtime: prefill and
+        # decode-tick latencies land in bounded histograms, spans cover
+        # both jitted paths (fenced — decode is async-dispatched), and
+        # request lifecycle goes to the structured event log
+        self.obs = obs if obs is not None else Observability.create()
+        self._prefill_hist = self.obs.registry.histogram("serve.prefill_s")
+        self._decode_hist = self.obs.registry.histogram("serve.decode_tick_s")
         self._decode = jax.jit(api.decode_fn(cfg))
         self._prefill_one = jax.jit(self._make_prefill())
         self.state = api.init_decode_state(cfg, batch_slots, max_seq)
@@ -80,20 +90,32 @@ class Engine:
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+        self.obs.events.emit("lm_submit", rid=req.rid,
+                             prompt_tokens=len(req.prompt),
+                             max_new=req.max_new_tokens)
 
     def _fill_slots(self) -> None:
         for slot in range(self.slots):
             if self.slot_req[slot] is None and self.queue:
                 req = self.queue.pop(0)
-                st1 = api.init_decode_state(self.cfg, 1, self.max_seq)
-                st1, last_logits = self._prefill_one(
-                    self.params, st1, jnp.asarray(req.prompt), len(req.prompt)
-                )
-                tok = int(sampler.greedy(last_logits[None], self.cfg.vocab)[0])
+                with self.obs.trace.span("prefill", rid=req.rid,
+                                         tokens=len(req.prompt)):
+                    t0 = time.perf_counter()
+                    st1 = api.init_decode_state(self.cfg, 1, self.max_seq)
+                    st1, last_logits = self._prefill_one(
+                        self.params, st1, jnp.asarray(req.prompt),
+                        len(req.prompt)
+                    )
+                    tok = int(
+                        sampler.greedy(last_logits[None], self.cfg.vocab)[0]
+                    )
+                    self._prefill_hist.record(time.perf_counter() - t0)
                 req.out_tokens.append(tok)
                 self._install(slot, st1)
                 self.slot_req[slot] = req
                 self.slot_remaining[slot] = req.max_new_tokens - 1
+                self.obs.events.emit("lm_slot_fill", slot=slot, rid=req.rid,
+                                     prompt_tokens=len(req.prompt))
                 log.info("slot %d <- request %d (prompt %d toks)",
                          slot, req.rid, len(req.prompt))
 
@@ -127,9 +149,14 @@ class Engine:
             ],
             jnp.int32,
         )[:, None]
-        logits, self.state = self._decode(self.params, self.state, last)
+        with self.obs.trace.span("decode", active=len(active)):
+            t0 = time.perf_counter()
+            logits, self.state = self._decode(self.params, self.state, last)
+            # fence: decode is async-dispatched — without it the recorded
+            # tick would measure enqueue latency, not the decode step
+            toks = np.asarray(sampler.greedy(logits[:, -1], self.cfg.vocab))
+            self._decode_hist.record(time.perf_counter() - t0)
         self.key, sk = jax.random.split(self.key)
-        toks = sampler.greedy(logits[:, -1], self.cfg.vocab)
         finished = []
         for slot in active:
             req = self.slot_req[slot]
@@ -139,6 +166,8 @@ class Engine:
                 req.done = True
                 finished.append(req)
                 self.slot_req[slot] = None
+                self.obs.events.emit("lm_finish", rid=req.rid, slot=slot,
+                                     tokens=len(req.out_tokens))
         return finished
 
     def run_until_drained(self, max_ticks: int = 1000) -> list[Request]:

@@ -18,11 +18,27 @@ the split between *host packing* (building the batched audio/mask from
 the shared ``RingArena`` — the part the vectorized ingest plane exists to
 shrink) and everything else (device step + transfers + batched detector),
 so a regression in either half is visible on its own
-(``host_pack_ms_p50`` / ``device_ms_p50`` in ``summary``).
+(``host_pack_ms_p50`` / ``device_ms_p50`` in ``summary``), plus the
+finer per-phase split (pack / dispatch / device / detector) the
+scheduler's fenced trace spans measure.
+
+**Bounded over unbounded uptime.**  Nothing here grows with step count
+or stream count: latencies land in fixed-size ring ``Reservoir``\\ s
+(exact percentiles while the run is shorter than the window — every
+test and bench — bit-identical to the old grow-forever lists) *and*
+log-linear ``Histogram``\\ s (O(1)-memory estimates that cover every
+sample ever recorded; ``summary()`` switches to them once a reservoir
+wraps and says so via ``latency_estimated``).  Aggregates (frames,
+stream-hops, per-shard hop totals, wall time) are running scalars, and
+per-stream counter objects for closed streams retire into a bounded
+ring.  ``footprint_bytes()`` exposes the retained size so the constant-
+memory property is testable.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import math
 import time
 
 import numpy as np
@@ -31,6 +47,7 @@ from repro.core import macro
 from repro.core.compiler import _pad16
 from repro.core.energy import EnergyLedger, EnergyParams
 from repro.core.executor import READOUT_CYCLES
+from repro.obs.registry import Histogram, MetricsRegistry, Reservoir
 from repro.stream.state import StreamPlan
 
 # compiler.chunk_layer splits columns into one-SA-group chunks
@@ -106,16 +123,25 @@ def plan_tail_ledger(plan: StreamPlan,
     return led
 
 
+_LEDGER_FIELDS: dict[type, tuple[str, ...]] = {}
+
+
 def _charge_scaled(dst: EnergyLedger, src: EnergyLedger, n: int) -> None:
     """Accumulate ``n`` copies of ``src``'s charges into ``dst``.
 
-    Field-generic so a counter added to EnergyLedger can never be
-    silently dropped from the streaming accumulation.
+    Field-generic — iterating ``dst``'s *runtime* dataclass fields
+    (cached per runtime type; this runs twice per hop), not the static
+    EnergyLedger class — so a counter added to EnergyLedger (or a
+    subclass) can never be silently dropped from the streaming
+    accumulation (tests/test_obs.py pins this with a grown ledger).
     """
-    for f in dataclasses.fields(EnergyLedger):
-        if f.name == "params":
-            continue
-        setattr(dst, f.name, getattr(dst, f.name) + getattr(src, f.name) * n)
+    names = _LEDGER_FIELDS.get(type(dst))
+    if names is None:
+        names = tuple(f.name for f in dataclasses.fields(dst)
+                      if f.name != "params")
+        _LEDGER_FIELDS[type(dst)] = names
+    for name in names:
+        setattr(dst, name, getattr(dst, name) + getattr(src, name) * n)
 
 
 @dataclasses.dataclass
@@ -138,27 +164,71 @@ class StreamCounters:
     closed_at: float | None = None
 
 
+# the fenced per-phase split of one hop (scheduler.step_batch's span
+# stamps): host pack, dispatch (staging + jitted call returning its
+# futures), device (block_until_ready fence + result transfers), and the
+# batched detector + bookkeeping
+PHASES = ("pack", "dispatch", "device", "detector")
+
+
 class StreamMetrics:
     """Aggregates per-stream counters + per-step wall latencies.
 
     Under a mesh (``n_shards > 1``) each step also records how many ready
     streams each shard advanced, so ``shard_summary`` can report per-shard
     occupancy/throughput next to the fleet aggregate.
+
+    Every retained structure is bounded (see module docstring):
+    ``reservoir`` raw samples per latency series, ``max_retained`` closed
+    per-stream counter objects / capacity events.  Histograms registered
+    in ``registry`` (a shared ``obs.MetricsRegistry``, or a private one)
+    cover *all* samples in O(1) memory, so quantiles never go blind —
+    they just degrade from exact to bounded-error once a window wraps.
     """
 
     def __init__(self, plan: StreamPlan, sample_rate: int = 16000,
-                 n_shards: int = 1) -> None:
+                 n_shards: int = 1, registry: MetricsRegistry | None = None,
+                 reservoir: int = 4096, max_retained: int = 1024) -> None:
         self.plan = plan
         self.sample_rate = sample_rate
         self.n_shards = n_shards
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.max_retained = max_retained
         self.streams: dict[int, StreamCounters] = {}
-        self.retired: list[StreamCounters] = []  # closed tenants of reused sids
-        self.step_wall_s: list[float] = []
-        self.step_pack_s: list[float] = []  # host-side packing share of wall
-        self.step_streams: list[int] = []
-        self.step_shard_streams: list[list[int]] = []  # per step, per shard
+        # closed tenants of reused sids (bounded ring + exact total)
+        self.retired: collections.deque[StreamCounters] = collections.deque(
+            maxlen=max_retained
+        )
+        self.retired_total = 0
+        # closed streams linger in ``streams`` for post-close inspection,
+        # then the oldest are evicted so always-on churn can't leak
+        self._closed_order: collections.deque = collections.deque()
+        self.streams_total = 0   # every sid ever joined (exact)
+        self.closed_total = 0
+        self.detections_total = 0
+        # latency series: exact ring reservoirs + all-sample histograms
+        self._wall_res = Reservoir(reservoir)
+        self._pack_res = Reservoir(reservoir)
+        self._dev_res = Reservoir(reservoir)   # wall - pack (legacy split)
+        self._wall_hist = self._hist("stream.step_wall_s")
+        self._pack_hist = self._hist("stream.step_pack_s")
+        self._dev_hist = self._hist("stream.step_device_s")
+        # the fenced per-phase split (pack shares the series above)
+        self._phase_res = {p: Reservoir(reservoir) for p in PHASES[1:]}
+        self._phase_hist = {p: self._hist(f"stream.phase_{p}_s")
+                            for p in PHASES[1:]}
+        # per-phase running totals (plain float adds on the hot path)
+        self._phase_total = dict.fromkeys(PHASES, 0.0)
+        self.steps = 0
+        self.wall_total_s = 0.0
+        self.stream_hops_total = 0
+        self._shard_hops = np.zeros(n_shards, np.int64)
         self._frames_emitted = 0  # fleet total, accumulated per step
-        self.capacity_events: list[tuple[float, int]] = []  # (t, new_cap)
+        # (t, new_cap) ring + exact resize count
+        self.capacity_events: collections.deque = collections.deque(
+            maxlen=max_retained
+        )
+        self.resize_count = 0
         # cross-shard migrations (scheduler._maybe_rebalance)
         self.rebalances = 0
         self.rows_migrated = 0
@@ -175,32 +245,71 @@ class StreamMetrics:
         self.finalizations = 0
         self._t0 = time.perf_counter()
 
+    def _hist(self, name: str) -> Histogram:
+        return self.registry.histogram(name)
+
+    @staticmethod
+    def _rec(res: Reservoir, hist: Histogram, v: float) -> None:
+        """One latency sample into its reservoir + all-sample histogram.
+
+        The histogram is *lazily backfilled*: while the reservoir still
+        holds every sample (the exact regime) the histogram isn't
+        touched; the moment the ring is about to wrap, the retained
+        window bulk-folds in (``record_many``) and per-sample recording
+        takes over — so the histogram still covers every sample ever,
+        but the common pre-wrap hot path pays one ring write per series.
+        """
+        if res.count == res.capacity:
+            hist.record_many(res.values())
+        res.record(v)
+        if res.count > res.capacity:
+            hist.record(v)
+
     # -- recording -----------------------------------------------------------
 
     def on_join(self, sid: int) -> None:
         old = self.streams.get(sid)
         if old is not None:  # sid reuse: keep the first tenant's totals
             self.retired.append(old)
+            self.retired_total += 1
         self.streams[sid] = StreamCounters(sid, time.perf_counter() - self._t0)
+        self.streams_total += 1
 
     def on_step(self, n_ready: int, frames_each: int, wall_s: float,
                 host_pack_s: float = 0.0,
                 shard_counts: list[int] | None = None,
-                finalized: bool = True) -> None:
+                finalized: bool = True,
+                dispatch_s: float = 0.0, device_s: float = 0.0,
+                detector_s: float = 0.0) -> None:
         """Record one batched hop: ``n_ready`` streams advanced in
         ``wall_s`` seconds of which ``host_pack_s`` was host-side batch
-        packing.  Aggregate-only — the hot path never walks per-stream
-        counter objects (that was the pre-arena serial floor)."""
+        packing; ``dispatch_s``/``device_s``/``detector_s`` are the
+        fenced phase durations from the scheduler's trace spans (device
+        time is real execution — the span boundary blocks until ready).
+        Aggregate-only — the hot path never walks per-stream counter
+        objects (that was the pre-arena serial floor)."""
         if shard_counts is None:
             # only unambiguous without a mesh; sharded callers must say
             # which shard advanced what or shard_summary would lie
             assert self.n_shards == 1, "shard_counts required when sharded"
             shard_counts = [n_ready]
         assert len(shard_counts) == self.n_shards, (shard_counts, self.n_shards)
-        self.step_wall_s.append(wall_s)
-        self.step_pack_s.append(host_pack_s)
-        self.step_streams.append(n_ready)
-        self.step_shard_streams.append(list(shard_counts))
+        self._rec(self._wall_res, self._wall_hist, wall_s)
+        self._rec(self._pack_res, self._pack_hist, host_pack_s)
+        self._rec(self._dev_res, self._dev_hist, wall_s - host_pack_s)
+        pt = self._phase_total
+        pt["pack"] += host_pack_s
+        for p, v in (("dispatch", dispatch_s), ("device", device_s),
+                     ("detector", detector_s)):
+            self._rec(self._phase_res[p], self._phase_hist[p], v)
+            pt[p] += v
+        self.steps += 1
+        self.wall_total_s += wall_s
+        self.stream_hops_total += n_ready
+        if self.n_shards == 1:
+            self._shard_hops[0] += shard_counts[0]
+        else:
+            self._shard_hops += np.asarray(shard_counts, np.int64)
         self._frames_emitted += n_ready * frames_each
         _charge_scaled(self.ledger, self._hop_ledger, n_ready)
         if finalized:
@@ -209,12 +318,14 @@ class StreamMetrics:
 
     def on_detection(self, sid: int) -> None:
         self.streams[sid].detections += 1
+        self.detections_total += 1
 
     def on_resize(self, new_capacity: int) -> None:
         """Elastic slot pool grew or shrank (scheduler._resize)."""
         self.capacity_events.append(
             (time.perf_counter() - self._t0, new_capacity)
         )
+        self.resize_count += 1
 
     def on_rebalance(self, n_moves: int) -> None:
         """One cross-shard migration leveled the pool with ``n_moves``
@@ -240,37 +351,88 @@ class StreamMetrics:
             c.samples_in = samples_in
         if chunks_in is not None:
             c.chunks_in = chunks_in
+        self.closed_total += 1
+        # closed counters stay inspectable for a while, then the oldest
+        # evict — an always-on runtime churns through millions of sids
+        self._closed_order.append((sid, c))
+        while len(self._closed_order) > self.max_retained:
+            old_sid, old_c = self._closed_order.popleft()
+            if self.streams.get(old_sid) is old_c:
+                del self.streams[old_sid]
+
+    def begin_window(self) -> None:
+        """Start a fresh measurement window: resets the latency series
+        and the step/throughput aggregates (NOT lifecycle counters or the
+        energy ledger, which stay cumulative).  Benches call this after
+        warm-up so ``summary()`` reports steady-state quantiles."""
+        for r in (self._wall_res, self._pack_res, self._dev_res,
+                  *self._phase_res.values()):
+            r.reset()
+        for h in (self._wall_hist, self._pack_hist, self._dev_hist,
+                  *self._phase_hist.values()):
+            h.reset()
+        self._phase_total = dict.fromkeys(PHASES, 0.0)
+        self.steps = 0
+        self.wall_total_s = 0.0
+        self.stream_hops_total = 0
+        self._shard_hops[:] = 0
+        self._frames_emitted = 0
 
     # -- reporting -----------------------------------------------------------
 
     def frames_total(self) -> int:
-        """Fleet total of final-conv frames emitted by batched hops."""
+        """Fleet total of final-conv frames emitted by batched hops
+        (since construction or the last ``begin_window``)."""
         return self._frames_emitted
 
+    @property
+    def latency_estimated(self) -> bool:
+        """True once any latency reservoir has wrapped: quantiles now
+        come from the log-linear histograms (bounded relative error,
+        covering every sample) instead of exact order statistics."""
+        return self._wall_res.saturated
+
+    def _q(self, res: Reservoir, hist: Histogram, q: float) -> float:
+        """Quantile in ms: exact from the reservoir while it still holds
+        every sample, histogram estimate (all samples, bounded error)
+        after it wraps; NaN when nothing was recorded."""
+        if res.count == 0:
+            return math.nan
+        if not res.saturated:
+            return float(np.percentile(res.values(), q) * 1e3)
+        return hist.quantile(q / 100.0) * 1e3
+
     def summary(self) -> dict[str, float]:
-        wall = np.asarray(self.step_wall_s) if self.step_wall_s else np.zeros(1)
-        pack = np.asarray(self.step_pack_s) if self.step_pack_s else np.zeros(1)
+        """Fleet aggregate.  Latency fields are NaN (not a fabricated
+        0.0) when no step has been recorded; ``latency_estimated`` flips
+        to 1.0 once quantiles switch from exact to histogram-estimated.
+        """
         frames = self.frames_total()
-        elapsed = sum(self.step_wall_s) or 1e-12
+        elapsed = self.wall_total_s or 1e-12
         audio_s = frames * self.plan.samples_per_frame / self.sample_rate
         return {
-            "streams": float(len(self.streams) + len(self.retired)),
-            "steps": float(len(self.step_wall_s)),
+            "streams": float(self.streams_total),
+            "steps": float(self.steps),
             "frames_total": float(frames),
             "frames_per_sec": frames / elapsed,
-            "stream_hops_per_sec": sum(self.step_streams) / elapsed,
+            "stream_hops_per_sec": self.stream_hops_total / elapsed,
             "audio_sec_per_wall_sec": audio_s / elapsed,  # real-time factor
-            "step_ms_p50": float(np.percentile(wall, 50) * 1e3),
-            "step_ms_p95": float(np.percentile(wall, 95) * 1e3),
+            "step_ms_p50": self._q(self._wall_res, self._wall_hist, 50),
+            "step_ms_p95": self._q(self._wall_res, self._wall_hist, 95),
+            "step_ms_p99": self._q(self._wall_res, self._wall_hist, 99),
+            "step_ms_p999": self._q(self._wall_res, self._wall_hist, 99.9),
             # the hop's host/device split: pack = building the batched
             # audio+mask from the arena; device = step + transfers +
             # batched detector.  Regressions in either half show alone.
-            "host_pack_ms_p50": float(np.percentile(pack, 50) * 1e3),
-            "host_pack_ms_p95": float(np.percentile(pack, 95) * 1e3),
-            "device_ms_p50": float(np.percentile(wall - pack, 50) * 1e3),
-            "mean_batch_occupancy": float(np.mean(self.step_streams))
-            if self.step_streams else 0.0,
-            "resizes": float(len(self.capacity_events)),
+            "host_pack_ms_p50": self._q(self._pack_res, self._pack_hist, 50),
+            "host_pack_ms_p95": self._q(self._pack_res, self._pack_hist, 95),
+            "device_ms_p50": self._q(self._dev_res, self._dev_hist, 50),
+            "device_ms_p95": self._q(self._dev_res, self._dev_hist, 95),
+            "device_ms_p99": self._q(self._dev_res, self._dev_hist, 99),
+            "latency_estimated": float(self.latency_estimated),
+            "mean_batch_occupancy": self.stream_hops_total / self.steps
+            if self.steps else 0.0,
+            "resizes": float(self.resize_count),
             "capacity_last": float(self.capacity_events[-1][1])
             if self.capacity_events else 0.0,
             "n_shards": float(self.n_shards),
@@ -280,19 +442,42 @@ class StreamMetrics:
             "chunks_pushed": float(self.chunks_pushed),
         }
 
+    def phase_summary(self) -> dict[str, dict[str, float]]:
+        """Per-phase hop breakdown (pack / dispatch / device / detector):
+        quantiles in ms plus each phase's share of total hop wall time.
+        The fenced spans tile the hop, so shares sum to ~1 when the
+        scheduler recorded all phases (0 for phases never recorded)."""
+        series: dict[str, tuple[Reservoir, Histogram]] = {
+            "pack": (self._pack_res, self._pack_hist)
+        }
+        series.update({p: (self._phase_res[p], self._phase_hist[p])
+                       for p in PHASES[1:]})
+        wall_total = self.wall_total_s
+        out: dict[str, dict[str, float]] = {}
+        for name, (res, hist) in series.items():
+            total = self._phase_total[name]
+            out[name] = {
+                "ms_p50": self._q(res, hist, 50),
+                "ms_p95": self._q(res, hist, 95),
+                "ms_p99": self._q(res, hist, 99),
+                "ms_p999": self._q(res, hist, 99.9),
+                "total_s": total,
+                "share_of_wall": total / wall_total if wall_total else 0.0,
+            }
+        return out
+
     def shard_summary(self) -> dict[str, object]:
         """Per-shard occupancy/throughput + the fleet aggregate.
 
         ``per_shard[s]`` reports how many stream-hops shard ``s`` advanced
         and its mean per-step occupancy; ``imbalance`` is the max/mean
-        stream-hop ratio (1.0 = perfectly balanced placement).
+        stream-hop ratio (1.0 = perfectly balanced placement — a dead
+        shard with zero hops inflates it, since the mean keeps counting
+        that shard).
         """
         S = self.n_shards
-        hops = np.zeros(S, np.int64)
-        for counts in self.step_shard_streams:
-            for sh, n in enumerate(counts[:S]):
-                hops[sh] += n
-        steps = max(1, len(self.step_shard_streams))
+        hops = self._shard_hops
+        steps = max(1, self.steps)
         mean_hops = float(hops.mean()) if S else 0.0
         return {
             "n_shards": S,
@@ -307,6 +492,21 @@ class StreamMetrics:
             "fleet_stream_hops": int(hops.sum()),
             "imbalance": float(hops.max() / mean_hops) if hops.sum() else 1.0,
         }
+
+    def footprint_bytes(self) -> int:
+        """Retained-memory proxy: array bytes of every bounded instrument
+        plus an entry-count charge for the dict/deque containers.  The
+        constant-memory-over-10k-steps test pins this value flat."""
+        n = sum(r.nbytes for r in (self._wall_res, self._pack_res,
+                                   self._dev_res,
+                                   *self._phase_res.values()))
+        n += sum(h.nbytes for h in (self._wall_hist, self._pack_hist,
+                                    self._dev_hist,
+                                    *self._phase_hist.values()))
+        n += self._shard_hops.nbytes
+        n += 64 * (len(self.streams) + len(self.retired)
+                   + len(self.capacity_events) + len(self._closed_order))
+        return n
 
     def energy_summary(self, params: EnergyParams | None = None) -> dict[str, float]:
         """Measured silicon-equivalent cost of the work done so far.

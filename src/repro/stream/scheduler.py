@@ -79,6 +79,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.cnn_spec import CNN1DSpec
 from repro.kernels import ops
 from repro.launch.mesh import dp_axes, dp_size
+from repro.obs import Observability
 from repro.stream.detector import (
     BatchedDetector,
     Detection,
@@ -407,6 +408,7 @@ class StreamScheduler:
         mesh=None,
         inbox_samples: int | None = None,
         rebalance_threshold: int | None = 1,
+        obs: Observability | None = None,
     ) -> None:
         assert backend in ("jnp", "pallas"), backend
         self.plan = plan_stream(spec, hop_frames=hop_frames)
@@ -426,7 +428,13 @@ class StreamScheduler:
         self.backend = backend
         self.detector_cfg = detector_cfg or DetectorConfig()
         self.emit_logits = emit_logits
-        self.metrics = StreamMetrics(self.plan, sample_rate, n_shards=S)
+        # the observability plane: bounded metrics registry + hop trace
+        # spans + structured lifecycle events (always on, always O(1)
+        # memory; pass obs= to share one plane across runtimes or to
+        # write an event JSONL / enable the jax.profiler bridge)
+        self.obs = obs if obs is not None else Observability.create()
+        self.metrics = StreamMetrics(self.plan, sample_rate, n_shards=S,
+                                     registry=self.obs.registry)
         self._model = _BatchedModel(
             self.plan, self.weights, thresholds, backend, interpret, mesh
         )
@@ -520,6 +528,11 @@ class StreamScheduler:
         old = self._capacity
         if new_cap == old:
             return
+        with self.obs.trace.span("resize", old=old, new=new_cap):
+            self._resize_inner(new_cap)
+
+    def _resize_inner(self, new_cap: int) -> None:
+        old = self._capacity
         S = self.n_shards
         old_sc, new_sc = old // S, new_cap // S
         trail = lambda a: ((0, 0),) * (a.ndim - 1)  # noqa: E731
@@ -558,8 +571,8 @@ class StreamScheduler:
         self._emit_cache = None  # cached rows are indexed by old slots
         self._capacity = new_cap
         self.metrics.on_resize(new_cap)
-        log.info("slot pool resized %d -> %d (%d active on %d shard(s))",
-                 old, new_cap, len(self._streams), S)
+        self.obs.events.emit("resize", old=old, new=new_cap,
+                             active=len(self._streams), shards=S)
 
     def _maybe_shrink(self) -> None:
         S = self.n_shards
@@ -598,6 +611,11 @@ class StreamScheduler:
         moves, remap = self._placement.rebalance()
         if not moves:
             return False
+        with self.obs.trace.span("rebalance", moves=len(moves)):
+            self._execute_rebalance(moves, remap, occ)
+        return True
+
+    def _execute_rebalance(self, moves, remap, occ) -> None:
         cap = self._capacity
         perm = np.arange(cap, dtype=np.int64)
         keep = np.zeros(cap, bool)
@@ -623,11 +641,11 @@ class StreamScheduler:
             s.frontend._slot = s.slot
         self._emit_cache = None  # cached rows are indexed by old slots
         self.metrics.on_rebalance(len(moves))
-        log.info(
-            "rebalanced %d slot(s) across %d shard(s): occupancy %s -> %s",
-            len(moves), self.n_shards, occ, self._placement.occupancy(),
+        self.obs.events.emit(
+            "rebalance", moves=len(moves), shards=self.n_shards,
+            occupancy_before=list(occ),
+            occupancy_after=list(self._placement.occupancy()),
         )
-        return True
 
     # -- stream lifecycle ----------------------------------------------------
 
@@ -658,6 +676,8 @@ class StreamScheduler:
         self._detector.reset_slot(slot)
         self._unprimed.add(sid)
         self.metrics.on_join(sid)
+        self.obs.events.emit("join", sid=sid, slot=slot,
+                             shard=slot // self._placement.shard_capacity)
         return sid
 
     def _require(self, sid: int) -> _Stream:
@@ -750,6 +770,7 @@ class StreamScheduler:
         ready = (self._arena.wr[slots] - self._arena.rd[slots]) >= prime
         if not ready.any():
             return
+        t0 = time.perf_counter()
         sids = [sid for sid, r in zip(sids, ready.tolist()) if r]
         slots = slots[ready]
         samples = self._arena.pop_batch(slots, prime)
@@ -779,6 +800,9 @@ class StreamScheduler:
             # host wrote the slot: earlier cached logits don't cover it;
             # the NEXT emit step (which includes this write) does
             s.stamp = self._emit_step + 1
+        self.obs.trace.add("prime_batch", t0, time.perf_counter() - t0,
+                           n=len(sids))
+        self.obs.events.emit("mass_join", n=len(sids))
 
     def _clear_slot(self, slot: int) -> None:
         for i in range(len(self.plan.convs)):
@@ -842,9 +866,9 @@ class StreamScheduler:
             ready_slots // self._placement.shard_capacity,
             minlength=self.n_shards,
         )
-        # pack bucket ends here: staging (jnp.asarray/device_put) and the
-        # step itself are charged to the device half of the hop
-        t_pack = time.perf_counter() - t0
+        # pack phase ends here; staging (jnp.asarray/device_put) and the
+        # jitted call itself are the dispatch phase
+        t_pack = time.perf_counter()
         args = (
             self._shard(jnp.asarray(audio)),
             self._shard(jnp.asarray(ready_mask)),
@@ -855,13 +879,24 @@ class StreamScheduler:
             tails, pendings, gap, logits, post = self._model.step(
                 *args, emit=True
             )
+        else:
+            tails, pendings, gap = self._model.step(*args, emit=False)
+            logits = post = None
+        # dispatch phase ends when the jitted call has returned its
+        # futures; the device phase is the explicit fence + transfers.
+        # Without the fence, JAX's async dispatch would let wall time
+        # measure *enqueue* rather than execution (egregiously so with
+        # emit_logits off, where nothing else forces a sync), and
+        # device_ms percentiles would be fiction.
+        t_dispatch = time.perf_counter()
+        jax.block_until_ready((tails, pendings, gap))
+        if self.emit_logits:
             logits_h = np.asarray(logits)  # one bulk transfer per hop
             post_h = np.asarray(post)
             self._emit_step += 1
             self._emit_cache = logits_h
             self._emit_cache_step = self._emit_step
-        else:
-            tails, pendings, gap = self._model.step(*args, emit=False)
+        t_device = time.perf_counter()
         self._tails = list(tails)
         self._pendings = list(pendings)
         self._gap = gap
@@ -883,17 +918,37 @@ class StreamScheduler:
                                 float(sc))
                 self._streams[det.stream_id].events.append(det)
                 self.metrics.on_detection(det.stream_id)
+                self.obs.events.emit("detection", sid=det.stream_id,
+                                     cls=det.cls, frame=det.frame,
+                                     score=det.score)
                 detections.append(det)
+        t_detector = time.perf_counter()
         self.metrics.on_step(
             ready_slots.size, self.plan.frames_per_hop,
-            time.perf_counter() - t0, host_pack_s=t_pack,
+            t_detector - t0, host_pack_s=t_pack - t0,
             shard_counts=shard_counts.tolist(), finalized=self.emit_logits,
+            dispatch_s=t_dispatch - t_pack, device_s=t_device - t_dispatch,
+            detector_s=t_detector - t_device,
         )
         # fold the arena's push-side counters into the metrics at the hop
         # boundary: two scalar reads, so neither the push path nor this
         # hot path ever walks per-sid counter objects
         self.metrics.on_push_fold(self._arena.total_samples_in,
                                   self._arena.total_chunks_in)
+        t_end = time.perf_counter()
+        # hop trace: consecutive stamps, so the phase spans tile the hop
+        # span exactly (the bench asserts >= 95% coverage).  One batched
+        # call, six deque appends — B-independent, far under the 2%
+        # overhead cap.
+        n_ready = int(ready_slots.size)
+        self.obs.trace.add_batch((
+            ("pack", t0, t_pack - t0, {"n": n_ready}),
+            ("dispatch", t_pack, t_dispatch - t_pack, {}),
+            ("device", t_dispatch, t_device - t_dispatch, {}),
+            ("detector", t_device, t_detector - t_device, {}),
+            ("push_fold", t_detector, t_end - t_detector, {}),
+            ("hop", t0, t_end - t0, {"n": n_ready}),
+        ))
         return HopBatch(sids=sids, frames=frames, logits=rows_logits,
                         posteriors=rows_post, detections=detections)
 
@@ -1009,6 +1064,8 @@ class StreamScheduler:
         self._frames_v[s.slot] = 0
         self.metrics.on_close(sid, frames_out=st.frames,
                               samples_in=samples_in, chunks_in=chunks_in)
+        self.obs.events.emit("close", sid=sid, frames=st.frames,
+                             samples=samples_in, events=len(s.events))
         # a leave can skew the shards; the migration itself waits for the
         # next hop boundary (migrate-on-idle), but the shrink runs now so
         # an emptying pool releases capacity without needing another hop

@@ -217,7 +217,8 @@ def test_report_stream_table_renders_sweep_and_sharded():
     from repro.launch import report
 
     bench = {
-        "sweep": {"8": {"hop_ms_p50": 1.5, "host_pack_ms_p50": 0.2,
+        "sweep": {"8": {"hop_ms_p50": 1.5, "hop_ms_p99": 3.8,
+                        "host_pack_ms_p50": 0.2,
                         "device_ms_p50": 1.3,
                         "stream_hops_per_sec": 4000.0,
                         "uj_per_inference": 0.0005}},
@@ -240,14 +241,18 @@ def test_report_stream_table_renders_sweep_and_sharded():
     }
     lines = report.stream_lines(bench)
     text = "\n".join(lines)
-    assert "| steady | 8 | 1 | 1.500 | 0.200 | 1.300 | 4000 | 0.0005 |" in text
-    assert ("| mesh-sharded | 1024 | 8 | 150.000 | 4.000 | 146.000 "
+    assert ("| steady | 8 | 1 | 1.500 | 3.800 | 0.200 | 1.300 "
+            "| 4000 | 0.0005 |") in text
+    assert ("| mesh-sharded | 1024 | 8 | 150.000 | — | 4.000 | 146.000 "
             "| 6000 | 0.0005 |") in text
     assert "1.20x aggregate stream-hops/s" in text
     assert "10.0x" in text  # host-pack before/after footer
     # rows missing the newer fields (older artifacts) degrade to em-dash;
-    # a measured 0.0 in any column must still render as a number
+    # a measured 0.0 in any column must still render as a number, and a
+    # NaN (empty latency window) must render as em-dash, never 0.0
     legacy = report.stream_lines(
-        {"sweep": {"8": {"hop_ms_p50": 1.5, "host_pack_ms_p50": 0.0}}}
+        {"sweep": {"8": {"hop_ms_p50": 1.5, "hop_ms_p99": float("nan"),
+                         "host_pack_ms_p50": 0.0}}}
     )
-    assert "| steady | 8 | 1 | 1.500 | 0.000 | — | — | — |" in "\n".join(legacy)
+    assert ("| steady | 8 | 1 | 1.500 | — | 0.000 | — | — | — |"
+            in "\n".join(legacy))
