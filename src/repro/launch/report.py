@@ -169,6 +169,16 @@ def stream_lines(bench: dict) -> list[str]:
             f"{sk['floor_capacity']:.0f})"
             + (" (prior run)" if sk.get("carried_from_prior_run") else "")
         )
+    ov = bench.get("overlap") or {}
+    if isinstance(ov.get("hidden_frac"), (int, float)):
+        out.append(
+            f"\nasync overlap at B={ov.get('batch', 0)} open-loop: "
+            f"{ov['hidden_frac']*100:.1f}% of pack+detector time hidden "
+            f"under device spans ({ov['hidden_ms']:.1f} ms; floor 90%: "
+            f"{'PASS' if ov.get('hidden_target_met') else 'FAIL'}), "
+            f"device-span utilization {ov['utilization']*100:.1f}%, "
+            f"{ov['speedup_vs_sync']:.2f}x vs sync throughput"
+        )
     return out
 
 

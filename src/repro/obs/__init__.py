@@ -45,7 +45,7 @@ from repro.obs.registry import (
     MetricsRegistry,
     Reservoir,
 )
-from repro.obs.trace import Tracer, coverage
+from repro.obs.trace import Tracer, coverage, overlap_stats
 
 
 @dataclasses.dataclass
@@ -84,4 +84,5 @@ __all__ = [
     "Reservoir",
     "Tracer",
     "coverage",
+    "overlap_stats",
 ]

@@ -170,19 +170,112 @@ class Tracer:
         return len(out)
 
 
+def _dur(e: dict) -> float:
+    return e["dur"] if "dur" in e else e["dur_s"]
+
+
+def _start(e: dict) -> float:
+    return e["ts"] if "dur" in e else e["t0"]
+
+
+def _intervals(events: list[dict], names) -> list[tuple[float, float]]:
+    """(start, end) of every span named in ``names``, in input units
+    (Chrome events: microseconds; ``Tracer.spans()`` dicts: seconds)."""
+    return [
+        (_start(e), _start(e) + _dur(e))
+        for e in events
+        if e["name"] in names and ("dur" in e or "dur_s" in e)
+    ]
+
+
+def _union(iv: list[tuple[float, float]]) -> list[tuple[float, float]]:
+    """Merge intervals into a disjoint sorted union."""
+    out: list[list[float]] = []
+    for a, b in sorted(iv):
+        if out and a <= out[-1][1]:
+            out[-1][1] = max(out[-1][1], b)
+        else:
+            out.append([a, b])
+    return [(a, b) for a, b in out]
+
+
+def _measure(iv: list[tuple[float, float]]) -> float:
+    return sum(b - a for a, b in iv)
+
+
+def _intersect(xs: list[tuple[float, float]],
+               ys: list[tuple[float, float]]) -> float:
+    """Total overlap between two disjoint sorted interval unions."""
+    tot, i, j = 0.0, 0, 0
+    while i < len(xs) and j < len(ys):
+        a = max(xs[i][0], ys[j][0])
+        b = min(xs[i][1], ys[j][1])
+        if b > a:
+            tot += b - a
+        if xs[i][1] <= ys[j][1]:
+            i += 1
+        else:
+            j += 1
+    return tot
+
+
 def coverage(events: list[dict], parent: str = "hop",
              phases: tuple[str, ...] = ("pack", "dispatch", "device",
-                                        "detector", "push_fold")) -> float:
-    """Fraction of ``parent`` span wall time tiled by phase spans.
+                                        "detector", "push_fold"),
+             mode: str = "tile") -> float:
+    """Fraction of ``parent`` span wall time covered by phase spans.
 
     Operates on exported Chrome events (or ``Tracer.spans()`` dicts with
-    ``dur_s``).  The acceptance floor for the bench trace artifact is
-    0.95 — the hop phases are stamped back-to-back, so anything lower
-    means a phase went missing from the instrumentation.
+    ``dur_s``).  ``mode="tile"`` (the synchronous invariant) ratios
+    summed durations: the hop phases are stamped back-to-back, so
+    anything under the 0.95 acceptance floor means a phase went missing
+    from the instrumentation — but under the async plane it double
+    counts, because hop N+1's pack/dispatch legitimately overlap hop N's
+    device span (the ratio can exceed 1.0).  ``mode="overlap"`` is the
+    overlap-aware invariant: the measure of the *union* of phase
+    intervals clipped to the union of parent intervals, over the parent
+    union's measure — overlap never double counts and a missing phase
+    still drops it below the floor.
     """
-    def dur(e):
-        return e["dur"] if "dur" in e else e["dur_s"]
+    if mode == "tile":
+        tot = sum(_dur(e) for e in events if e["name"] == parent)
+        cov = sum(_dur(e) for e in events if e["name"] in phases)
+        return cov / tot if tot else 0.0
+    assert mode == "overlap", mode
+    par = _union(_intervals(events, (parent,)))
+    phs = _union(_intervals(events, phases))
+    tot = _measure(par)
+    return _intersect(phs, par) / tot if tot else 0.0
 
-    tot = sum(dur(e) for e in events if e["name"] == parent)
-    cov = sum(dur(e) for e in events if e["name"] in phases)
-    return cov / tot if tot else 0.0
+
+def overlap_stats(events: list[dict], busy: tuple[str, ...] = ("device",),
+                  hidden_under: tuple[str, ...] = ("pack", "detector"),
+                  ) -> dict[str, float]:
+    """Union-interval account of how much host work hid under device
+    compute — the async plane's acceptance measure.
+
+    ``busy`` spans (device execution, including queue wait at retire)
+    merge into one busy union; every ``hidden_under`` span's overlap
+    with that union counts as hidden.  Returns totals in the input's
+    time unit (seconds for ``Tracer.spans()`` dicts, microseconds for
+    exported Chrome events) plus the unit-free ``hidden_frac`` and
+    ``utilization`` (busy fraction of the overall span extent).
+    """
+    busy_u = _union(_intervals(events, busy))
+    host_iv = _intervals(events, hidden_under)
+    host_u = _union(host_iv)
+    host_total = _measure(host_u)
+    hidden = _intersect(host_u, busy_u)
+    everything = _union(_intervals(
+        events, {e["name"] for e in events if "dur" in e or "dur_s" in e}
+    ))
+    extent = (everything[-1][1] - everything[0][0]) if everything else 0.0
+    busy_total = _measure(busy_u)
+    return {
+        "busy_total": busy_total,
+        "host_total": host_total,
+        "hidden": hidden,
+        "hidden_frac": hidden / host_total if host_total else 0.0,
+        "extent": extent,
+        "utilization": busy_total / extent if extent else 0.0,
+    }

@@ -61,6 +61,13 @@ class Engine:
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.slot_remaining = np.zeros(batch_slots, np.int32)
         self.queue: list[Request] = []
+        # async decode plane (step_async): the last sampled token per
+        # slot stays ON DEVICE so tick T+1 dispatches on tick T's
+        # unforced future, and each tick's host copy retires one tick
+        # late — the double-buffered dispatch idiom of the streaming
+        # scheduler's AsyncStreamScheduler applied to LM decode
+        self._last_tok = None           # (slots, 1) int32 device array
+        self._pending: list[tuple] = []  # (toks future, snapshot, t0)
 
     # -- prefill -------------------------------------------------------------
 
@@ -112,6 +119,10 @@ class Engine:
                     self._prefill_hist.record(time.perf_counter() - t0)
                 req.out_tokens.append(tok)
                 self._install(slot, st1)
+                if self._last_tok is not None:
+                    # keep the device-resident feedback token in sync so
+                    # the next async dispatch feeds the prefill's token
+                    self._last_tok = self._last_tok.at[slot, 0].set(tok)
                 self.slot_req[slot] = req
                 self.slot_remaining[slot] = req.max_new_tokens - 1
                 self.obs.events.emit("lm_slot_fill", slot=slot, rid=req.rid,
@@ -176,4 +187,89 @@ class Engine:
             done.extend(self.step())
             if not self.queue and all(r is None for r in self.slot_req):
                 break
+        return done
+
+    # -- async decode (double-buffered ticks) ---------------------------------
+
+    def step_async(self) -> list[Request]:
+        """One *pipelined* continuous-batching tick: dispatch tick T on
+        tick T-1's device-resident sampled tokens (``sampler.greedy`` is
+        pure jnp, so the token feedback loop never leaves the device),
+        and retire tick T-1's host copy while T executes.  Requests
+        finish one call later than with ``step`` but with bit-identical
+        tokens — slot retirement timing is static (``slot_remaining``
+        counts down at dispatch), so continuous batching still refills
+        slots at the same ticks.
+        """
+        self._fill_slots()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if active:
+            if self._last_tok is None:
+                self._last_tok = jnp.asarray(
+                    [
+                        (r.out_tokens[-1]
+                         if r is not None and r.out_tokens else 0)
+                        for r in self.slot_req
+                    ],
+                    jnp.int32,
+                )[:, None]
+            with self.obs.trace.span("decode_dispatch", active=len(active)):
+                t0 = time.perf_counter()
+                logits, self.state = self._decode(
+                    self.params, self.state, self._last_tok
+                )
+                toks = sampler.greedy(logits[:, -1], self.cfg.vocab)
+                self._last_tok = toks[:, None].astype(jnp.int32)
+            # bookkeeping happens at dispatch — retirement counts are
+            # static — but the token lands at retire, one tick later
+            snapshot = []
+            for slot in active:
+                req = self.slot_req[slot]
+                self.slot_remaining[slot] -= 1
+                finishing = self.slot_remaining[slot] <= 0
+                snapshot.append((slot, req, finishing))
+                if finishing:
+                    self.slot_req[slot] = None  # refill next tick
+            self._pending.append((toks, snapshot, t0))
+        finished: list[Request] = []
+        # depth-1 pipeline: retire once a newer tick is executing (or
+        # when idle, to drain)
+        while self._pending and (len(self._pending) > 1 or not active):
+            finished.extend(self._retire_tick())
+        return finished
+
+    def _retire_tick(self) -> list[Request]:
+        """Fence on the oldest in-flight tick and append its host-side
+        tokens; emits ``lm_finish`` for requests that completed there."""
+        toks, snapshot, t0 = self._pending.pop(0)
+        with self.obs.trace.span("decode_retire", n=len(snapshot)):
+            toks_h = np.asarray(toks)  # fence + one bulk transfer
+        self._decode_hist.record(time.perf_counter() - t0)
+        finished = []
+        for slot, req, finishing in snapshot:
+            req.out_tokens.append(int(toks_h[slot]))
+            if finishing:
+                req.done = True
+                finished.append(req)
+                self.obs.events.emit("lm_finish", rid=req.rid, slot=slot,
+                                     tokens=len(req.out_tokens))
+        return finished
+
+    def shutdown(self) -> list[Request]:
+        """Retire every in-flight decode tick (the engine half of the
+        async drain contract: nothing stays unfolded at teardown)."""
+        finished: list[Request] = []
+        while self._pending:
+            finished.extend(self._retire_tick())
+        return finished
+
+    def run_until_drained_async(self, max_ticks: int = 1000
+                                ) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_ticks):
+            done.extend(self.step_async())
+            if (not self.queue and not self._pending
+                    and all(r is None for r in self.slot_req)):
+                break
+        done.extend(self.shutdown())
         return done

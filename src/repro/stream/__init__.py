@@ -37,6 +37,10 @@ Modules:
              (per-stream oracle + slot-vectorized BatchedDetector)
   metrics    fleet counters split host-pack vs device per hop + measured
              EnergyLedger charges
+  async_plane  AsyncStreamScheduler: background ingest pump +
+             double-buffered hop dispatch with deferred FIFO folds —
+             bit-identical results, host work hidden under device
+             compute (epoch barriers around resize/rebalance/priming)
 
 Quickstart — join / feed / poll / close (``pydoc repro.stream``):
 
@@ -66,6 +70,7 @@ batched call and returns ``(sid, frame, logits, event)`` per advanced
 stream, where ``logits`` are the exact logits the offline executor would
 produce if that stream's utterance ended at this hop.
 """
+from repro.stream.async_plane import AsyncStreamScheduler, IngestPump
 from repro.stream.detector import (
     BatchedDetector,
     Detection,
@@ -86,12 +91,14 @@ from repro.stream.state import (
 )
 
 __all__ = [
+    "AsyncStreamScheduler",
     "AudioFrontend",
     "BatchedDetector",
     "Detection",
     "DetectorConfig",
     "FrameRing",
     "HopBatch",
+    "IngestPump",
     "PosteriorDetector",
     "RingArena",
     "SlotPlacement",

@@ -1,0 +1,332 @@
+"""Async execution plane: overlap ingest, pack, and device compute.
+
+The synchronous ``StreamScheduler.step_batch`` is strictly serial —
+push -> pack -> dispatch -> block -> fold — so ~1 ms of host pack and
+the detector fold sit on the critical path even though device compute
+dominates at scale.  This module is the runtime-level twin of the
+paper's flexible ping-pong feature SRAM (§II-C): stage the next tile
+while the current one computes.
+
+``AsyncStreamScheduler`` keeps the scheduler's math, state, and slot
+machinery byte-for-byte identical and changes only *when* the host-side
+stages run:
+
+  * **Ingest pump** — ``push_audio_batch`` enqueues to a daemon thread
+    that lands samples in the shared ``RingArena`` (one flat scatter,
+    PR 4) while the main thread packs and dispatches.  Arena mutations
+    are serialized by the scheduler's ingest lock and marked by the
+    arena's seqlock generation, so lock-free observers can detect (and
+    retry past) a torn read instead of consuming one.
+  * **Double-buffered hop dispatch** — pack hop N+1 and launch it on
+    hop N's *unforced* result futures (JAX async dispatch chains them
+    device-side).  With ``donate_buffers`` (default on) the slot-state
+    operands are donated to each step, so a restep aliases instead of
+    copying tails/pendings.  The fence + fold for hop N run at its
+    *retirement*, when hop N+1 is already executing — the pack,
+    detector, and metrics work hide under device compute.
+  * **Deferred FIFO fold** — retirements apply detector/metrics/event
+    results strictly in dispatch order, so every slot sees the exact
+    posterior sequence the synchronous schedule would produce:
+    detections, hysteresis state, frame counts, and the event log's
+    per-stream lifecycle are bit-identical (tests/test_async.py).
+  * **Epoch barriers** — elastic resize, cross-shard rebalance,
+    mass-join priming, ``peek``, and ``close_stream`` first drain every
+    in-flight hop, then remap/prime exactly as the synchronous path
+    would, then let the pipeline refill.  ``SlotPlacement``,
+    ``ops.remap_slot_rows``, and ``prime_batch`` are untouched; a remap
+    can never invalidate an in-flight hop's row indices.
+
+Pipeline depth is 1 by default (classic double buffering); deeper
+pipelines only add queue latency before the fold without increasing
+overlap, since one hop's compute already hides the next hop's host work.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+
+import jax
+import numpy as np
+
+from repro.stream.detector import Detection
+from repro.stream.scheduler import HopBatch, StreamResult, StreamScheduler
+
+__all__ = ["AsyncStreamScheduler", "IngestPump"]
+
+_SENTINEL = object()
+
+
+class IngestPump:
+    """Background ingest worker: queued ``(sids, chunks)`` batches land
+    in the arena from a daemon thread via ``apply_fn`` (which must take
+    the scheduler's ingest lock).  ``submit`` never blocks on the
+    device; ``flush`` waits until every queued push has landed and
+    re-raises the first error a push hit (unknown sid, arena overflow —
+    all raised *before* any sample lands, so a failed push never
+    half-applies)."""
+
+    def __init__(self, apply_fn) -> None:
+        self._apply = apply_fn
+        self._q: queue.Queue = queue.Queue()
+        self._err: BaseException | None = None
+        self.pushed_batches = 0
+        self._thread = threading.Thread(
+            target=self._run, name="ingest-pump", daemon=True
+        )
+        self._thread.start()
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is _SENTINEL:
+                    return
+                sids, chunks = item
+                try:
+                    self._apply(sids, chunks)
+                    self.pushed_batches += 1
+                except BaseException as e:  # surfaced at the next flush
+                    if self._err is None:
+                        self._err = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, sids, chunks) -> None:
+        self._q.put((list(sids), list(chunks)))
+
+    def flush(self) -> None:
+        """Barrier: every push submitted before this call has landed (or
+        failed).  Raises the first deferred push error, once."""
+        self._q.join()
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def close(self) -> None:
+        """Flush, then stop the worker thread (errors still surface)."""
+        self._q.join()
+        self._q.put(_SENTINEL)
+        self._q.join()
+        self._thread.join(timeout=10.0)
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unretired hop: the host-side inputs its
+    deferred fold needs, plus the device-result futures to fence on."""
+
+    ready_slots: np.ndarray
+    shard_counts: np.ndarray
+    logits: object | None     # device future ((capacity, classes))
+    post: object | None
+    t0: float
+    t_pack: float
+    t_dispatch: float
+    hidden_s: float           # pack+dispatch wall already under device
+
+
+class AsyncStreamScheduler(StreamScheduler):
+    """``StreamScheduler`` with the async execution plane switched on.
+
+    Drop-in: the constructor, ``push_audio*``, ``step``/``step_batch``,
+    ``drain``, ``peek``, ``close_stream`` signatures are unchanged and
+    the results are bit-identical to the synchronous scheduler for any
+    interleaving of calls.  The differences are operational:
+
+      * ``push_audio_batch`` returns before samples land (the pump
+        applies them; push errors surface at the next ``flush``/
+        ``drain``/``peek``/``close_stream``);
+      * ``step_batch`` may return ``None`` for a hop it *dispatched*
+        (still in flight) and returns hop N's results while hop N+1
+        executes — results arrive one call later than the sync path,
+        in the same order;
+      * ``drain()`` is the safe settling point: pump flushed, every
+        in-flight hop retired, every ghost end-of-stream flush
+        performed before it returns.
+
+    Use ``shutdown()`` (or rely on the daemon pump dying with the
+    process) when discarding the scheduler.
+    """
+
+    def __init__(self, *args, pipeline_depth: int = 1,
+                 use_pump: bool = True, **kwargs) -> None:
+        kwargs.setdefault("donate_buffers", True)
+        super().__init__(*args, **kwargs)
+        assert pipeline_depth >= 1, pipeline_depth
+        self._depth = pipeline_depth
+        self._inflight: list[_InFlight] = []
+        self._dispatched_total = 0
+        # serializes arena/placement/bookkeeping mutations between the
+        # main thread (pack/fold/lifecycle) and the pump (push scatter);
+        # the device queue itself needs no lock — only the main thread
+        # dispatches
+        self._lock = threading.RLock()
+        self._pump = IngestPump(self._apply_push) if use_pump else None
+
+    # -- ingest (pumped) -----------------------------------------------------
+
+    def _apply_push(self, sids, chunks) -> None:
+        with self._lock:
+            StreamScheduler.push_audio_batch(self, sids, chunks)
+
+    def push_audio_batch(self, sids, chunks) -> None:
+        if self._pump is None:
+            self._apply_push(sids, chunks)
+        else:
+            self._pump.submit(sids, chunks)
+
+    def push_audio(self, sid: int, audio: np.ndarray) -> None:
+        # route the scalar push through the pump too (one-element batch:
+        # same arena counters, same quantize math)
+        self.push_audio_batch([sid], [audio])
+
+    def flush_ingest(self) -> None:
+        """Wait until every submitted push has landed in the arena."""
+        if self._pump is not None:
+            self._pump.flush()
+
+    # -- pipeline core -------------------------------------------------------
+
+    @property
+    def in_flight(self) -> int:
+        """Dispatched hops whose fold has not retired yet."""
+        return len(self._inflight)
+
+    def _retire_one(self) -> HopBatch:
+        """Fence on the oldest in-flight hop and run its deferred fold.
+        The fence blocks OUTSIDE the ingest lock so pushes keep landing
+        while the device finishes; the fold itself (detector, metrics,
+        events, emit cache) runs under the lock, in FIFO dispatch order.
+        """
+        f = self._inflight.pop(0)
+        if f.logits is not None:
+            jax.block_until_ready(f.logits)
+            logits_h = np.asarray(f.logits)  # one bulk transfer per hop
+            post_h = np.asarray(f.post)
+        else:
+            # emit off: no per-hop output future survives donation, so
+            # fence the resident state (syncs every queued hop <= now)
+            jax.block_until_ready((self._tails, self._pendings, self._gap))
+            logits_h = post_h = None
+        t_device = self._clock()
+        with self._lock:
+            return self._fold_hop(
+                f.ready_slots, f.shard_counts, logits_h, post_h,
+                f.t0, f.t_pack, f.t_dispatch, t_device,
+                hidden_s=f.hidden_s, fold_hidden=bool(self._inflight),
+            )
+
+    def _epoch_barrier(self) -> None:
+        """Retire every in-flight hop.  Callers then hold the invariant
+        the synchronous scheduler has between steps: all folds applied,
+        no future references any slot row — so resize / rebalance /
+        priming / teardown remaps run exactly as they do synchronously."""
+        while self._inflight:
+            self._retire_one()
+
+    def _advance(self) -> tuple[bool, HopBatch | None]:
+        """One pipeline turn: dispatch a hop if any stream is ready, and
+        retire the oldest in-flight hop once the pipeline is past its
+        depth (or when starved).  Returns ``(dispatched, retired)``."""
+        with self._lock:
+            if self._skew_dirty or self._unprimed:
+                # epoch barrier: drain the pipeline, then rebalance /
+                # shrink / prime at the same logical point the sync
+                # scheduler would
+                self._epoch_barrier()
+                self._hop_barriers()
+            packed = self._pack_ready()
+            if packed is not None:
+                (ready_slots, ready_mask, audio, shard_counts,
+                 t0, t_pack) = packed
+                was_busy = bool(self._inflight)
+                logits, post = self._dispatch_hop(ready_mask, audio)
+                t_dispatch = self._clock()
+                self._inflight.append(_InFlight(
+                    ready_slots=ready_slots, shard_counts=shard_counts,
+                    logits=logits, post=post,
+                    t0=t0, t_pack=t_pack, t_dispatch=t_dispatch,
+                    # this hop's pack+dispatch ran while an earlier hop
+                    # was executing: that host wall is hidden
+                    hidden_s=(t_dispatch - t0) if was_busy else 0.0,
+                ))
+                self._dispatched_total += 1
+        dispatched = packed is not None
+        retired = None
+        if len(self._inflight) > self._depth or (
+                not dispatched and self._inflight):
+            retired = self._retire_one()
+        return dispatched, retired
+
+    # -- public stepping -----------------------------------------------------
+
+    def step_batch(self) -> HopBatch | None:
+        """One pipeline turn.  Unlike the sync scheduler, ``None`` can
+        mean "hop dispatched, results not retired yet" — callers that
+        need everything settled use ``drain()`` (or ``peek``/
+        ``close_stream``, which barrier internally)."""
+        return self._advance()[1]
+
+    def run_until_starved(self):
+        """Step until no stream has a full hop buffered AND every
+        dispatched hop has retired; returns the collated tuples."""
+        self.flush_ingest()
+        out = []
+        while True:
+            dispatched, retired = self._advance()
+            if retired is not None:
+                out.extend(self._collate(retired))
+            if not dispatched and not self._inflight:
+                return out
+
+    def drain(self) -> int:
+        """Flush the pump, run the pipeline until starved, and retire
+        every in-flight hop; returns hops *dispatched* by this call
+        (== hops the sync scheduler would have executed)."""
+        self.flush_ingest()
+        before = self._dispatched_total
+        while True:
+            dispatched, _ = self._advance()
+            if not dispatched and not self._inflight:
+                return self._dispatched_total - before
+
+    # -- epoch-barrier lifecycle overrides -----------------------------------
+
+    def _resize(self, new_cap: int) -> None:
+        with self._lock:
+            self._epoch_barrier()  # remaps must never race an in-flight hop
+            super()._resize(new_cap)
+
+    def add_stream(self, *args, **kwargs) -> int:
+        with self._lock:  # placement/arena bookkeeping vs pump pushes
+            return super().add_stream(*args, **kwargs)
+
+    def peek(self, sid: int) -> np.ndarray:
+        self.flush_ingest()  # the contract covers "audio pushed so far"
+        with self._lock:
+            self._epoch_barrier()
+            return super().peek(sid)
+
+    def close_stream(self, sid: int) -> StreamResult:
+        self.flush_ingest()  # pending pushes for this sid must land
+        with self._lock:
+            self._epoch_barrier()  # fold in-flight hops, then ghost-flush
+            return super().close_stream(sid)
+
+    def detections(self, sid: int) -> list[Detection]:
+        """Events recorded so far for ``sid`` (settles the pipeline)."""
+        with self._lock:
+            self._epoch_barrier()
+            return list(self._require(sid).events)
+
+    def shutdown(self) -> None:
+        """Settle everything and stop the pump thread."""
+        if self._pump is not None:
+            self._pump.close()
+            self._pump = None
+        with self._lock:
+            self._epoch_barrier()

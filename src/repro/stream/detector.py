@@ -151,6 +151,20 @@ class BatchedDetector:
         self._hold_cls[slot] = 0
         self._fired_at[slot] = _NEVER
 
+    def state_digest(self, slot: int) -> tuple:
+        """One slot's full hysteresis state as hashable plain values —
+        the concurrency suite's equality probe: after any interleaving,
+        the async scheduler's detector must hold bit-identical state to
+        the synchronous one (deferred folds retire in FIFO dispatch
+        order, so each slot sees the same posterior sequence)."""
+        return (
+            self._win[slot].tobytes(),
+            int(self._count[slot]),
+            bool(self._holding[slot]),
+            int(self._hold_cls[slot]),
+            int(self._fired_at[slot]),
+        )
+
     def apply_remap(self, remap: dict[int, int], new_capacity: int) -> None:
         self._win = remap_rows(self._win, remap, new_capacity)
         self._count = remap_rows(self._count, remap, new_capacity)

@@ -219,6 +219,8 @@ class StreamMetrics:
                             for p in PHASES[1:]}
         # per-phase running totals (plain float adds on the hot path)
         self._phase_total = dict.fromkeys(PHASES, 0.0)
+        # host work that ran under an in-flight device hop (async plane)
+        self.hidden_total_s = 0.0
         self.steps = 0
         self.wall_total_s = 0.0
         self.stream_hops_total = 0
@@ -280,14 +282,18 @@ class StreamMetrics:
                 shard_counts: list[int] | None = None,
                 finalized: bool = True,
                 dispatch_s: float = 0.0, device_s: float = 0.0,
-                detector_s: float = 0.0) -> None:
+                detector_s: float = 0.0, hidden_s: float = 0.0) -> None:
         """Record one batched hop: ``n_ready`` streams advanced in
         ``wall_s`` seconds of which ``host_pack_s`` was host-side batch
         packing; ``dispatch_s``/``device_s``/``detector_s`` are the
         fenced phase durations from the scheduler's trace spans (device
         time is real execution — the span boundary blocks until ready).
-        Aggregate-only — the hot path never walks per-stream counter
-        objects (that was the pre-arena serial floor)."""
+        ``hidden_s`` is the portion of this hop's host work (pack /
+        dispatch / deferred fold) that ran while an earlier or later hop
+        was executing on the device — zero on the synchronous path,
+        reported by the async plane's pipelined dispatch.  Aggregate-only
+        — the hot path never walks per-stream counter objects (that was
+        the pre-arena serial floor)."""
         if shard_counts is None:
             # only unambiguous without a mesh; sharded callers must say
             # which shard advanced what or shard_summary would lie
@@ -303,6 +309,7 @@ class StreamMetrics:
                      ("detector", detector_s)):
             self._rec(self._phase_res[p], self._phase_hist[p], v)
             pt[p] += v
+        self.hidden_total_s += hidden_s
         self.steps += 1
         self.wall_total_s += wall_s
         self.stream_hops_total += n_ready
@@ -372,6 +379,7 @@ class StreamMetrics:
                   *self._phase_hist.values()):
             h.reset()
         self._phase_total = dict.fromkeys(PHASES, 0.0)
+        self.hidden_total_s = 0.0
         self.steps = 0
         self.wall_total_s = 0.0
         self.stream_hops_total = 0
@@ -465,6 +473,22 @@ class StreamMetrics:
                 "share_of_wall": total / wall_total if wall_total else 0.0,
             }
         return out
+
+    def overlap_summary(self) -> dict[str, float]:
+        """How much host-side hop work the async plane hid under device
+        compute this window.  ``hidden_frac`` is hidden host seconds over
+        total host seconds (pack + dispatch + detector); always 0.0 under
+        the synchronous scheduler.  The trace-derived union-interval
+        stats (``obs.trace.overlap_stats``) are the precise wall-clock
+        account; this is the O(1) running-counter view."""
+        pt = self._phase_total
+        host = pt["pack"] + pt["dispatch"] + pt["detector"]
+        return {
+            "hidden_ms": self.hidden_total_s * 1e3,
+            "host_ms": host * 1e3,
+            "hidden_frac": self.hidden_total_s / host if host else 0.0,
+            "device_busy_ms": pt["device"] * 1e3,
+        }
 
     def shard_summary(self) -> dict[str, object]:
         """Per-shard occupancy/throughput + the fleet aggregate.

@@ -163,7 +163,8 @@ class _BatchedModel:
     """
 
     def __init__(self, plan: StreamPlan, weights, thresholds,
-                 backend: str, interpret: bool | None, mesh=None) -> None:
+                 backend: str, interpret: bool | None, mesh=None,
+                 donate: bool = False) -> None:
         self.plan = plan
         self.backend = backend
         self.interpret = interpret
@@ -198,7 +199,15 @@ class _BatchedModel:
             self._fc_thr = tuple(put(t) for t in self._fc_thr)
             self._fc_flip = tuple(put(f) for f in self._fc_flip)
             self._baxes = _mesh_data_axes(mesh)
-        self.step = jax.jit(self._step, static_argnames=("emit",))
+        # with donate=True the slot-state operands (tails, pendings, gap)
+        # are donated to each hop: XLA aliases the output state onto the
+        # input buffers, so a restep never copies the resident state.  The
+        # caller must treat the passed-in state arrays as consumed (the
+        # scheduler reassigns them from the step's results immediately).
+        self.step = jax.jit(
+            self._step, static_argnames=("emit",),
+            donate_argnums=(2, 3, 4) if donate else (),
+        )
         self.finalize = jax.jit(self._finalize)
 
     def _pin(self, x: jax.Array) -> jax.Array:
@@ -409,8 +418,14 @@ class StreamScheduler:
         inbox_samples: int | None = None,
         rebalance_threshold: int | None = 1,
         obs: Observability | None = None,
+        clock=time.perf_counter,
+        donate_buffers: bool = False,
     ) -> None:
         assert backend in ("jnp", "pallas"), backend
+        # every hop stamp (metrics, trace spans) reads this clock, so the
+        # concurrency suite can drive sync and async schedulers with one
+        # controllable fake clock and compare their traces structurally
+        self._clock = clock
         self.plan = plan_stream(spec, hop_frames=hop_frames)
         self.weights = {k: np.asarray(v) for k, v in weights.items()}
         self.thresholds = thresholds
@@ -436,7 +451,8 @@ class StreamScheduler:
         self.metrics = StreamMetrics(self.plan, sample_rate, n_shards=S,
                                      registry=self.obs.registry)
         self._model = _BatchedModel(
-            self.plan, self.weights, thresholds, backend, interpret, mesh
+            self.plan, self.weights, thresholds, backend, interpret, mesh,
+            donate=donate_buffers,
         )
 
         self._min_capacity = (
@@ -770,7 +786,7 @@ class StreamScheduler:
         ready = (self._arena.wr[slots] - self._arena.rd[slots]) >= prime
         if not ready.any():
             return
-        t0 = time.perf_counter()
+        t0 = self._clock()
         sids = [sid for sid, r in zip(sids, ready.tolist()) if r]
         slots = slots[ready]
         samples = self._arena.pop_batch(slots, prime)
@@ -800,7 +816,7 @@ class StreamScheduler:
             # host wrote the slot: earlier cached logits don't cover it;
             # the NEXT emit step (which includes this write) does
             s.stamp = self._emit_step + 1
-        self.obs.trace.add("prime_batch", t0, time.perf_counter() - t0,
+        self.obs.trace.add("prime_batch", t0, self._clock() - t0,
                            n=len(sids))
         self.obs.events.emit("mass_join", n=len(sids))
 
@@ -833,19 +849,11 @@ class StreamScheduler:
         st.samples_seen = s.frontend.samples_in - len(s.frontend)
         return st
 
-    def step_batch(self) -> HopBatch | None:
-        """Advance every stream that has a full hop buffered; None when no
-        stream is ready.
-
-        This is the steady-state hot path and it contains NO python loop
-        over slots: readiness is one vectorized compare over the arena,
-        hop packing is one gather (``RingArena.pack_hops``), shard counts
-        come from ``np.bincount``, bookkeeping updates are fancy-indexed
-        vector ops, and detection advances through the slot-vectorized
-        ``BatchedDetector``.  Per-slot python survives only off this path
-        (priming, teardown, fallback peeks) and for detections that
-        actually fire.
-        """
+    def _hop_barriers(self) -> None:
+        """Hop-boundary housekeeping: rebalance-on-skew (plus the shrink
+        the migration may unpin) and the mass-join primer.  The async
+        plane only calls this behind an epoch barrier (no hop in flight),
+        so a slot remap can never invalidate in-flight row indices."""
         if self._skew_dirty:
             # hop boundary: leave churn since the last hop may have
             # skewed the shards — migrate-on-idle, then re-check the
@@ -855,8 +863,13 @@ class StreamScheduler:
                 self._maybe_shrink()
         if self._unprimed:
             self._prime_ready()  # numpy warm-up, excluded from step timing
+
+    def _pack_ready(self):
+        """Pack stage: consume one hop window from every ready slot.
+        Returns ``None`` when no stream is ready, else ``(ready_slots,
+        ready_mask, audio, shard_counts, t0, t_pack)``."""
         hop = self.plan.hop_samples
-        t0 = time.perf_counter()
+        t0 = self._clock()
         ready_mask = self._primed_mask & self._arena.ready_mask(hop)
         ready_slots = np.nonzero(ready_mask)[0]
         if ready_slots.size == 0:
@@ -868,13 +881,21 @@ class StreamScheduler:
         )
         # pack phase ends here; staging (jnp.asarray/device_put) and the
         # jitted call itself are the dispatch phase
-        t_pack = time.perf_counter()
+        t_pack = self._clock()
+        return ready_slots, ready_mask, audio, shard_counts, t0, t_pack
+
+    def _dispatch_hop(self, ready_mask, audio):
+        """Dispatch stage: stage operands, launch the jitted hop, and
+        reassign the resident state from its (still unforced) result
+        futures.  Nothing here blocks — JAX's async dispatch returns
+        immediately — and with donated buffers the previous state arrays
+        are consumed by the call, so they must not be read afterwards.
+        Returns the logits/posterior futures (None with emit off)."""
         args = (
             self._shard(jnp.asarray(audio)),
             self._shard(jnp.asarray(ready_mask)),
             tuple(self._tails), tuple(self._pendings), self._gap,
         )
-        logits_h = post_h = None
         if self.emit_logits:
             tails, pendings, gap, logits, post = self._model.step(
                 *args, emit=True
@@ -882,25 +903,26 @@ class StreamScheduler:
         else:
             tails, pendings, gap = self._model.step(*args, emit=False)
             logits = post = None
-        # dispatch phase ends when the jitted call has returned its
-        # futures; the device phase is the explicit fence + transfers.
-        # Without the fence, JAX's async dispatch would let wall time
-        # measure *enqueue* rather than execution (egregiously so with
-        # emit_logits off, where nothing else forces a sync), and
-        # device_ms percentiles would be fiction.
-        t_dispatch = time.perf_counter()
-        jax.block_until_ready((tails, pendings, gap))
-        if self.emit_logits:
-            logits_h = np.asarray(logits)  # one bulk transfer per hop
-            post_h = np.asarray(post)
-            self._emit_step += 1
-            self._emit_cache = logits_h
-            self._emit_cache_step = self._emit_step
-        t_device = time.perf_counter()
         self._tails = list(tails)
         self._pendings = list(pendings)
         self._gap = gap
+        return logits, post
 
+    def _fold_hop(self, ready_slots, shard_counts, logits_h, post_h,
+                  t0, t_pack, t_dispatch, t_device,
+                  hidden_s: float = 0.0, fold_hidden: bool = False
+                  ) -> HopBatch:
+        """Fold stage: apply one resolved hop's results to the host-side
+        planes — emit cache, frame counters, slot-vectorized detector,
+        metrics, lifecycle events, trace spans.  The sync path runs it
+        inline right after the fence; the async plane defers it to the
+        hop's retirement, strictly in FIFO dispatch order, which keeps
+        every per-slot sequence (frames, detector state, events)
+        bit-identical to the synchronous schedule."""
+        if self.emit_logits:
+            self._emit_step += 1
+            self._emit_cache = logits_h
+            self._emit_cache_step = self._emit_step
         self._frames_v[ready_slots] += self.plan.frames_per_hop
         sids = self._slot_sid[ready_slots]
         frames = self._frames_v[ready_slots]
@@ -922,24 +944,30 @@ class StreamScheduler:
                                      cls=det.cls, frame=det.frame,
                                      score=det.score)
                 detections.append(det)
-        t_detector = time.perf_counter()
+        t_detector = self._clock()
+        if fold_hidden:
+            # a later hop is still executing while this fold runs, so the
+            # detector phase is hidden under device compute
+            hidden_s += t_detector - t_device
         self.metrics.on_step(
             ready_slots.size, self.plan.frames_per_hop,
             t_detector - t0, host_pack_s=t_pack - t0,
             shard_counts=shard_counts.tolist(), finalized=self.emit_logits,
             dispatch_s=t_dispatch - t_pack, device_s=t_device - t_dispatch,
-            detector_s=t_detector - t_device,
+            detector_s=t_detector - t_device, hidden_s=hidden_s,
         )
         # fold the arena's push-side counters into the metrics at the hop
         # boundary: two scalar reads, so neither the push path nor this
         # hot path ever walks per-sid counter objects
         self.metrics.on_push_fold(self._arena.total_samples_in,
                                   self._arena.total_chunks_in)
-        t_end = time.perf_counter()
-        # hop trace: consecutive stamps, so the phase spans tile the hop
-        # span exactly (the bench asserts >= 95% coverage).  One batched
-        # call, six deque appends — B-independent, far under the 2%
-        # overhead cap.
+        t_end = self._clock()
+        # hop trace: on the sync path the stamps are consecutive, so the
+        # phase spans tile the hop span exactly (the bench asserts >= 95%
+        # coverage).  Under the async plane, hop N+1's pack/dispatch
+        # spans legitimately overlap hop N's device span — union-interval
+        # coverage (``trace.coverage(mode="overlap")``) accounts for
+        # that.  One batched call, six deque appends — B-independent.
         n_ready = int(ready_slots.size)
         self.obs.trace.add_batch((
             ("pack", t0, t_pack - t0, {"n": n_ready}),
@@ -951,6 +979,45 @@ class StreamScheduler:
         ))
         return HopBatch(sids=sids, frames=frames, logits=rows_logits,
                         posteriors=rows_post, detections=detections)
+
+    def step_batch(self) -> HopBatch | None:
+        """Advance every stream that has a full hop buffered; None when no
+        stream is ready.
+
+        This is the steady-state hot path and it contains NO python loop
+        over slots: readiness is one vectorized compare over the arena,
+        hop packing is one gather (``RingArena.pack_hops``), shard counts
+        come from ``np.bincount``, bookkeeping updates are fancy-indexed
+        vector ops, and detection advances through the slot-vectorized
+        ``BatchedDetector``.  Per-slot python survives only off this path
+        (priming, teardown, fallback peeks) and for detections that
+        actually fire.
+
+        The body is pack -> dispatch -> fence -> fold, each stage a
+        method the async plane (``AsyncStreamScheduler``) reuses with the
+        fence+fold deferred to the hop's retirement.
+        """
+        self._hop_barriers()
+        packed = self._pack_ready()
+        if packed is None:
+            return None
+        ready_slots, ready_mask, audio, shard_counts, t0, t_pack = packed
+        logits, post = self._dispatch_hop(ready_mask, audio)
+        # dispatch phase ends when the jitted call has returned its
+        # futures; the device phase is the explicit fence + transfers.
+        # Without the fence, JAX's async dispatch would let wall time
+        # measure *enqueue* rather than execution (egregiously so with
+        # emit_logits off, where nothing else forces a sync), and
+        # device_ms percentiles would be fiction.
+        t_dispatch = self._clock()
+        jax.block_until_ready((self._tails, self._pendings, self._gap))
+        logits_h = post_h = None
+        if self.emit_logits:
+            logits_h = np.asarray(logits)  # one bulk transfer per hop
+            post_h = np.asarray(post)
+        t_device = self._clock()
+        return self._fold_hop(ready_slots, shard_counts, logits_h, post_h,
+                              t0, t_pack, t_dispatch, t_device)
 
     def step(self) -> list[tuple[int, int, np.ndarray | None, Detection | None]]:
         """Advance every stream that has a full hop buffered.
@@ -965,7 +1032,12 @@ class StreamScheduler:
         callers (the benchmark's steady loop) should consume the columnar
         ``HopBatch`` directly.
         """
-        batch = self.step_batch()
+        return self._collate(self.step_batch())
+
+    @staticmethod
+    def _collate(batch: HopBatch | None
+                 ) -> list[tuple[int, int, np.ndarray | None,
+                                 Detection | None]]:
         if batch is None:
             return []
         det_by_sid = {d.stream_id: d for d in batch.detections}

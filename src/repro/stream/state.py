@@ -31,6 +31,7 @@ Bit-exactness contract with core/executor.py (verified in test_stream.py):
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import numpy as np
@@ -184,6 +185,42 @@ class RingArena:
         # fold at hop boundaries is two scalar reads, never a per-slot walk
         self.total_samples_in = 0
         self.total_chunks_in = 0
+        # seqlock word for the async ingest pump: odd while a mutation is
+        # in progress, bumped to the next even value when it completes.
+        # Mutators run under the scheduler's ingest lock; the generation
+        # lets lock-FREE observers (`read_consistent`) detect and retry a
+        # read that raced a writer instead of returning torn state.
+        self.generation = 0
+        self.read_retries = 0  # consistency retries observed (stats only)
+
+    @contextlib.contextmanager
+    def _write(self):
+        """Mark a mutation window: generation is odd for its duration.
+        Validation must happen BEFORE entering, so a rejected operation
+        leaves the generation untouched (still even)."""
+        self.generation += 1
+        try:
+            yield
+        finally:
+            self.generation += 1
+
+    def read_consistent(self, fn, max_retries: int = 100_000):
+        """Seqlock read: evaluate ``fn()`` at a moment no writer is
+        mid-mutation and re-check afterwards, retrying on a torn window.
+        ``fn`` must be a pure read of arena state (it may run more than
+        once).  Returns ``fn()``'s value from the first clean window."""
+        for _ in range(max_retries):
+            g0 = self.generation
+            if g0 & 1:  # writer mid-flight: spin
+                self.read_retries += 1
+                continue
+            out = fn()
+            if self.generation == g0:
+                return out
+            self.read_retries += 1
+        raise RuntimeError(
+            "read_consistent starved: a writer never left the arena"
+        )
 
     @property
     def capacity_slots(self) -> int:
@@ -266,12 +303,13 @@ class RingArena:
         rows = np.repeat(slots, lens)
         offs = np.arange(total) - np.repeat(starts, lens)
         cols = (np.repeat(self.wr[slots], lens) + offs) % self.capacity_samples
-        self.data[rows, cols] = flat
-        self.wr[slots] += lens
-        self.samples_in[slots] += lens
-        self.chunks_in[slots] += 1
-        self.total_samples_in += total
-        self.total_chunks_in += slots.size
+        with self._write():
+            self.data[rows, cols] = flat
+            self.wr[slots] += lens
+            self.samples_in[slots] += lens
+            self.chunks_in[slots] += 1
+            self.total_samples_in += total
+            self.total_chunks_in += slots.size
 
     # -- drain ---------------------------------------------------------------
 
@@ -297,28 +335,34 @@ class RingArena:
                 f"arena underflow: pack_hops({hop}) on a slot holding less"
             )
         cap = self.capacity_samples
-        start = self.rd[ready_slots] % cap
-        if cap % hop == 0 and not (start % hop).any():
-            # aligned fast path: every window is one whole block of a
-            # (slots, blocks, hop) view of the arena, so the gather is a
-            # contiguous block-row take — no per-sample index array.  The
-            # scheduler keeps slots on this path by rebasing each inbox
-            # once at priming (rebase) and sizing the arena in whole hops.
-            view = self.data.reshape(self.capacity_slots, cap // hop, hop)
-            gathered = view[ready_slots, start // hop]
-        else:
-            idx = (ready_slots * cap + start)[:, None] + np.arange(hop)
-            over = start + hop > cap  # windows wrapping past the region end
-            if over.any():
-                row_end = ((ready_slots[over] + 1) * cap)[:, None]
-                sub = idx[over]
-                idx[over] = np.where(sub >= row_end, sub - cap, sub)
-            gathered = self.data.reshape(-1)[idx]
-        if ready_slots.size == self.capacity_slots:
-            out = gathered.astype(np.int32)  # all ready: skip the scatter
-        else:
-            out[ready_slots] = gathered
-        self.rd[ready_slots] += hop
+        with self._write():
+            # the gather itself sits inside the write window: pack is a
+            # CONSUMER (it bumps rd), so lock-free observers must treat
+            # the whole read-and-consume as one mutation
+            start = self.rd[ready_slots] % cap
+            if cap % hop == 0 and not (start % hop).any():
+                # aligned fast path: every window is one whole block of a
+                # (slots, blocks, hop) view of the arena, so the gather is
+                # a contiguous block-row take — no per-sample index array.
+                # The scheduler keeps slots on this path by rebasing each
+                # inbox once at priming (rebase) and sizing the arena in
+                # whole hops.
+                view = self.data.reshape(self.capacity_slots, cap // hop,
+                                         hop)
+                gathered = view[ready_slots, start // hop]
+            else:
+                idx = (ready_slots * cap + start)[:, None] + np.arange(hop)
+                over = start + hop > cap  # windows wrapping past region end
+                if over.any():
+                    row_end = ((ready_slots[over] + 1) * cap)[:, None]
+                    sub = idx[over]
+                    idx[over] = np.where(sub >= row_end, sub - cap, sub)
+                gathered = self.data.reshape(-1)[idx]
+            if ready_slots.size == self.capacity_slots:
+                out = gathered.astype(np.int32)  # all ready: skip scatter
+            else:
+                out[ready_slots] = gathered
+            self.rd[ready_slots] += hop
         return out
 
     def rebase(self, slot: int) -> None:
@@ -336,17 +380,18 @@ class RingArena:
         slots = np.asarray(slots, np.int64)
         if slots.size == 0:
             return
-        n = self.wr[slots] - self.rd[slots]
-        m = int(n.max())
-        if m:
-            idx = (self.rd[slots][:, None]
-                   + np.arange(m)) % self.capacity_samples
-            vals = self.data[slots[:, None], idx]
-            keep = np.arange(m)[None, :] < n[:, None]
-            cur = self.data[slots, :m]
-            self.data[slots, :m] = np.where(keep, vals, cur)
-        self.rd[slots] = 0
-        self.wr[slots] = n
+        with self._write():
+            n = self.wr[slots] - self.rd[slots]
+            m = int(n.max())
+            if m:
+                idx = (self.rd[slots][:, None]
+                       + np.arange(m)) % self.capacity_samples
+                vals = self.data[slots[:, None], idx]
+                keep = np.arange(m)[None, :] < n[:, None]
+                cur = self.data[slots, :m]
+                self.data[slots, :m] = np.where(keep, vals, cur)
+            self.rd[slots] = 0
+            self.wr[slots] = n
 
     def peek(self, slot: int, n: int | None = None) -> np.ndarray:
         """Oldest ``n`` samples (default: all) of one slot as (n,) int32
@@ -361,7 +406,8 @@ class RingArena:
 
     def pop(self, slot: int, n: int) -> np.ndarray:
         out = self.peek(slot, n)
-        self.rd[slot] += n
+        with self._write():
+            self.rd[slot] += n
         return out
 
     def pop_batch(self, slots: np.ndarray, n: int) -> np.ndarray:
@@ -376,9 +422,11 @@ class RingArena:
             raise MemoryError(
                 f"arena underflow: pop_batch({n}) on a slot holding less"
             )
-        idx = (self.rd[slots][:, None] + np.arange(n)) % self.capacity_samples
-        out = self.data[slots[:, None], idx].astype(np.int32)
-        self.rd[slots] += n
+        with self._write():
+            idx = (self.rd[slots][:, None]
+                   + np.arange(n)) % self.capacity_samples
+            out = self.data[slots[:, None], idx].astype(np.int32)
+            self.rd[slots] += n
         return out
 
     # -- slot lifecycle ------------------------------------------------------
@@ -386,11 +434,12 @@ class RingArena:
     def clear_slot(self, slot: int) -> None:
         """Scrub one row so the next tenant starts clean (the fleet-level
         ``total_*`` counters keep counting across tenants)."""
-        self.data[slot] = 0
-        self.rd[slot] = self.wr[slot] = 0
-        self.samples_in[slot] = 0
-        self.chunks_in[slot] = 0
-        self.gain[slot] = 1.0
+        with self._write():
+            self.data[slot] = 0
+            self.rd[slot] = self.wr[slot] = 0
+            self.samples_in[slot] = 0
+            self.chunks_in[slot] = 0
+            self.gain[slot] = 1.0
 
     def apply_remap(self, remap: dict[int, int], new_capacity_slots: int
                     ) -> None:
@@ -401,14 +450,16 @@ class RingArena:
         across blocks (mirroring the device-side
         ``ops.remap_slot_rows`` gather).
         """
-        self.data = remap_rows(self.data, remap, new_capacity_slots)
-        self.rd = remap_rows(self.rd, remap, new_capacity_slots)
-        self.wr = remap_rows(self.wr, remap, new_capacity_slots)
-        self.samples_in = remap_rows(self.samples_in, remap,
-                                     new_capacity_slots)
-        self.chunks_in = remap_rows(self.chunks_in, remap,
-                                    new_capacity_slots)
-        self.gain = remap_rows(self.gain, remap, new_capacity_slots, fill=1.0)
+        with self._write():
+            self.data = remap_rows(self.data, remap, new_capacity_slots)
+            self.rd = remap_rows(self.rd, remap, new_capacity_slots)
+            self.wr = remap_rows(self.wr, remap, new_capacity_slots)
+            self.samples_in = remap_rows(self.samples_in, remap,
+                                         new_capacity_slots)
+            self.chunks_in = remap_rows(self.chunks_in, remap,
+                                        new_capacity_slots)
+            self.gain = remap_rows(self.gain, remap, new_capacity_slots,
+                                   fill=1.0)
 
 
 # ---------------------------------------------------------------------------
