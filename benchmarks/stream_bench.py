@@ -107,6 +107,7 @@ _OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_stream.json"
 def _steady(spec, weights, thresholds, n_streams: int, mesh=None,
             warm_rounds: int = WARM_ROUNDS, timed_rounds: int = TIMED_ROUNDS,
             chunk_hops: int = 4, hop_frames: int = HOP_FRAMES,
+            backend: str = "jnp",
             obs: Observability | None = None) -> dict[str, object]:
     """All slots active, per-hop logits on: the always-on steady state.
 
@@ -120,6 +121,7 @@ def _steady(spec, weights, thresholds, n_streams: int, mesh=None,
         spec, weights, thresholds, capacity=n_streams,
         initial_capacity=n_streams, min_capacity=n_streams,
         hop_frames=hop_frames, emit_logits=True, mesh=mesh, obs=obs,
+        backend=backend,
     )
     plan = sched.plan
     chunk = plan.hop_samples * chunk_hops
@@ -176,6 +178,9 @@ def _steady(spec, weights, thresholds, n_streams: int, mesh=None,
         "audio_sec_per_wall_sec": frames * plan.samples_per_frame
         / gscd.SR / wall,
         "uj_per_inference": energy["uj_per_inference"],
+        # per-shard pallas_call count for one emit hop (0 = plain XLA)
+        "device_dispatches_per_hop": m["device_dispatches_per_hop"],
+        "backend": backend,
     }
 
 
@@ -477,25 +482,52 @@ def _sharded_sweep(spec, weights, thresholds) -> dict[str, object] | None:
         return None
     shards = [s for s in SHARD_CONFIGS if s <= jax.device_count()]
     configs: dict[str, dict[str, float]] = {}
+    configs_per_stage: dict[str, dict[str, float]] = {}
+    configs_fused: dict[str, dict[str, float]] = {}
     for s in shards:
         mesh = make_stream_mesh(s) if s > 1 else None
-        configs[str(s)] = _steady(
-            spec, weights, thresholds, SHARD_TOTAL, mesh=mesh,
-            warm_rounds=1, timed_rounds=SHARD_TIMED_ROUNDS, chunk_hops=2,
-            hop_frames=SHARD_HOP_FRAMES,
+        kw = dict(mesh=mesh, warm_rounds=1, timed_rounds=SHARD_TIMED_ROUNDS,
+                  chunk_hops=2, hop_frames=SHARD_HOP_FRAMES)
+        # the committed trajectory row (plain-XLA backend), the per-stage
+        # kernel path (before: one launch per stage), and the fused
+        # megakernel (after: ONE launch per shard per hop, emit included)
+        configs[str(s)] = _steady(spec, weights, thresholds, SHARD_TOTAL,
+                                  **kw)
+        configs_per_stage[str(s)] = _steady(
+            spec, weights, thresholds, SHARD_TOTAL, backend="pallas", **kw
+        )
+        configs_fused[str(s)] = _steady(
+            spec, weights, thresholds, SHARD_TOTAL, backend="megakernel",
+            **kw
         )
     single = configs.get("1", {}).get("stream_hops_per_sec")
     multi = [
         c["stream_hops_per_sec"] for k, c in configs.items() if int(k) > 1
     ]
+    f_single = configs_fused.get("1", {}).get("stream_hops_per_sec")
+    f_multi = [c["stream_hops_per_sec"] for k, c in configs_fused.items()
+               if int(k) > 1]
+    top = str(max(shards))
     return {
         "total_streams": SHARD_TOTAL,
         "devices": jax.device_count(),
         "hop_frames": SHARD_HOP_FRAMES,
         "configs": configs,
+        # the before/after device-ms split of the fusion: per-stage
+        # kernel launches vs the hop megakernel, same pool, same mesh
+        "configs_per_stage": configs_per_stage,
+        "configs_fused": configs_fused,
+        "fused_vs_per_stage_device_p50": (
+            configs_per_stage[top]["device_ms_p50"]
+            / configs_fused[top]["device_ms_p50"]
+            if configs_fused[top]["device_ms_p50"] else None
+        ),
         "best_single_stream_hops_per_sec": single,
         "best_multi_stream_hops_per_sec": max(multi) if multi else None,
         "multi_vs_single": (max(multi) / single) if multi and single else None,
+        "fused_multi_vs_single": (
+            max(f_multi) / f_single if f_multi and f_single else None
+        ),
     }
 
 
@@ -569,6 +601,24 @@ def run() -> list[str]:
     event_counts = events.counts()
     events.close()
 
+    # ---- per-hop device-dispatch accounting (static, plan + backend) -------
+    def _disp(backend: str) -> dict[str, int]:
+        s = StreamScheduler(spec, weights, thresholds, capacity=2,
+                            hop_frames=SHARD_HOP_FRAMES, backend=backend)
+        return {"emit": s._model.dispatches_per_hop(True),
+                "steady": s._model.dispatches_per_hop(False)}
+
+    disp = {b: _disp(b) for b in ("jnp", "pallas", "megakernel")}
+    device_dispatches = {
+        # per-shard pallas_call launches for one hop, by backend; "emit"
+        # includes the ghost flush + classifier tail.  The fused target
+        # from the megakernel issue is <= 2 launches per emit hop.
+        "per_hop_emit": {b: d["emit"] for b, d in disp.items()},
+        "per_hop_steady": {b: d["steady"] for b, d in disp.items()},
+        "fused_target": 2,
+        "fused_target_met": disp["megakernel"]["emit"] <= 2,
+    }
+
     b0 = sweep[BATCH_SWEEP[0]]
     speedup = b0["frames_per_sec"] / baseline_fps
     prev_p50 = prev.get("step_ms_p50")
@@ -618,6 +668,9 @@ def run() -> list[str]:
         # async execution plane vs sync at the largest sweep batch,
         # open-loop: hidden_ms / utilization are what CI asserts on
         "overlap": overlap,
+        # per-hop launch counts by backend + the fused <=2 target (CI
+        # asserts fused_target_met on the multi-device leg)
+        "device_dispatches": device_dispatches,
         "sharded": sharded,
         # shrink-floor capacity with vs without the cross-shard rebalance
         # plane under one-shard-skewed leave churn (CI asserts on this)
@@ -689,6 +742,30 @@ def run() -> list[str]:
                 f"{'PASS' if ratio > 1.0 else 'FAIL'} "
                 "(multi-shard > single device, same total streams)",
             ))
+        fused = sharded.get("configs_fused") or {}
+        for s, c in sorted(fused.items(), key=lambda kv: int(kv[0])):
+            ps = sharded["configs_per_stage"][s]
+            out.append(row(
+                f"stream.fused_x{s}", f"{c['stream_hops_per_sec']:.1f}",
+                f"megakernel stream-hops/s; device p50 "
+                f"{c['device_ms_p50']:.1f} ms vs per-stage "
+                f"{ps['device_ms_p50']:.1f} ms, "
+                f"{c['device_dispatches_per_hop']:.0f} vs "
+                f"{ps['device_dispatches_per_hop']:.0f} launches/hop",
+            ))
+        fvp = sharded.get("fused_vs_per_stage_device_p50")
+        if fvp is not None and not sharded_skipped:
+            out.append(row(
+                "stream.fused_vs_per_stage", f"{fvp:.2f}",
+                f"{'PASS' if fvp > 1.0 else 'FAIL'} (fused hop device p50 "
+                "faster than per-stage launches, same pool)",
+            ))
+        fms = sharded.get("fused_multi_vs_single")
+        if fms is not None and not sharded_skipped:
+            out.append(row(
+                "stream.fused_sharded_speedup", f"{fms:.2f}",
+                "megakernel multi-shard vs single, same total streams",
+            ))
     if skewed_skipped:
         out.append(row(
             "stream.skewed_churn", "SKIP",
@@ -727,6 +804,13 @@ def run() -> list[str]:
         row("stream.overlap_speedup", f"{overlap['speedup_vs_sync']:.2f}",
             f"async vs sync stream-hops/s at B={overlap['batch']}; "
             f"device util {overlap['utilization']*100:.1f}%"),
+        row("stream.dispatches_per_emit_hop",
+            f"{device_dispatches['per_hop_emit']['megakernel']}",
+            f"{'PASS' if device_dispatches['fused_target_met'] else 'FAIL'} "
+            f"(fused target <= {device_dispatches['fused_target']}; "
+            f"per-stage pallas "
+            f"{device_dispatches['per_hop_emit']['pallas']}, jnp "
+            f"{device_dispatches['per_hop_emit']['jnp']})"),
         row("stream.artifact", out_path.name,
             "perf trajectory" if not SMOKE else "smoke numbers, kept apart"),
     ])

@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import dispatch
+
 DEFAULT_BL = 512
 DEFAULT_BN = 128
 
@@ -94,7 +96,7 @@ def bnn_conv1d_packed(
     if mode == "sa":
         assert thr is not None and flip is not None
         o_spec = pl.BlockSpec((bl // pool, bn), lambda i, j: (i, j))
-        return pl.pallas_call(
+        return dispatch.pallas_call(
             functools.partial(_kernel, k=k, cw=cw, pool=pool),
             grid=grid,
             in_specs=[xs_spec, w_spec, w_spec, v_spec, v_spec],
@@ -105,7 +107,7 @@ def bnn_conv1d_packed(
     elif mode == "raw":
         assert pool == 1, "raw mode has no SA output to pool"
         o_spec = pl.BlockSpec((bl, bn), lambda i, j: (i, j))
-        return pl.pallas_call(
+        return dispatch.pallas_call(
             functools.partial(_kernel_raw, k=k, cw=cw),
             grid=grid,
             in_specs=[xs_spec, w_spec, w_spec],
@@ -212,7 +214,7 @@ def bnn_conv1d_step_packed(
     if mode == "sa":
         assert thr is not None and flip is not None
         o_spec = pl.BlockSpec((bb, bl // pool, bn), lambda s, i, j: (s, i, j))
-        return pl.pallas_call(
+        return dispatch.pallas_call(
             functools.partial(_batched_kernel, k=k, cw=cw, pool=pool),
             grid=grid,
             in_specs=[xs_spec, w_spec, w_spec, v_spec, v_spec],
@@ -223,7 +225,7 @@ def bnn_conv1d_step_packed(
     elif mode == "raw":
         assert pool == 1, "raw mode has no SA output to pool"
         o_spec = pl.BlockSpec((bb, bl, bn), lambda s, i, j: (s, i, j))
-        return pl.pallas_call(
+        return dispatch.pallas_call(
             functools.partial(_batched_kernel_raw, k=k, cw=cw),
             grid=grid,
             in_specs=[xs_spec, w_spec, w_spec],
@@ -307,7 +309,7 @@ def classifier_tail_packed(
             in_specs.append(pl.BlockSpec((1, cout), lambda s: (0, 0)))
             args.extend([fc_thrs[j], fc_flips[j]])
     n_out = fc_ws[-1].shape[1]
-    return pl.pallas_call(
+    return dispatch.pallas_call(
         functools.partial(_tail_kernel, n_fc=n_fc, out_raw=out_raw),
         grid=grid,
         in_specs=in_specs,
@@ -315,3 +317,94 @@ def classifier_tail_packed(
         out_shape=jax.ShapeDtypeStruct((b, n_out), jnp.int32),
         interpret=interpret,
     )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Bit-serial batched conv (multi-bit first layer) — ONE kernel launch.
+#
+# The first layer consumes 8-bit offset-binary audio.  The original path
+# dispatched one raw-conv kernel per bit plane and accumulated the `<< b`
+# partials in HBM between launches; here the plane loop moves INSIDE the
+# kernel (paper §II-F: the macro serializes input bits over cycles, not
+# over kernel launches), so the weights load into VMEM once and the
+# accumulator never leaves the grid cell.  The offset fold (subtracting
+# ``offset * sum(w)``) stays host-side in ops.bitserial_conv1d*, as before.
+# ---------------------------------------------------------------------------
+
+
+def _batched_bitserial_tile(xs, wp, wn, k: int, cw: int, bits: int):
+    """Accumulate bits x K x Cw popcount partials -> (bb, bl, bn) int32.
+
+    xs: (bb, bits, K, bl, Cw) uint32 — per-plane tap-shifted packed views.
+    """
+    bb, _, _, bl, _ = xs.shape
+    bn = wp.shape[2]
+    acc = jnp.zeros((bb, bl, bn), jnp.int32)
+    for b in range(bits):
+        scale = jnp.int32(1 << b)
+        for tap in range(k):
+            for c in range(cw):
+                xa = xs[:, b, tap, :, c][:, :, None]  # (bb, bl, 1)
+                p = jax.lax.population_count(
+                    jnp.bitwise_and(xa, wp[tap, c][None, None, :])
+                )
+                n = jax.lax.population_count(
+                    jnp.bitwise_and(xa, wn[tap, c][None, None, :])
+                )
+                acc = acc + (p.astype(jnp.int32) - n.astype(jnp.int32)) * scale
+    return acc
+
+
+def _batched_kernel_bitserial(
+    xs_ref, wp_ref, wn_ref, o_ref, *, k: int, cw: int, bits: int
+):
+    o_ref[...] = _batched_bitserial_tile(
+        xs_ref[...], wp_ref[...], wn_ref[...], k, cw, bits
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "bb", "bl", "bn", "interpret")
+)
+def bnn_bitserial_step_packed(
+    xs: jax.Array,
+    wp: jax.Array,
+    wn: jax.Array,
+    *,
+    bits: int,
+    bb: int = DEFAULT_BB,
+    bl: int = DEFAULT_BL,
+    bn: int = DEFAULT_BN,
+    interpret: bool = True,
+) -> jax.Array:
+    """Batched bit-serial raw conv on pre-shifted per-plane packed views.
+
+    xs : (B, bits, K, L_out, Cw) uint32; wp/wn : (K, Cw, Cout) uint32
+    shared across batch AND planes (the whole point: one weight fetch for
+    all ``bits`` passes).  Output: (B, L_out, Cout) int32 raw popcount
+    diff already accumulated over planes (offset NOT yet folded).
+    """
+    b, nbits, k, l_out, cw = xs.shape
+    assert nbits == bits, (nbits, bits)
+    k2, cw2, n = wp.shape
+    assert k == k2 and cw == cw2 and wn.shape == wp.shape
+    bb = min(bb, b)
+    bl = min(bl, l_out)
+    bn = min(bn, n)
+    assert b % bb == 0 and l_out % bl == 0 and n % bn == 0, (
+        b, bb, l_out, bl, n, bn)
+    grid = (b // bb, l_out // bl, n // bn)
+
+    xs_spec = pl.BlockSpec(
+        (bb, bits, k, bl, cw), lambda s, i, j: (s, 0, 0, i, 0)
+    )
+    w_spec = pl.BlockSpec((k, cw, bn), lambda s, i, j: (0, 0, j))
+    o_spec = pl.BlockSpec((bb, bl, bn), lambda s, i, j: (s, i, j))
+    return dispatch.pallas_call(
+        functools.partial(_batched_kernel_bitserial, k=k, cw=cw, bits=bits),
+        grid=grid,
+        in_specs=[xs_spec, w_spec, w_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((b, l_out, n), jnp.int32),
+        interpret=interpret,
+    )(xs, wp, wn)

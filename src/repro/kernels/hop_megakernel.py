@@ -1,0 +1,547 @@
+"""Pallas megakernel: one launch per streaming hop, ping-pong scratch.
+
+The per-stage streaming path (scheduler ``backend="pallas"``) issues one
+``pallas_call`` per conv stage per hop — plus the whole cascade again for
+the ghost flush on emit hops, plus the classifier tail — bouncing every
+intermediate feature map through HBM between launches.  This module fuses
+the entire hop into ONE kernel:
+
+  * bit-serial first layer: the ``2^b`` input planes are extracted and
+    accumulated *inside* the kernel (the accumulation commutes with the
+    integer MAC, so one shared-tap GEMM replaces ``in_bits`` passes — see
+    ``_conv_raw_val``), instead of ``in_bits`` separate dispatches;
+  * SA binarization, max-pool with the steady pool phase, receptive-field
+    tail carry and pending-frame carry for every stage;
+  * GAP accumulation saturated at the 8-bit PWB ceiling;
+  * the masked-slot merge (rows whose stream had no full hop keep their
+    previous state bit-for-bit);
+  * on ``emit`` hops, the ghost end-of-stream flush AND the fc classifier
+    tail run in the same launch on the merged state, so an emit hop is
+    still a single dispatch.
+
+Intermediate feature maps ping-pong between two VMEM scratch buffers
+(``scratch_shapes``): stage *i* reads its input from one buffer and parks
+its pooled output in the other, so nothing but the hop's audio input and
+the updated slot state (tails / pendings / GAP, plus logits on emit) ever
+touches HBM.  This is the paper's flexible ping-pong feature SRAM (§II-C)
+made literal: layer-to-layer activations never leave the macro.
+
+Grid: ``(B / bb,)`` over slot blocks — weights/thresholds are replicated
+per grid cell (one weight fetch serves every stream, the shared-weight CIM
+batching economics), per-slot state is block-mapped.
+
+Shard-safety: ``pallas_call`` is GSPMD-opaque, so this kernel must never
+see a mesh-sharded operand — the mesh-wide slot pool enters through the
+shard_map wrappers ``ops.hop_megakernel_sharded`` /
+``ops.finalize_megakernel_sharded``.
+
+Interpret-mode note: on this CPU container the kernel runs with
+``interpret=True`` (scratch residency is simulated), which preserves the
+dispatch-count and bit-exactness contracts; on TPU the same call site
+compiles to one Mosaic kernel where the scratch buffers are real VMEM.
+The conv taps use ``dot_general`` with ``preferred_element_type=int32``
+(MXU-friendly) rather than the packed popcount primitive — identical
+integer semantics, no packing round-trip between fused stages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import dispatch
+
+try:  # TPU memory-space annotation; interpret mode accepts plain structs
+    from jax.experimental.pallas import tpu as pltpu
+
+    def _vmem(shape, dtype):
+        return pltpu.VMEM(shape, dtype)
+except ImportError:  # pragma: no cover - depends on jax build
+    def _vmem(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+# slot-block size: big blocks amortize the weight fetch and keep the grid
+# short (the whole local batch in one cell for every bench config); the
+# scratch footprint per cell is 2 * bb * SL * SC int32, tiny next to the
+# feature maps the per-stage path round-trips
+DEFAULT_BB = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class StageGeom:
+    """One conv stage's static geometry — the subset of the stream plan's
+    ``ConvStage`` the kernel needs, duplicated here so the kernel layer
+    never imports the stream runtime (hashable => usable as a jit static
+    argument)."""
+
+    k: int
+    stride: int
+    pad: int
+    pool: int
+    cin: int
+    cout: int
+    in_bits: int
+    in_offset: int
+    tail: int
+    phase: int
+    n_conv: int
+    n_out: int
+    flush_in: int
+    flush_conv: int
+    flush_out: int
+
+
+def stage_geom(st) -> StageGeom:
+    """Build a :class:`StageGeom` from anything with ConvStage's fields."""
+    return StageGeom(
+        k=st.k, stride=st.stride, pad=st.pad, pool=st.pool, cin=st.cin,
+        cout=st.cout, in_bits=st.in_bits, in_offset=st.in_offset,
+        tail=st.tail, phase=st.phase, n_conv=st.n_conv, n_out=st.n_out,
+        flush_in=st.flush_in, flush_conv=st.flush_conv,
+        flush_out=st.flush_out,
+    )
+
+
+def scratch_dims(geoms: tuple[StageGeom, ...], emit: bool) -> tuple[int, int]:
+    """(length, channels) of each ping-pong buffer: the max inter-stage
+    feature-map footprint across the steady cascade (and the flush
+    cascade when it is fused in)."""
+    sl = sc = 1
+    for g in geoms:
+        sl = max(sl, g.n_out)
+        sc = max(sc, g.cout)
+        if emit:
+            sl = max(sl, g.flush_out)
+    return sl, sc
+
+
+class _PingPong:
+    """The two scratch buffers; ``park`` writes a stage's output into the
+    current buffer and flips sides, so consecutive stages alternate —
+    stage *i* reads buffer A while writing buffer B, exactly the paper's
+    double-buffered feature SRAM.  Zero-width maps pass through."""
+
+    def __init__(self, a_ref, b_ref):
+        self._bufs = (a_ref, b_ref)
+        self._side = 0
+
+    def park(self, val):
+        n, c = val.shape[1], val.shape[2]
+        if n == 0 or c == 0:
+            return val
+        buf = self._bufs[self._side]
+        self._side ^= 1
+        buf[:, :n, :c] = val
+        return buf[:, :n, :c]
+
+
+# ---------------------------------------------------------------------------
+# Kernel-body math (pure value helpers, shared by hop and finalize modes)
+# ---------------------------------------------------------------------------
+
+def _conv_raw_val(g: StageGeom, w, window, n_pos: int):
+    """(bb, L, Cin) int32 window -> (bb, n_pos, Cout) raw popcount diff.
+
+    Bit-serial first layer (``in_bits > 1``): the ``2^b`` planes are
+    extracted and accumulated in VMEM, then one shared-tap GEMM runs on
+    the accumulated code — ``sum_b (plane_b << b)`` telescopes back to the
+    integer code, so the plane accumulation commutes with the MAC and is
+    bit-exact with the per-plane popcount path at 1/in_bits the GEMM
+    passes (and, vs the old per-stage path, 1/in_bits the dispatches).
+    """
+    if g.in_bits > 1:
+        x = jnp.zeros_like(window)
+        for b in range(g.in_bits):
+            x = x + (((window >> b) & 1) << b)
+        x = x - g.in_offset
+    else:
+        x = window
+    span = (n_pos - 1) * g.stride + 1
+    acc = None
+    for t in range(g.k):
+        tap = x[:, t : t + span : g.stride, :]
+        d = jax.lax.dot_general(
+            tap, w[t], (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        acc = d if acc is None else acc + d
+    return acc
+
+
+def _sa_val(raw, thr, flip):
+    """SA binarization, executor-exact (integer thresholds keep the
+    float32 compare knife-edge free)."""
+    ge = raw.astype(jnp.float32) >= thr[0][None, None, :]
+    return jnp.where(flip[0][None, None, :] != 0, ~ge, ge).astype(jnp.int32)
+
+
+def _steady_cascade(geoms, cur, tails, pends, ws, thrs, flips, pp):
+    """The per-hop conv cascade on one slot block; returns the final
+    stage's pooled frames plus the carried tails/pendings."""
+    new_tails, new_pends = [], []
+    for i, g in enumerate(geoms):
+        window = (
+            jnp.concatenate([tails[i], cur], axis=1) if g.tail else cur
+        )
+        raw = _conv_raw_val(g, ws[i], window, g.n_conv)
+        new_tails.append(window[:, g.n_conv * g.stride :, :])
+        y = _sa_val(raw, thrs[i], flips[i])
+        if g.pool > 1:
+            frames = (
+                jnp.concatenate([pends[i], y], axis=1) if g.phase else y
+            )
+            used = g.n_out * g.pool
+            pooled = jnp.max(
+                frames[:, :used].reshape(
+                    frames.shape[0], g.n_out, g.pool, g.cout
+                ),
+                axis=2,
+            )
+            new_pends.append(frames[:, used:, :])
+            cur = pp.park(pooled)
+        else:
+            new_pends.append(pends[i])
+            cur = pp.park(y)
+    return cur, new_tails, new_pends
+
+
+def _flush_cascade(geoms, tails, pends, gap, ws, thrs, flips, pp):
+    """Ghost end-of-stream flush from (merged) steady state -> saturated
+    GAP counts, mirror of ``_BatchedModel._finalize``."""
+    bb = gap.shape[0]
+    cur = None
+    for i, g in enumerate(geoms):
+        pieces = []
+        if g.tail:
+            pieces.append(tails[i])
+        if cur is not None and g.flush_in:
+            pieces.append(cur)
+        if g.pad:
+            pad_val = g.in_offset if g.in_bits > 1 else 0
+            pieces.append(jnp.full((bb, g.pad, g.cin), pad_val, jnp.int32))
+        if g.flush_conv > 0:
+            window = (
+                pieces[0] if len(pieces) == 1
+                else jnp.concatenate(pieces, axis=1)
+            )
+            y = _sa_val(
+                _conv_raw_val(g, ws[i], window, g.flush_conv),
+                thrs[i], flips[i],
+            )
+        else:
+            y = jnp.zeros((bb, 0, g.cout), jnp.int32)
+        frames = jnp.concatenate([pends[i], y], axis=1) if g.phase else y
+        used = g.flush_out * g.pool  # drop-remainder (ref_maxpool1d)
+        cur = pp.park(
+            jnp.max(
+                frames[:, :used].reshape(bb, g.flush_out, g.pool, g.cout),
+                axis=2,
+            )
+        )
+    return jnp.minimum(gap + cur.sum(axis=1, dtype=jnp.int32), 255)
+
+
+def _classifier_val(gap_f, fc_params, fc_raw):
+    """Saturated GAP counts (bb, C) -> raw logits (fused fc cascade)."""
+    h = jnp.minimum(gap_f, 255)  # idempotent with the flush clamp
+    idx = 0
+    for j, raw_out in enumerate(fc_raw):
+        w = fc_params[idx]
+        idx += 1
+        raw = jax.lax.dot_general(
+            h, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        if raw_out:
+            h = raw
+        else:
+            thr, flip = fc_params[idx], fc_params[idx + 1]
+            idx += 2
+            ge = raw.astype(jnp.float32) >= thr[0][None, :]
+            h = jnp.where(flip[0][None, :] != 0, ~ge, ge).astype(jnp.int32)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# The kernel: one grid cell == one slot block through the whole hop
+# ---------------------------------------------------------------------------
+
+def _n_fc_params(fc_raw: tuple[bool, ...]) -> int:
+    return sum(1 if r else 3 for r in fc_raw)
+
+
+def _megakernel(
+    *refs, geoms: tuple[StageGeom, ...], emit: bool, finalize_only: bool,
+    fc_raw: tuple[bool, ...],
+):
+    """refs = [audio, mask,] tails(tail>0)*, pends(phase>0)*, gap,
+    (w, thr, flip) per stage, fc params (emit/finalize) | outputs | ping,
+    pong.  Outputs: tails*, pends*, gap [, logits] (finalize: logits only).
+    """
+    ns = len(geoms)
+    n_tail = sum(1 for g in geoms if g.tail)
+    n_pend = sum(1 for g in geoms if g.phase)
+    with_fc = emit or finalize_only
+    pos = 0
+    if not finalize_only:
+        audio_ref, mask_ref = refs[0], refs[1]
+        pos = 2
+    tail_refs = refs[pos : pos + n_tail]
+    pos += n_tail
+    pend_refs = refs[pos : pos + n_pend]
+    pos += n_pend
+    gap_ref = refs[pos]
+    pos += 1
+    stage_refs = refs[pos : pos + 3 * ns]
+    pos += 3 * ns
+    n_fcp = _n_fc_params(fc_raw) if with_fc else 0
+    fc_refs = refs[pos : pos + n_fcp]
+    pos += n_fcp
+    out_refs = refs[pos:-2]
+    ping_ref, pong_ref = refs[-2], refs[-1]
+
+    bb = gap_ref.shape[0]
+    gap = gap_ref[...]
+    ti = pi = 0
+    tails, pends = [], []
+    for g in geoms:
+        if g.tail:
+            tails.append(tail_refs[ti][...])
+            ti += 1
+        else:
+            tails.append(jnp.zeros((bb, 0, g.cin), jnp.int32))
+        if g.phase:
+            pends.append(pend_refs[pi][...])
+            pi += 1
+        else:
+            pends.append(jnp.zeros((bb, 0, g.cout), jnp.int32))
+    ws = [stage_refs[3 * i][...] for i in range(ns)]
+    thrs = [stage_refs[3 * i + 1][...] for i in range(ns)]
+    flips = [stage_refs[3 * i + 2][...] for i in range(ns)]
+    fc_params = [r[...] for r in fc_refs]
+    pp = _PingPong(ping_ref, pong_ref)
+
+    if finalize_only:
+        gap_f = _flush_cascade(geoms, tails, pends, gap, ws, thrs, flips, pp)
+        out_refs[0][...] = _classifier_val(gap_f, fc_params, fc_raw)
+        return
+
+    cur, new_tails, new_pends = _steady_cascade(
+        geoms, audio_ref[...], tails, pends, ws, thrs, flips, pp
+    )
+    gap2 = jnp.minimum(gap + cur.sum(axis=1, dtype=jnp.int32), 255)
+
+    # masked-slot merge in-kernel: rows whose stream had no full hop keep
+    # their previous state bit-for-bit; the flush below runs on the MERGED
+    # state so every primed slot's logits stay valid (scheduler contract)
+    m = mask_ref[...] != 0  # (bb, 1)
+    m3 = m[:, :, None]
+    merged_tails = [
+        jnp.where(m3, nt, t) if g.tail else t
+        for g, nt, t in zip(geoms, new_tails, tails)
+    ]
+    merged_pends = [
+        jnp.where(m3, np_, p) if g.phase else p
+        for g, np_, p in zip(geoms, new_pends, pends)
+    ]
+    merged_gap = jnp.where(m, gap2, gap)
+
+    oi = 0
+    for g, t in zip(geoms, merged_tails):
+        if g.tail:
+            out_refs[oi][...] = t
+            oi += 1
+    for g, p in zip(geoms, merged_pends):
+        if g.phase:
+            out_refs[oi][...] = p
+            oi += 1
+    out_refs[oi][...] = merged_gap
+    oi += 1
+    if emit:
+        gap_f = _flush_cascade(
+            geoms, merged_tails, merged_pends, merged_gap,
+            ws, thrs, flips, pp,
+        )
+        out_refs[oi][...] = _classifier_val(gap_f, fc_params, fc_raw)
+
+
+# ---------------------------------------------------------------------------
+# Packed entry points (ops.py wraps these with padding + shard_map)
+# ---------------------------------------------------------------------------
+
+def _block_arg(specs, args, x, bb, replicated):
+    nd = x.ndim
+    if replicated:
+        specs.append(pl.BlockSpec(x.shape, lambda s, _n=nd: (0,) * _n))
+    else:
+        specs.append(
+            pl.BlockSpec(
+                (bb,) + x.shape[1:], lambda s, _n=nd: (s,) + (0,) * (_n - 1)
+            )
+        )
+    args.append(x)
+
+
+def _stage_params(specs, args, ws, thrs, flips, bb):
+    for w, t, f in zip(ws, thrs, flips):
+        _block_arg(specs, args, w, bb, True)
+        _block_arg(specs, args, t, bb, True)
+        _block_arg(specs, args, f, bb, True)
+
+
+def _fc_args(specs, args, fc_ws, fc_thrs, fc_flips, fc_raw, bb):
+    for j, raw_out in enumerate(fc_raw):
+        _block_arg(specs, args, fc_ws[j], bb, True)
+        if not raw_out:
+            _block_arg(specs, args, fc_thrs[j], bb, True)
+            _block_arg(specs, args, fc_flips[j], bb, True)
+
+
+def _n_logits(fc_ws, fc_raw, geoms):
+    return fc_ws[-1].shape[1] if fc_raw else geoms[-1].cout
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("geoms", "emit", "fc_raw", "bb", "interpret"),
+)
+def hop_megakernel_packed(
+    audio: jax.Array,
+    mask: jax.Array,
+    tails: tuple[jax.Array, ...],
+    pendings: tuple[jax.Array, ...],
+    gap: jax.Array,
+    ws: tuple[jax.Array, ...],
+    thrs: tuple[jax.Array, ...],
+    flips: tuple[jax.Array, ...],
+    fc_ws: tuple[jax.Array, ...],
+    fc_thrs: tuple[jax.Array, ...],
+    fc_flips: tuple[jax.Array, ...],
+    *,
+    geoms: tuple[StageGeom, ...],
+    emit: bool,
+    fc_raw: tuple[bool, ...],
+    bb: int = DEFAULT_BB,
+    interpret: bool = True,
+):
+    """One fused hop over a slot-block grid.  ``tails``/``pendings`` carry
+    one entry per stage with ``tail > 0`` / ``phase > 0`` (zero-width state
+    never enters the kernel).  B must divide into ``bb`` blocks (the ops
+    wrapper pads).  Returns ``(tails, pendings, gap[, logits])``.
+    """
+    b = gap.shape[0]
+    bb = min(bb, b)
+    assert b % bb == 0, (b, bb)
+    grid = (b // bb,)
+    specs: list = []
+    args: list = []
+    _block_arg(specs, args, audio.astype(jnp.int32), bb, False)
+    _block_arg(specs, args, mask.astype(jnp.int32).reshape(b, 1), bb, False)
+    for t in tails:
+        _block_arg(specs, args, t, bb, False)
+    for p in pendings:
+        _block_arg(specs, args, p, bb, False)
+    _block_arg(specs, args, gap, bb, False)
+    _stage_params(specs, args, ws, thrs, flips, bb)
+    if emit:
+        _fc_args(specs, args, fc_ws, fc_thrs, fc_flips, fc_raw, bb)
+
+    out_specs: list = []
+    out_shapes: list = []
+
+    def out3(shape):
+        nd = len(shape)
+        out_specs.append(
+            pl.BlockSpec(
+                (bb,) + shape[1:], lambda s, _n=nd: (s,) + (0,) * (_n - 1)
+            )
+        )
+        out_shapes.append(jax.ShapeDtypeStruct(shape, jnp.int32))
+
+    for t in tails:
+        out3(t.shape)
+    for p in pendings:
+        out3(p.shape)
+    out3(gap.shape)
+    if emit:
+        out3((b, _n_logits(fc_ws, fc_raw, geoms)))
+
+    sl, sc = scratch_dims(geoms, emit)
+    out = dispatch.pallas_call(
+        functools.partial(
+            _megakernel, geoms=geoms, emit=emit, finalize_only=False,
+            fc_raw=fc_raw if emit else (),
+        ),
+        grid=grid,
+        in_specs=specs,
+        out_specs=out_specs,
+        out_shape=tuple(out_shapes),
+        scratch_shapes=[
+            _vmem((bb, sl, sc), jnp.int32),
+            _vmem((bb, sl, sc), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*args)
+    nt, npend = len(tails), len(pendings)
+    tails_out = out[:nt]
+    pends_out = out[nt : nt + npend]
+    gap_out = out[nt + npend]
+    if emit:
+        return tails_out, pends_out, gap_out, out[nt + npend + 1]
+    return tails_out, pends_out, gap_out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("geoms", "fc_raw", "bb", "interpret")
+)
+def finalize_megakernel_packed(
+    tails: tuple[jax.Array, ...],
+    pendings: tuple[jax.Array, ...],
+    gap: jax.Array,
+    ws: tuple[jax.Array, ...],
+    thrs: tuple[jax.Array, ...],
+    flips: tuple[jax.Array, ...],
+    fc_ws: tuple[jax.Array, ...],
+    fc_thrs: tuple[jax.Array, ...],
+    fc_flips: tuple[jax.Array, ...],
+    *,
+    geoms: tuple[StageGeom, ...],
+    fc_raw: tuple[bool, ...],
+    bb: int = DEFAULT_BB,
+    interpret: bool = True,
+) -> jax.Array:
+    """Ghost flush + classifier tail alone (hop-boundary peeks): one
+    launch from resident state to logits."""
+    b = gap.shape[0]
+    bb = min(bb, b)
+    assert b % bb == 0, (b, bb)
+    grid = (b // bb,)
+    specs: list = []
+    args: list = []
+    for t in tails:
+        _block_arg(specs, args, t, bb, False)
+    for p in pendings:
+        _block_arg(specs, args, p, bb, False)
+    _block_arg(specs, args, gap, bb, False)
+    _stage_params(specs, args, ws, thrs, flips, bb)
+    _fc_args(specs, args, fc_ws, fc_thrs, fc_flips, fc_raw, bb)
+    n_out = _n_logits(fc_ws, fc_raw, geoms)
+    sl, sc = scratch_dims(geoms, True)
+    return dispatch.pallas_call(
+        functools.partial(
+            _megakernel, geoms=geoms, emit=True, finalize_only=True,
+            fc_raw=fc_raw,
+        ),
+        grid=grid,
+        in_specs=specs,
+        out_specs=[pl.BlockSpec((bb, n_out), lambda s: (s, 0))],
+        out_shape=(jax.ShapeDtypeStruct((b, n_out), jnp.int32),),
+        scratch_shapes=[
+            _vmem((bb, sl, sc), jnp.int32),
+            _vmem((bb, sl, sc), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*args)[0]

@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core import quant
 from repro.kernels import bnn_conv1d as _conv
+from repro.kernels import hop_megakernel as _mega
 from repro.kernels import twm_matmul as _mm
 
 
@@ -188,23 +189,73 @@ def bitserial_conv1d(
     pad: int = 0,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Multi-bit-input conv as `bits` kernel passes (first-layer path).
+    """Multi-bit-input conv in ONE kernel launch (first-layer path).
 
-    Spatial padding uses the offset code (see kernels/ref.py)."""
-    acc = None
+    The ``<< b`` plane accumulation runs inside the kernel
+    (``bnn_bitserial_step_packed``) instead of as ``bits`` separate
+    dispatches with HBM-resident partials.  Spatial padding uses the
+    offset code (see kernels/ref.py)."""
+    return bitserial_conv1d_batched(
+        x_u[None], w_t, bits=bits, offset=offset, stride=stride, pad=pad,
+        interpret=interpret,
+    )[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "offset", "stride", "pad", "interpret"),
+)
+def bitserial_conv1d_batched(
+    x_u: jax.Array,
+    w_t: jax.Array,
+    *,
+    bits: int,
+    offset: int = 0,
+    stride: int = 1,
+    pad: int = 0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched multi-bit-input raw conv, all bit planes in one launch.
+
+    x_u (B, L, Cin) integer codes in [0, 2^bits); w_t (K, Cin, Cout).
+    Returns (B, L_out, Cout) int32 raw popcount diff with the offset code
+    already folded out (``acc - offset * sum(w)``).  The per-plane views
+    are packed host-side; the kernel loops planes x taps with the weight
+    planes fetched into VMEM once (paper §II-F bit-serial scheduling).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    b, l, cin = x_u.shape
+    k, cin2, cout = w_t.shape
+    assert cin == cin2, (cin, cin2)
     x_u = x_u.astype(jnp.uint32)
     if pad:
-        x_u = jnp.pad(x_u, ((pad, pad), (0, 0)), constant_values=offset)
-        pad = 0
-    for b in range(bits):
-        plane = ((x_u >> b) & 1).astype(jnp.uint32)
-        d = bnn_conv1d(
-            plane, w_t, stride=stride, pad=pad, mode="raw", interpret=interpret
+        x_u = jnp.pad(
+            x_u, ((0, 0), (pad, pad), (0, 0)), constant_values=offset
         )
-        acc = d * (1 << b) if acc is None else acc + d * (1 << b)
+    l_out = (l + 2 * pad - k) // stride + 1
+    planes = jnp.stack(
+        [(x_u >> bi) & 1 for bi in range(bits)], axis=1
+    )  # (B, bits, L_pad, Cin)
+    xq = pack_activations(planes)  # (B, bits, L_pad, Cw)
+    span = (l_out - 1) * stride + 1
+    taps = [xq[:, :, t : t + span : stride] for t in range(k)]
+    xs = jnp.stack(taps, axis=2)  # (B, bits, K, L_out, Cw)
+    wp, wn = pack_weight_planes(w_t)  # (K, Cw, Cout)
+
+    bb = _pick_block(b, _conv.DEFAULT_BB)
+    bn = _pick_block(cout, _conv.DEFAULT_BN)
+    bl = _pick_block(l_out, _conv.DEFAULT_BL)
+    xs = _pad_axis(xs, bb, 0)
+    xs = _pad_axis(xs, bl, 3)
+    wp = _pad_axis(wp, bn, 2)
+    wn = _pad_axis(wn, bn, 2)
+    out = _conv.bnn_bitserial_step_packed(
+        xs, wp, wn, bits=bits, bb=bb, bl=bl, bn=bn, interpret=interpret
+    )
+    acc = out[:b, :l_out, :cout]
     if offset:
         wsum = jnp.sum(w_t.astype(jnp.int32), axis=(0, 1))
-        acc = acc - offset * wsum[None, :]
+        acc = acc - offset * wsum[None, None, :]
     return acc
 
 
@@ -339,6 +390,252 @@ def bnn_conv1d_batched_sharded(
         fn, mesh=mesh, in_specs=(bspec, rep), out_specs=bspec,
         check_rep=False,
     )(x_bits, w_t)
+
+
+def bitserial_conv1d_batched_sharded(
+    x_u: jax.Array,
+    w_t: jax.Array,
+    *,
+    mesh=None,
+    bits: int,
+    offset: int = 0,
+    stride: int = 1,
+    pad: int = 0,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``bitserial_conv1d_batched`` with the batch axis sharded over
+    ``mesh`` (weights replicated, one launch per shard)."""
+    kw = dict(bits=bits, offset=offset, stride=stride, pad=pad,
+              interpret=interpret)
+    if mesh is None or _data_size(mesh) == 1:
+        return bitserial_conv1d_batched(x_u, w_t, **kw)
+    bspec, rep = _batch_spec(mesh)
+    fn = lambda x, w: bitserial_conv1d_batched(x, w, **kw)
+    return _shard_map()(
+        fn, mesh=mesh, in_specs=(bspec, rep), out_specs=bspec,
+        check_rep=False,
+    )(x_u, w_t)
+
+
+# ---------------------------------------------------------------------------
+# Hop megakernel entry points (repro.stream fused hop)
+# ---------------------------------------------------------------------------
+
+def _mega_prep(stages, thrs, flips, fc_thrs, fc_flips):
+    geoms = tuple(_mega.stage_geom(st) for st in stages)
+    thr_p = tuple(
+        jnp.asarray(t, jnp.float32).reshape(1, -1) for t in thrs
+    )
+    flip_p = tuple(
+        jnp.asarray(f).astype(jnp.int32).reshape(1, -1) for f in flips
+    )
+    fct_p = tuple(
+        jnp.asarray(t, jnp.float32).reshape(1, -1) for t in fc_thrs
+    )
+    fcf_p = tuple(
+        jnp.asarray(f).astype(jnp.int32).reshape(1, -1) for f in fc_flips
+    )
+    return geoms, thr_p, flip_p, fct_p, fcf_p
+
+
+def hop_megakernel(
+    audio: jax.Array,
+    mask: jax.Array,
+    tails: tuple[jax.Array, ...],
+    pendings: tuple[jax.Array, ...],
+    gap: jax.Array,
+    ws: tuple[jax.Array, ...],
+    thrs: tuple[jax.Array, ...],
+    flips: tuple[jax.Array, ...],
+    fc_ws: tuple[jax.Array, ...] = (),
+    fc_thrs: tuple[jax.Array, ...] = (),
+    fc_flips: tuple[jax.Array, ...] = (),
+    *,
+    stages,
+    emit: bool,
+    fc_raw: tuple[bool, ...] = (),
+    bb: int | None = None,
+    interpret: bool | None = None,
+):
+    """One fused launch for a whole streaming hop (single device / shard).
+
+    audio (B, hop, Cin0) codes; mask (B,) advance flags; tails/pendings
+    one per conv stage (zero-width entries pass through untouched); gap
+    (B, C) counts.  ``stages`` is the plan's ConvStage tuple.  Returns
+    ``(tails, pendings, gap)`` plus int32 logits when ``emit`` (the ghost
+    flush + classifier ride in the SAME launch).  Bit-exact with the
+    per-stage path — kernels/hop_megakernel.py is the contract.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    geoms, thr_p, flip_p, fct_p, fcf_p = _mega_prep(
+        stages, thrs, flips, fc_thrs, fc_flips
+    )
+    b = gap.shape[0]
+    bb = _mega.DEFAULT_BB if bb is None else bb
+    bb = min(bb, b)
+    pad_b = _round_up(b, bb) - b
+    nz_t = [i for i, g in enumerate(geoms) if g.tail]
+    nz_p = [i for i, g in enumerate(geoms) if g.phase]
+    t_in = [jnp.asarray(tails[i], jnp.int32) for i in nz_t]
+    p_in = [jnp.asarray(pendings[i], jnp.int32) for i in nz_p]
+    audio = jnp.asarray(audio, jnp.int32)
+    gap = jnp.asarray(gap, jnp.int32)
+    if pad_b:
+        padb = lambda x: jnp.pad(  # noqa: E731
+            x, ((0, pad_b),) + ((0, 0),) * (x.ndim - 1)
+        )
+        audio, gap = padb(audio), padb(gap)
+        mask = jnp.pad(mask.astype(jnp.int32), ((0, pad_b),))
+        t_in = [padb(t) for t in t_in]
+        p_in = [padb(p) for p in p_in]
+    out = _mega.hop_megakernel_packed(
+        audio, mask, tuple(t_in), tuple(p_in), gap,
+        tuple(jnp.asarray(w, jnp.int32) for w in ws), thr_p, flip_p,
+        tuple(jnp.asarray(w, jnp.int32) for w in fc_ws), fct_p, fcf_p,
+        geoms=geoms, emit=emit, fc_raw=tuple(fc_raw), bb=bb,
+        interpret=interpret,
+    )
+    unpad = (lambda x: x[:b]) if pad_b else (lambda x: x)
+    tails_out = list(tails)
+    for j, i in enumerate(nz_t):
+        tails_out[i] = unpad(out[0][j])
+    pends_out = list(pendings)
+    for j, i in enumerate(nz_p):
+        pends_out[i] = unpad(out[1][j])
+    gap_out = unpad(out[2])
+    if emit:
+        return tuple(tails_out), tuple(pends_out), gap_out, unpad(out[3])
+    return tuple(tails_out), tuple(pends_out), gap_out
+
+
+def hop_megakernel_sharded(
+    audio: jax.Array,
+    mask: jax.Array,
+    tails: tuple[jax.Array, ...],
+    pendings: tuple[jax.Array, ...],
+    gap: jax.Array,
+    ws: tuple[jax.Array, ...],
+    thrs: tuple[jax.Array, ...],
+    flips: tuple[jax.Array, ...],
+    fc_ws: tuple[jax.Array, ...] = (),
+    fc_thrs: tuple[jax.Array, ...] = (),
+    fc_flips: tuple[jax.Array, ...] = (),
+    *,
+    mesh=None,
+    stages,
+    emit: bool,
+    fc_raw: tuple[bool, ...] = (),
+    bb: int | None = None,
+    interpret: bool | None = None,
+):
+    """``hop_megakernel`` with per-slot state sharded over ``mesh``: each
+    shard runs ONE fused launch on its local slot rows with replicated
+    weights — the per-hop dispatch count is 1 per shard, emit included."""
+    kw = dict(stages=stages, emit=emit, fc_raw=fc_raw, bb=bb,
+              interpret=interpret)
+    if mesh is None or _data_size(mesh) == 1:
+        return hop_megakernel(audio, mask, tails, pendings, gap, ws, thrs,
+                              flips, fc_ws, fc_thrs, fc_flips, **kw)
+    bspec, rep = _batch_spec(mesh)
+    nt, npd, ns, nf = len(tails), len(pendings), len(ws), len(fc_ws)
+    fn = lambda a, m, t, p, g, w, th, fl, fw, ft, ff: hop_megakernel(
+        a, m, t, p, g, w, th, fl, fw, ft, ff, **kw
+    )
+    out_specs = ((bspec,) * nt, (bspec,) * npd, bspec)
+    if emit:
+        out_specs = out_specs + (bspec,)
+    return _shard_map()(
+        fn, mesh=mesh,
+        in_specs=(bspec, bspec, (bspec,) * nt, (bspec,) * npd, bspec,
+                  (rep,) * ns, (rep,) * ns, (rep,) * ns,
+                  (rep,) * nf, (rep,) * nf, (rep,) * nf),
+        out_specs=out_specs, check_rep=False,
+    )(audio, mask, tuple(tails), tuple(pendings), gap, tuple(ws),
+      tuple(thrs), tuple(flips), tuple(fc_ws), tuple(fc_thrs),
+      tuple(fc_flips))
+
+
+def finalize_megakernel(
+    tails: tuple[jax.Array, ...],
+    pendings: tuple[jax.Array, ...],
+    gap: jax.Array,
+    ws: tuple[jax.Array, ...],
+    thrs: tuple[jax.Array, ...],
+    flips: tuple[jax.Array, ...],
+    fc_ws: tuple[jax.Array, ...],
+    fc_thrs: tuple[jax.Array, ...],
+    fc_flips: tuple[jax.Array, ...],
+    *,
+    stages,
+    fc_raw: tuple[bool, ...],
+    bb: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Standalone ghost-flush + classifier launch (hop-boundary peeks)."""
+    interpret = default_interpret() if interpret is None else interpret
+    geoms, thr_p, flip_p, fct_p, fcf_p = _mega_prep(
+        stages, thrs, flips, fc_thrs, fc_flips
+    )
+    b = gap.shape[0]
+    bb = _mega.DEFAULT_BB if bb is None else bb
+    bb = min(bb, b)
+    pad_b = _round_up(b, bb) - b
+    t_in = [jnp.asarray(tails[i], jnp.int32)
+            for i, g in enumerate(geoms) if g.tail]
+    p_in = [jnp.asarray(pendings[i], jnp.int32)
+            for i, g in enumerate(geoms) if g.phase]
+    gap = jnp.asarray(gap, jnp.int32)
+    if pad_b:
+        padb = lambda x: jnp.pad(  # noqa: E731
+            x, ((0, pad_b),) + ((0, 0),) * (x.ndim - 1)
+        )
+        gap = padb(gap)
+        t_in = [padb(t) for t in t_in]
+        p_in = [padb(p) for p in p_in]
+    out = _mega.finalize_megakernel_packed(
+        tuple(t_in), tuple(p_in), gap,
+        tuple(jnp.asarray(w, jnp.int32) for w in ws), thr_p, flip_p,
+        tuple(jnp.asarray(w, jnp.int32) for w in fc_ws), fct_p, fcf_p,
+        geoms=geoms, fc_raw=tuple(fc_raw), bb=bb, interpret=interpret,
+    )
+    return out[:b] if pad_b else out
+
+
+def finalize_megakernel_sharded(
+    tails: tuple[jax.Array, ...],
+    pendings: tuple[jax.Array, ...],
+    gap: jax.Array,
+    ws: tuple[jax.Array, ...],
+    thrs: tuple[jax.Array, ...],
+    flips: tuple[jax.Array, ...],
+    fc_ws: tuple[jax.Array, ...],
+    fc_thrs: tuple[jax.Array, ...],
+    fc_flips: tuple[jax.Array, ...],
+    *,
+    mesh=None,
+    stages,
+    fc_raw: tuple[bool, ...],
+    bb: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """``finalize_megakernel`` over a mesh-sharded slot pool."""
+    kw = dict(stages=stages, fc_raw=fc_raw, bb=bb, interpret=interpret)
+    if mesh is None or _data_size(mesh) == 1:
+        return finalize_megakernel(tails, pendings, gap, ws, thrs, flips,
+                                   fc_ws, fc_thrs, fc_flips, **kw)
+    bspec, rep = _batch_spec(mesh)
+    nt, npd, ns, nf = len(tails), len(pendings), len(ws), len(fc_ws)
+    fn = lambda t, p, g, w, th, fl, fw, ft, ff: finalize_megakernel(
+        t, p, g, w, th, fl, fw, ft, ff, **kw
+    )
+    return _shard_map()(
+        fn, mesh=mesh,
+        in_specs=((bspec,) * nt, (bspec,) * npd, bspec,
+                  (rep,) * ns, (rep,) * ns, (rep,) * ns,
+                  (rep,) * nf, (rep,) * nf, (rep,) * nf),
+        out_specs=bspec, check_rep=False,
+    )(tuple(tails), tuple(pendings), gap, tuple(ws), tuple(thrs),
+      tuple(flips), tuple(fc_ws), tuple(fc_thrs), tuple(fc_flips))
 
 
 @jax.jit

@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import dispatch
+
 DEFAULT_BM = 256
 DEFAULT_BN = 256
 
@@ -96,7 +98,7 @@ def twm_matmul(
 
     if mode == "sa":
         assert thr is not None and flip is not None
-        return pl.pallas_call(
+        return dispatch.pallas_call(
             functools.partial(_kernel_sa, kw=kw),
             grid=grid,
             in_specs=[x_spec, w_spec, w_spec, v_spec, v_spec],
@@ -105,7 +107,7 @@ def twm_matmul(
             interpret=interpret,
         )(x_packed, wp, wn, thr.reshape(1, n), flip.astype(jnp.int32).reshape(1, n))
     elif mode == "raw":
-        return pl.pallas_call(
+        return dispatch.pallas_call(
             functools.partial(_kernel_raw, kw=kw),
             grid=grid,
             in_specs=[x_spec, w_spec, w_spec],
@@ -156,7 +158,7 @@ def twm_matmul_mxu(
     bn = min(bn, n)
     assert m % bm == 0 and n % bn == 0
     grid = (m // bm, n // bn)
-    return pl.pallas_call(
+    return dispatch.pallas_call(
         _kernel_mxu,
         grid=grid,
         in_specs=[

@@ -245,6 +245,10 @@ class StreamMetrics:
         self._tail_ledger = plan_tail_ledger(plan)
         self.ledger = EnergyLedger()
         self.finalizations = 0
+        # per-shard device launches: running total + last hop's static
+        # per-hop figure (``_BatchedModel.dispatches_per_hop``)
+        self.device_dispatches_total = 0
+        self._dispatches_per_hop = 0
         self._t0 = time.perf_counter()
 
     def _hist(self, name: str) -> Histogram:
@@ -282,7 +286,8 @@ class StreamMetrics:
                 shard_counts: list[int] | None = None,
                 finalized: bool = True,
                 dispatch_s: float = 0.0, device_s: float = 0.0,
-                detector_s: float = 0.0, hidden_s: float = 0.0) -> None:
+                detector_s: float = 0.0, hidden_s: float = 0.0,
+                dispatches: int = 0) -> None:
         """Record one batched hop: ``n_ready`` streams advanced in
         ``wall_s`` seconds of which ``host_pack_s`` was host-side batch
         packing; ``dispatch_s``/``device_s``/``detector_s`` are the
@@ -291,9 +296,12 @@ class StreamMetrics:
         ``hidden_s`` is the portion of this hop's host work (pack /
         dispatch / deferred fold) that ran while an earlier or later hop
         was executing on the device — zero on the synchronous path,
-        reported by the async plane's pipelined dispatch.  Aggregate-only
-        — the hot path never walks per-stream counter objects (that was
-        the pre-arena serial floor)."""
+        reported by the async plane's pipelined dispatch.  ``dispatches``
+        is the per-shard device-launch (``pallas_call``) count for this
+        hop — a static plan+backend figure (``dispatches_per_hop``), 0
+        for plain-XLA backends.  Aggregate-only — the hot path never
+        walks per-stream counter objects (that was the pre-arena serial
+        floor)."""
         if shard_counts is None:
             # only unambiguous without a mesh; sharded callers must say
             # which shard advanced what or shard_summary would lie
@@ -310,6 +318,8 @@ class StreamMetrics:
             self._rec(self._phase_res[p], self._phase_hist[p], v)
             pt[p] += v
         self.hidden_total_s += hidden_s
+        self.device_dispatches_total += dispatches
+        self._dispatches_per_hop = dispatches
         self.steps += 1
         self.wall_total_s += wall_s
         self.stream_hops_total += n_ready
@@ -380,6 +390,7 @@ class StreamMetrics:
             h.reset()
         self._phase_total = dict.fromkeys(PHASES, 0.0)
         self.hidden_total_s = 0.0
+        self.device_dispatches_total = 0
         self.steps = 0
         self.wall_total_s = 0.0
         self.stream_hops_total = 0
@@ -448,6 +459,10 @@ class StreamMetrics:
             "rows_migrated": float(self.rows_migrated),
             "samples_pushed": float(self.samples_pushed),
             "chunks_pushed": float(self.chunks_pushed),
+            # per-shard device-launch accounting: last hop's static
+            # pallas_call count and the cumulative total (0 under jnp)
+            "device_dispatches_per_hop": float(self._dispatches_per_hop),
+            "device_dispatches_total": float(self.device_dispatches_total),
         }
 
     def phase_summary(self) -> dict[str, dict[str, float]]:

@@ -225,17 +225,15 @@ class _BatchedModel:
         """(B, len, Cin) window -> (B, n_conv, Cout) raw popcount diff."""
         st = self.plan.convs[i]
         if st.in_bits > 1:
-            # bit-serial first layer; offset folds out after accumulation
+            # bit-serial first layer; offset folds out after accumulation.
+            # ONE launch accumulates every bit plane in-kernel (PR 8) —
+            # the fallback path no longer pays per-plane dispatch.
             if self.backend == "pallas":
-                acc = None
-                for b in range(st.in_bits):
-                    plane = ((window >> b) & 1).astype(jnp.uint32)
-                    d = ops.bnn_conv1d_batched_sharded(
-                        plane, self._w[i], mesh=self.mesh, stride=st.stride,
-                        pad=0, mode="raw", interpret=self.interpret,
-                    )
-                    acc = d * (1 << b) if acc is None else acc + d * (1 << b)
-                return acc - st.in_offset * self._wsum[i][None, None, :]
+                return ops.bitserial_conv1d_batched_sharded(
+                    window.astype(jnp.uint32), self._w[i], mesh=self.mesh,
+                    bits=st.in_bits, offset=st.in_offset, stride=st.stride,
+                    pad=0, interpret=self.interpret,
+                )
             xi = window.astype(jnp.int32) - st.in_offset
             taps = [
                 xi[:, t : t + (n_conv - 1) * st.stride + 1 : st.stride]
@@ -270,6 +268,30 @@ class _BatchedModel:
         returns per-slot finalized logits + posteriors.  Shapes static."""
         plan = self.plan
         stages = plan.convs
+        if self.backend == "megakernel":
+            # the whole cascade — bit-serial layer 0, SA, pool phases,
+            # tail/pending carry, GAP, mask merge, and (on emit) the ghost
+            # flush + classifier — is ONE fused launch per shard; only the
+            # hop input and the updated slot state touch HBM
+            audio = audio.reshape(
+                audio.shape[0], plan.hop_samples, stages[0].cin
+            )
+            out = ops.hop_megakernel_sharded(
+                audio, mask.astype(jnp.int32), tuple(tails), tuple(pendings),
+                gap, tuple(self._w), tuple(self._thr), tuple(self._flip),
+                self._fc_w, self._fc_thr, self._fc_flip,
+                mesh=self.mesh, stages=stages, emit=emit,
+                fc_raw=self._fc_raw, interpret=self.interpret,
+            )
+            new_tails = tuple(self._pin(t) for t in out[0])
+            new_pendings = tuple(self._pin(p) for p in out[1])
+            gap2 = self._pin(out[2])
+            state = new_tails, new_pendings, gap2
+            if not emit:
+                return state
+            logits = self._pin(out[3])
+            post = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+            return (*state, logits, post)
         cur = audio.reshape(audio.shape[0], plan.hop_samples, stages[0].cin)
         new_tails, new_pendings = [], []
         for i, st in enumerate(stages):
@@ -328,6 +350,16 @@ class _BatchedModel:
         stack.  Bit-exact with ``StreamState.peek_logits()`` on an empty
         inbox (tests/test_stream.py).
         """
+        if self.backend == "megakernel":
+            logits = self._pin(ops.finalize_megakernel_sharded(
+                tuple(tails), tuple(pendings), gap,
+                tuple(self._w), tuple(self._thr), tuple(self._flip),
+                self._fc_w, self._fc_thr, self._fc_flip,
+                mesh=self.mesh, stages=self.plan.convs,
+                fc_raw=self._fc_raw, interpret=self.interpret,
+            ))
+            post = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+            return logits, post
         stages = self.plan.convs
         B = gap.shape[0]
         cur = None  # frames flowing down from the layer above's flush
@@ -377,6 +409,28 @@ class _BatchedModel:
                 ).astype(jnp.int32)
         return h
 
+    def dispatches_per_hop(self, emit: bool) -> int:
+        """Static per-shard ``pallas_call`` count for one hop.
+
+        Derived from the plan + backend alone; tests/test_megakernel.py
+        asserts it equals the count actually traced through
+        ``kernels.dispatch``, so this figure (surfaced per hop by
+        ``StreamMetrics`` and BENCH_stream.json) cannot drift from the
+        kernels launched.  ``jnp`` lowers to plain XLA: 0 by definition.
+        """
+        if self.backend == "jnp":
+            return 0
+        if self.backend == "megakernel":
+            return 1  # emit's flush + classifier ride the same launch
+        # per-stage pallas: one launch per conv stage (the bit-serial
+        # first layer is a single plane-accumulating launch since PR 8),
+        # plus — on emit — the ghost flush's conv launches and the fused
+        # classifier tail
+        n = len(self.plan.convs)
+        if emit:
+            n += sum(1 for st in self.plan.convs if st.flush_conv > 0) + 1
+        return n
+
 
 class StreamScheduler:
     """Continuous batching over an elastic pool of stream slots.
@@ -421,7 +475,7 @@ class StreamScheduler:
         clock=time.perf_counter,
         donate_buffers: bool = False,
     ) -> None:
-        assert backend in ("jnp", "pallas"), backend
+        assert backend in ("jnp", "pallas", "megakernel"), backend
         # every hop stamp (metrics, trace spans) reads this clock, so the
         # concurrency suite can drive sync and async schedulers with one
         # controllable fake clock and compare their traces structurally
@@ -949,12 +1003,14 @@ class StreamScheduler:
             # a later hop is still executing while this fold runs, so the
             # detector phase is hidden under device compute
             hidden_s += t_detector - t_device
+        n_disp = self._model.dispatches_per_hop(self.emit_logits)
         self.metrics.on_step(
             ready_slots.size, self.plan.frames_per_hop,
             t_detector - t0, host_pack_s=t_pack - t0,
             shard_counts=shard_counts.tolist(), finalized=self.emit_logits,
             dispatch_s=t_dispatch - t_pack, device_s=t_device - t_dispatch,
             detector_s=t_detector - t_device, hidden_s=hidden_s,
+            dispatches=n_disp,
         )
         # fold the arena's push-side counters into the metrics at the hop
         # boundary: two scalar reads, so neither the push path nor this
@@ -972,7 +1028,8 @@ class StreamScheduler:
         self.obs.trace.add_batch((
             ("pack", t0, t_pack - t0, {"n": n_ready}),
             ("dispatch", t_pack, t_dispatch - t_pack, {}),
-            ("device", t_dispatch, t_device - t_dispatch, {}),
+            ("device", t_dispatch, t_device - t_dispatch,
+             {"dispatches": n_disp}),
             ("detector", t_device, t_detector - t_device, {}),
             ("push_fold", t_detector, t_end - t_detector, {}),
             ("hop", t0, t_end - t0, {"n": n_ready}),
