@@ -170,8 +170,17 @@ def _batched_kernel(
     o_ref[...] = y
 
 
-def _batched_kernel_raw(xs_ref, wp_ref, wn_ref, o_ref, *, k: int, cw: int):
-    o_ref[...] = _batched_conv_tile(xs_ref[...], wp_ref[...], wn_ref[...], k, cw)
+def _batched_kernel_raw(*refs, k: int, cw: int, pooled: bool = False):
+    """refs = xs, wp, wn, [model (pooled),] out.  ``pooled``: wp/wn carry a
+    leading tenant axis (M, K, Cw, Cout); the block's planes are gathered
+    once per grid cell (slot blocks are single-tenant by placement)."""
+    xs_ref, wp_ref, wn_ref, o_ref = refs[0], refs[1], refs[2], refs[-1]
+    wp, wn = wp_ref[...], wn_ref[...]
+    if pooled:
+        midx = refs[3][0, 0]
+        wp = jax.lax.dynamic_index_in_dim(wp, midx, 0, keepdims=False)
+        wn = jax.lax.dynamic_index_in_dim(wn, midx, 0, keepdims=False)
+    o_ref[...] = _batched_conv_tile(xs_ref[...], wp, wn, k, cw)
 
 
 @functools.partial(
@@ -183,6 +192,7 @@ def bnn_conv1d_step_packed(
     wn: jax.Array,
     thr: jax.Array | None = None,
     flip: jax.Array | None = None,
+    model_idx: jax.Array | None = None,
     *,
     pool: int = 1,
     bb: int = DEFAULT_BB,
@@ -194,11 +204,19 @@ def bnn_conv1d_step_packed(
     """Batched fused conv1d step on pre-shifted packed views.
 
     xs : (B, K, L_out, Cw) uint32 — per-stream tap-shifted packed views
-    wp/wn : (K, Cw, Cout) uint32  — shared across the batch axis
+    wp/wn : (K, Cw, Cout) uint32  — shared across the batch axis; with
+        ``model_idx`` (``(B // bb, 1)`` int32, one tenant per slot block)
+        a pooled (M, K, Cw, Cout) stack, gathered per grid cell (raw mode
+        only — the SA affine runs outside the raw path)
     Output: (B, L_out / pool, Cout) uint32 bits (or (B, L_out, Cout) int32).
     """
+    pooled = model_idx is not None
     b, k, l_out, cw = xs.shape
-    k2, cw2, n = wp.shape
+    if pooled:
+        assert mode == "raw", "weight pooling is a raw-conv path feature"
+        m, k2, cw2, n = wp.shape
+    else:
+        k2, cw2, n = wp.shape
     assert k == k2 and cw == cw2 and wn.shape == wp.shape
     bb = min(bb, b)
     bl = min(bl, l_out)
@@ -208,8 +226,12 @@ def bnn_conv1d_step_packed(
     grid = (b // bb, l_out // bl, n // bn)
 
     xs_spec = pl.BlockSpec((bb, k, bl, cw), lambda s, i, j: (s, 0, i, 0))
-    w_spec = pl.BlockSpec((k, cw, bn), lambda s, i, j: (0, 0, j))
+    if pooled:
+        w_spec = pl.BlockSpec((m, k, cw, bn), lambda s, i, j: (0, 0, 0, j))
+    else:
+        w_spec = pl.BlockSpec((k, cw, bn), lambda s, i, j: (0, 0, j))
     v_spec = pl.BlockSpec((1, bn), lambda s, i, j: (0, j))
+    mi_spec = pl.BlockSpec((1, 1), lambda s, i, j: (s, 0))
 
     if mode == "sa":
         assert thr is not None and flip is not None
@@ -225,14 +247,19 @@ def bnn_conv1d_step_packed(
     elif mode == "raw":
         assert pool == 1, "raw mode has no SA output to pool"
         o_spec = pl.BlockSpec((bb, bl, bn), lambda s, i, j: (s, i, j))
+        in_specs = [xs_spec, w_spec, w_spec]
+        args = [xs, wp, wn]
+        if pooled:
+            in_specs.append(mi_spec)
+            args.append(model_idx.astype(jnp.int32))
         return dispatch.pallas_call(
-            functools.partial(_batched_kernel_raw, k=k, cw=cw),
+            functools.partial(_batched_kernel_raw, k=k, cw=cw, pooled=pooled),
             grid=grid,
-            in_specs=[xs_spec, w_spec, w_spec],
+            in_specs=in_specs,
             out_specs=o_spec,
             out_shape=jax.ShapeDtypeStruct((b, l_out, n), jnp.int32),
             interpret=interpret,
-        )(xs, wp, wn)
+        )(*args)
     raise ValueError(f"mode {mode!r}")
 
 
@@ -248,15 +275,26 @@ def bnn_conv1d_step_packed(
 # ---------------------------------------------------------------------------
 
 
-def _tail_kernel(*refs, n_fc: int, out_raw: tuple[bool, ...]):
-    """refs = [gap, (w, [thr, flip])* , out].  One cell: bb streams."""
+def _tail_kernel(*refs, n_fc: int, out_raw: tuple[bool, ...],
+                 pooled: bool = False):
+    """refs = [gap, [model (pooled),] (w, [thr, flip])* , out].  One cell:
+    bb streams.  ``pooled``: fc params carry a leading tenant axis,
+    gathered once per cell."""
     gap_ref, o_ref = refs[0], refs[-1]
     params = refs[1:-1]
+    if pooled:
+        midx = params[0][0, 0]
+        params = [
+            jax.lax.dynamic_index_in_dim(r[...], midx, 0, keepdims=False)
+            for r in params[1:]
+        ]
+    else:
+        params = [r[...] for r in params]
     # 8-bit PWB counter ceiling (executor: gap counts saturate at 255)
     h = jnp.minimum(gap_ref[...], 255)
     idx = 0
     for j in range(n_fc):
-        w = params[idx][...]
+        w = params[idx]
         idx += 1
         raw = jax.lax.dot_general(
             h, w, (((1,), (0,)), ((), ())),
@@ -265,8 +303,8 @@ def _tail_kernel(*refs, n_fc: int, out_raw: tuple[bool, ...]):
         if out_raw[j]:
             h = raw
         else:
-            thr = params[idx][...]
-            flip = params[idx + 1][...]
+            thr = params[idx]
+            flip = params[idx + 1]
             idx += 2
             ge = raw.astype(jnp.float32) >= thr[0, :][None, :]
             h = jnp.where(flip[0, :][None, :] != 0, ~ge, ge).astype(jnp.int32)
@@ -279,6 +317,7 @@ def classifier_tail_packed(
     fc_ws: tuple[jax.Array, ...],
     fc_thrs: tuple[jax.Array, ...],
     fc_flips: tuple[jax.Array, ...],
+    model_idx: jax.Array | None = None,
     *,
     out_raw: tuple[bool, ...],
     bb: int = DEFAULT_BB,
@@ -287,30 +326,42 @@ def classifier_tail_packed(
     """Saturate GAP counts and run the whole fc cascade in one kernel.
 
     gap : (B, C) int32 GAP counts (possibly already clamped; idempotent)
-    fc_ws : per-fc (Cin, Cout) int32 ternary weights
-    fc_thrs/fc_flips : per-fc (1, Cout) float32 / int32 SA params (entries
-        for ``out_raw`` layers are present but unused)
+    fc_ws : per-fc (Cin, Cout) int32 ternary weights — or pooled
+        (M, Cin, Cout) stacks when ``model_idx`` (``(B // bb, 1)`` int32,
+        one tenant per slot block) is given
+    fc_thrs/fc_flips : per-fc (1, Cout) (pooled: (M, 1, Cout)) float32 /
+        int32 SA params (entries for ``out_raw`` layers present but unused)
     Output: (B, n_classes) int32 raw logits.
     """
+    pooled = model_idx is not None
     b, c = gap.shape
     n_fc = len(fc_ws)
     assert n_fc and b % bb == 0, (b, bb, n_fc)
-    assert fc_ws[0].shape[0] == c
+    assert fc_ws[0].shape[-2] == c
 
     grid = (b // bb,)
     in_specs = [pl.BlockSpec((bb, c), lambda s: (s, 0))]
     args = [gap]
+    if pooled:
+        in_specs.append(pl.BlockSpec((1, 1), lambda s: (s, 0)))
+        args.append(model_idx.astype(jnp.int32))
+
+    def _rep_spec(x):
+        nd = x.ndim
+        return pl.BlockSpec(x.shape, lambda s, _n=nd: (0,) * _n)
+
     for j, w in enumerate(fc_ws):
-        cin, cout = w.shape
-        in_specs.append(pl.BlockSpec((cin, cout), lambda s: (0, 0)))
+        in_specs.append(_rep_spec(w))
         args.append(w)
         if not out_raw[j]:
-            in_specs.append(pl.BlockSpec((1, cout), lambda s: (0, 0)))
-            in_specs.append(pl.BlockSpec((1, cout), lambda s: (0, 0)))
+            in_specs.append(_rep_spec(fc_thrs[j]))
+            in_specs.append(_rep_spec(fc_flips[j]))
             args.extend([fc_thrs[j], fc_flips[j]])
-    n_out = fc_ws[-1].shape[1]
+    n_out = fc_ws[-1].shape[-1]
     return dispatch.pallas_call(
-        functools.partial(_tail_kernel, n_fc=n_fc, out_raw=out_raw),
+        functools.partial(
+            _tail_kernel, n_fc=n_fc, out_raw=out_raw, pooled=pooled
+        ),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bb, n_out), lambda s: (s, 0)),
@@ -356,11 +407,16 @@ def _batched_bitserial_tile(xs, wp, wn, k: int, cw: int, bits: int):
 
 
 def _batched_kernel_bitserial(
-    xs_ref, wp_ref, wn_ref, o_ref, *, k: int, cw: int, bits: int
+    *refs, k: int, cw: int, bits: int, pooled: bool = False
 ):
-    o_ref[...] = _batched_bitserial_tile(
-        xs_ref[...], wp_ref[...], wn_ref[...], k, cw, bits
-    )
+    """refs = xs, wp, wn, [model (pooled),] out."""
+    xs_ref, wp_ref, wn_ref, o_ref = refs[0], refs[1], refs[2], refs[-1]
+    wp, wn = wp_ref[...], wn_ref[...]
+    if pooled:
+        midx = refs[3][0, 0]
+        wp = jax.lax.dynamic_index_in_dim(wp, midx, 0, keepdims=False)
+        wn = jax.lax.dynamic_index_in_dim(wn, midx, 0, keepdims=False)
+    o_ref[...] = _batched_bitserial_tile(xs_ref[...], wp, wn, k, cw, bits)
 
 
 @functools.partial(
@@ -370,6 +426,7 @@ def bnn_bitserial_step_packed(
     xs: jax.Array,
     wp: jax.Array,
     wn: jax.Array,
+    model_idx: jax.Array | None = None,
     *,
     bits: int,
     bb: int = DEFAULT_BB,
@@ -381,12 +438,18 @@ def bnn_bitserial_step_packed(
 
     xs : (B, bits, K, L_out, Cw) uint32; wp/wn : (K, Cw, Cout) uint32
     shared across batch AND planes (the whole point: one weight fetch for
-    all ``bits`` passes).  Output: (B, L_out, Cout) int32 raw popcount
-    diff already accumulated over planes (offset NOT yet folded).
+    all ``bits`` passes) — or pooled (M, K, Cw, Cout) stacks when
+    ``model_idx`` (``(B // bb, 1)`` int32, one tenant per slot block) is
+    given.  Output: (B, L_out, Cout) int32 raw popcount diff already
+    accumulated over planes (offset NOT yet folded).
     """
+    pooled = model_idx is not None
     b, nbits, k, l_out, cw = xs.shape
     assert nbits == bits, (nbits, bits)
-    k2, cw2, n = wp.shape
+    if pooled:
+        m, k2, cw2, n = wp.shape
+    else:
+        k2, cw2, n = wp.shape
     assert k == k2 and cw == cw2 and wn.shape == wp.shape
     bb = min(bb, b)
     bl = min(bl, l_out)
@@ -398,13 +461,23 @@ def bnn_bitserial_step_packed(
     xs_spec = pl.BlockSpec(
         (bb, bits, k, bl, cw), lambda s, i, j: (s, 0, 0, i, 0)
     )
-    w_spec = pl.BlockSpec((k, cw, bn), lambda s, i, j: (0, 0, j))
+    if pooled:
+        w_spec = pl.BlockSpec((m, k, cw, bn), lambda s, i, j: (0, 0, 0, j))
+    else:
+        w_spec = pl.BlockSpec((k, cw, bn), lambda s, i, j: (0, 0, j))
     o_spec = pl.BlockSpec((bb, bl, bn), lambda s, i, j: (s, i, j))
+    in_specs = [xs_spec, w_spec, w_spec]
+    args = [xs, wp, wn]
+    if pooled:
+        in_specs.append(pl.BlockSpec((1, 1), lambda s, i, j: (s, 0)))
+        args.append(model_idx.astype(jnp.int32))
     return dispatch.pallas_call(
-        functools.partial(_batched_kernel_bitserial, k=k, cw=cw, bits=bits),
+        functools.partial(
+            _batched_kernel_bitserial, k=k, cw=cw, bits=bits, pooled=pooled
+        ),
         grid=grid,
-        in_specs=[xs_spec, w_spec, w_spec],
+        in_specs=in_specs,
         out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((b, l_out, n), jnp.int32),
         interpret=interpret,
-    )(xs, wp, wn)
+    )(*args)

@@ -275,11 +275,18 @@ def _n_fc_params(fc_raw: tuple[bool, ...]) -> int:
 
 def _megakernel(
     *refs, geoms: tuple[StageGeom, ...], emit: bool, finalize_only: bool,
-    fc_raw: tuple[bool, ...],
+    fc_raw: tuple[bool, ...], pooled: bool = False,
 ):
     """refs = [audio, mask,] tails(tail>0)*, pends(phase>0)*, gap,
-    (w, thr, flip) per stage, fc params (emit/finalize) | outputs | ping,
-    pong.  Outputs: tails*, pends*, gap [, logits] (finalize: logits only).
+    [model (pooled),] (w, thr, flip) per stage, fc params (emit/finalize)
+    | outputs | ping, pong.  Outputs: tails*, pends*, gap [, logits]
+    (finalize: logits only).
+
+    ``pooled``: every weight/threshold operand carries a leading tenant
+    axis ``(K, ...)`` and a per-block ``(1, 1)`` int32 model index follows
+    ``gap`` — the block's weight planes are gathered out of the pool ONCE
+    per grid cell (each slot block is single-tenant by placement), so the
+    pool costs one dynamic row index, not K-way compute.
     """
     ns = len(geoms)
     n_tail = sum(1 for g in geoms if g.tail)
@@ -295,6 +302,9 @@ def _megakernel(
     pos += n_pend
     gap_ref = refs[pos]
     pos += 1
+    if pooled:
+        model_ref = refs[pos]
+        pos += 1
     stage_refs = refs[pos : pos + 3 * ns]
     pos += 3 * ns
     n_fcp = _n_fc_params(fc_raw) if with_fc else 0
@@ -322,6 +332,16 @@ def _megakernel(
     thrs = [stage_refs[3 * i + 1][...] for i in range(ns)]
     flips = [stage_refs[3 * i + 2][...] for i in range(ns)]
     fc_params = [r[...] for r in fc_refs]
+    if pooled:
+        midx = model_ref[0, 0]
+
+        def sel(x):
+            return jax.lax.dynamic_index_in_dim(x, midx, 0, keepdims=False)
+
+        ws = [sel(w) for w in ws]
+        thrs = [sel(t) for t in thrs]
+        flips = [sel(f) for f in flips]
+        fc_params = [sel(p) for p in fc_params]
     pp = _PingPong(ping_ref, pong_ref)
 
     if finalize_only:
@@ -401,7 +421,14 @@ def _fc_args(specs, args, fc_ws, fc_thrs, fc_flips, fc_raw, bb):
 
 
 def _n_logits(fc_ws, fc_raw, geoms):
-    return fc_ws[-1].shape[1] if fc_raw else geoms[-1].cout
+    # shape[-1] so a pooled (K, cin, cout) stack reads the same as (cin, cout)
+    return fc_ws[-1].shape[-1] if fc_raw else geoms[-1].cout
+
+
+def _model_arg(specs, args, model_idx, bb):
+    """Per-block model index: (nblocks, 1) int32, one row per grid cell."""
+    specs.append(pl.BlockSpec((1, 1), lambda s: (s, 0)))
+    args.append(model_idx.astype(jnp.int32))
 
 
 @functools.partial(
@@ -420,6 +447,7 @@ def hop_megakernel_packed(
     fc_ws: tuple[jax.Array, ...],
     fc_thrs: tuple[jax.Array, ...],
     fc_flips: tuple[jax.Array, ...],
+    model_idx: jax.Array | None = None,
     *,
     geoms: tuple[StageGeom, ...],
     emit: bool,
@@ -430,12 +458,16 @@ def hop_megakernel_packed(
     """One fused hop over a slot-block grid.  ``tails``/``pendings`` carry
     one entry per stage with ``tail > 0`` / ``phase > 0`` (zero-width state
     never enters the kernel).  B must divide into ``bb`` blocks (the ops
-    wrapper pads).  Returns ``(tails, pendings, gap[, logits])``.
+    wrapper pads).  ``model_idx`` (``(b // bb, 1)`` int32, one tenant per
+    slot block) switches every weight operand to a pooled ``(K, ...)``
+    stack — same grid, same single launch.  Returns
+    ``(tails, pendings, gap[, logits])``.
     """
     b = gap.shape[0]
     bb = min(bb, b)
     assert b % bb == 0, (b, bb)
     grid = (b // bb,)
+    pooled = model_idx is not None
     specs: list = []
     args: list = []
     _block_arg(specs, args, audio.astype(jnp.int32), bb, False)
@@ -445,6 +477,8 @@ def hop_megakernel_packed(
     for p in pendings:
         _block_arg(specs, args, p, bb, False)
     _block_arg(specs, args, gap, bb, False)
+    if pooled:
+        _model_arg(specs, args, model_idx, bb)
     _stage_params(specs, args, ws, thrs, flips, bb)
     if emit:
         _fc_args(specs, args, fc_ws, fc_thrs, fc_flips, fc_raw, bb)
@@ -473,7 +507,7 @@ def hop_megakernel_packed(
     out = dispatch.pallas_call(
         functools.partial(
             _megakernel, geoms=geoms, emit=emit, finalize_only=False,
-            fc_raw=fc_raw if emit else (),
+            fc_raw=fc_raw if emit else (), pooled=pooled,
         ),
         grid=grid,
         in_specs=specs,
@@ -507,6 +541,7 @@ def finalize_megakernel_packed(
     fc_ws: tuple[jax.Array, ...],
     fc_thrs: tuple[jax.Array, ...],
     fc_flips: tuple[jax.Array, ...],
+    model_idx: jax.Array | None = None,
     *,
     geoms: tuple[StageGeom, ...],
     fc_raw: tuple[bool, ...],
@@ -519,6 +554,7 @@ def finalize_megakernel_packed(
     bb = min(bb, b)
     assert b % bb == 0, (b, bb)
     grid = (b // bb,)
+    pooled = model_idx is not None
     specs: list = []
     args: list = []
     for t in tails:
@@ -526,6 +562,8 @@ def finalize_megakernel_packed(
     for p in pendings:
         _block_arg(specs, args, p, bb, False)
     _block_arg(specs, args, gap, bb, False)
+    if pooled:
+        _model_arg(specs, args, model_idx, bb)
     _stage_params(specs, args, ws, thrs, flips, bb)
     _fc_args(specs, args, fc_ws, fc_thrs, fc_flips, fc_raw, bb)
     n_out = _n_logits(fc_ws, fc_raw, geoms)
@@ -533,7 +571,7 @@ def finalize_megakernel_packed(
     return dispatch.pallas_call(
         functools.partial(
             _megakernel, geoms=geoms, emit=True, finalize_only=True,
-            fc_raw=fc_raw,
+            fc_raw=fc_raw, pooled=pooled,
         ),
         grid=grid,
         in_specs=specs,

@@ -203,29 +203,38 @@ def bitserial_conv1d(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "offset", "stride", "pad", "interpret"),
+    static_argnames=("bits", "offset", "stride", "pad", "bb", "interpret"),
 )
 def bitserial_conv1d_batched(
     x_u: jax.Array,
     w_t: jax.Array,
+    model_idx: jax.Array | None = None,
     *,
     bits: int,
     offset: int = 0,
     stride: int = 1,
     pad: int = 0,
+    bb: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Batched multi-bit-input raw conv, all bit planes in one launch.
 
-    x_u (B, L, Cin) integer codes in [0, 2^bits); w_t (K, Cin, Cout).
-    Returns (B, L_out, Cout) int32 raw popcount diff with the offset code
-    already folded out (``acc - offset * sum(w)``).  The per-plane views
-    are packed host-side; the kernel loops planes x taps with the weight
-    planes fetched into VMEM once (paper §II-F bit-serial scheduling).
+    x_u (B, L, Cin) integer codes in [0, 2^bits); w_t (K, Cin, Cout) — or
+    a pooled (M, K, Cin, Cout) stack with ``model_idx`` ((B,) int32 tenant
+    ids, constant per ``bb`` slot block).  Returns (B, L_out, Cout) int32
+    raw popcount diff with the offset code already folded out
+    (``acc - offset * sum(w)``, per tenant when pooled).  The per-plane
+    views are packed host-side; the kernel loops planes x taps with the
+    weight planes fetched into VMEM once (paper §II-F bit-serial
+    scheduling).
     """
     interpret = default_interpret() if interpret is None else interpret
+    pooled = model_idx is not None
     b, l, cin = x_u.shape
-    k, cin2, cout = w_t.shape
+    if pooled:
+        k, cin2, cout = w_t.shape[1:]
+    else:
+        k, cin2, cout = w_t.shape
     assert cin == cin2, (cin, cin2)
     x_u = x_u.astype(jnp.uint32)
     if pad:
@@ -240,22 +249,30 @@ def bitserial_conv1d_batched(
     span = (l_out - 1) * stride + 1
     taps = [xq[:, :, t : t + span : stride] for t in range(k)]
     xs = jnp.stack(taps, axis=2)  # (B, bits, K, L_out, Cw)
-    wp, wn = pack_weight_planes(w_t)  # (K, Cw, Cout)
+    wp, wn = pack_weight_planes(w_t)  # ([M,] K, Cw, Cout)
 
-    bb = _pick_block(b, _conv.DEFAULT_BB)
+    bb = _pick_block(b, _conv.DEFAULT_BB if bb is None else bb)
     bn = _pick_block(cout, _conv.DEFAULT_BN)
     bl = _pick_block(l_out, _conv.DEFAULT_BL)
     xs = _pad_axis(xs, bb, 0)
     xs = _pad_axis(xs, bl, 3)
-    wp = _pad_axis(wp, bn, 2)
-    wn = _pad_axis(wn, bn, 2)
+    wp = _pad_axis(wp, bn, -1)
+    wn = _pad_axis(wn, bn, -1)
+    mi = _block_model_idx(model_idx, b, bb, _round_up(b, bb) - b) \
+        if pooled else None
     out = _conv.bnn_bitserial_step_packed(
-        xs, wp, wn, bits=bits, bb=bb, bl=bl, bn=bn, interpret=interpret
+        xs, wp, wn, mi, bits=bits, bb=bb, bl=bl, bn=bn, interpret=interpret
     )
     acc = out[:b, :l_out, :cout]
     if offset:
-        wsum = jnp.sum(w_t.astype(jnp.int32), axis=(0, 1))
-        acc = acc - offset * wsum[None, None, :]
+        if pooled:
+            wsum = jnp.sum(w_t.astype(jnp.int32), axis=(1, 2))  # (M, Cout)
+            acc = acc - offset * wsum[
+                jnp.asarray(model_idx, jnp.int32)
+            ][:, None, :]
+        else:
+            wsum = jnp.sum(w_t.astype(jnp.int32), axis=(0, 1))
+            acc = acc - offset * wsum[None, None, :]
     return acc
 
 
@@ -264,18 +281,21 @@ def bitserial_conv1d_batched(
 # ---------------------------------------------------------------------------
 
 @functools.partial(
-    jax.jit, static_argnames=("stride", "pad", "pool", "mode", "interpret")
+    jax.jit,
+    static_argnames=("stride", "pad", "pool", "mode", "bb", "interpret"),
 )
 def bnn_conv1d_batched(
     x_bits: jax.Array,
     w_t: jax.Array,
     thr: jax.Array | None = None,
     flip: jax.Array | None = None,
+    model_idx: jax.Array | None = None,
     *,
     stride: int = 1,
     pad: int = 0,
     pool: int = 1,
     mode: str = "sa",
+    bb: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Batched binary conv1d with weights shared across the batch axis.
@@ -283,11 +303,17 @@ def bnn_conv1d_batched(
     x_bits (B, L, Cin) {0,1}; w_t (K, Cin, Cout) broadcast over B.  Output
     (B, L_out//pool, Cout) uint32 bits ((B, L_out, Cout) int32 when raw).
     The batch axis maps straight onto the kernel grid: one weight fetch
-    serves every stream, mirroring shared-weight CIM batching.
+    serves every stream, mirroring shared-weight CIM batching.  With
+    ``model_idx`` ((B,) int32 tenant ids, constant per ``bb`` slot block)
+    ``w_t`` is a pooled (M, K, Cin, Cout) stack (raw mode only).
     """
     interpret = default_interpret() if interpret is None else interpret
+    pooled = model_idx is not None
     b = x_bits.shape[0]
-    k, cin, cout = w_t.shape
+    if pooled:
+        k, cin, cout = w_t.shape[1:]
+    else:
+        k, cin, cout = w_t.shape
     l = x_bits.shape[1]
     l_out = (l + 2 * pad - k) // stride + 1
 
@@ -298,17 +324,18 @@ def bnn_conv1d_batched(
         xq[:, t : t + (l_out - 1) * stride + 1 : stride] for t in range(k)
     ]
     xs = jnp.stack(taps, axis=1)  # (B, K, L_out, Cw)
-    wp, wn = pack_weight_planes(w_t)  # (K, Cw, Cout)
+    wp, wn = pack_weight_planes(w_t)  # ([M,] K, Cw, Cout)
 
-    bb = _pick_block(b, _conv.DEFAULT_BB)
+    bb = _pick_block(b, _conv.DEFAULT_BB if bb is None else bb)
     bn = _pick_block(cout, _conv.DEFAULT_BN)
     bl = _pick_block(l_out, _conv.DEFAULT_BL, step=pool)
     xs = _pad_axis(xs, bb, 0)
     xs = _pad_axis(xs, bl, 2)
-    wp = _pad_axis(wp, bn, 2)
-    wn = _pad_axis(wn, bn, 2)
+    wp = _pad_axis(wp, bn, -1)
+    wn = _pad_axis(wn, bn, -1)
 
     if mode == "sa":
+        assert not pooled, "weight pooling is a raw-conv path feature"
         thr_p = _pad_axis(thr.astype(jnp.float32), bn, 0)
         flip_p = _pad_axis(flip.astype(jnp.int32), bn, 0)
         out = _conv.bnn_conv1d_step_packed(
@@ -316,8 +343,11 @@ def bnn_conv1d_batched(
             pool=pool, bb=bb, bl=bl, bn=bn, mode="sa", interpret=interpret,
         )
         return out[:b, : l_out // pool, :cout]
+    mi = _block_model_idx(model_idx, b, bb, _round_up(b, bb) - b) \
+        if pooled else None
     out = _conv.bnn_conv1d_step_packed(
-        xs, wp, wn, pool=1, bb=bb, bl=bl, bn=bn, mode="raw", interpret=interpret
+        xs, wp, wn, None, None, mi,
+        pool=1, bb=bb, bl=bl, bn=bn, mode="raw", interpret=interpret,
     )
     return out[:b, :l_out, :cout]
 
@@ -360,24 +390,27 @@ def bnn_conv1d_batched_sharded(
     w_t: jax.Array,
     thr: jax.Array | None = None,
     flip: jax.Array | None = None,
+    model_idx: jax.Array | None = None,
     *,
     mesh=None,
     stride: int = 1,
     pad: int = 0,
     pool: int = 1,
     mode: str = "sa",
+    bb: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """``bnn_conv1d_batched`` with the batch axis sharded over ``mesh``.
 
-    Each shard convolves its own rows; weights/thresholds are replicated.
+    Each shard convolves its own rows; weights/thresholds are replicated
+    (pooled (M, ...) stacks replicate whole, like the single weight set).
     With no mesh (or a 1-device mesh) this IS ``bnn_conv1d_batched`` —
     the single-device path stays byte-identical.
     """
-    kw = dict(stride=stride, pad=pad, pool=pool, mode=mode,
+    kw = dict(stride=stride, pad=pad, pool=pool, mode=mode, bb=bb,
               interpret=interpret)
     if mesh is None or _data_size(mesh) == 1:
-        return bnn_conv1d_batched(x_bits, w_t, thr, flip, **kw)
+        return bnn_conv1d_batched(x_bits, w_t, thr, flip, model_idx, **kw)
     bspec, rep = _batch_spec(mesh)
     if mode == "sa":
         fn = lambda x, w, t, f: bnn_conv1d_batched(x, w, t, f, **kw)
@@ -385,6 +418,12 @@ def bnn_conv1d_batched_sharded(
             fn, mesh=mesh, in_specs=(bspec, rep, rep, rep),
             out_specs=bspec, check_rep=False,
         )(x_bits, w_t, thr, flip)
+    if model_idx is not None:
+        fn = lambda x, w, mi: bnn_conv1d_batched(x, w, None, None, mi, **kw)
+        return _shard_map()(
+            fn, mesh=mesh, in_specs=(bspec, rep, bspec), out_specs=bspec,
+            check_rep=False,
+        )(x_bits, w_t, model_idx)
     fn = lambda x, w: bnn_conv1d_batched(x, w, **kw)
     return _shard_map()(
         fn, mesh=mesh, in_specs=(bspec, rep), out_specs=bspec,
@@ -395,21 +434,29 @@ def bnn_conv1d_batched_sharded(
 def bitserial_conv1d_batched_sharded(
     x_u: jax.Array,
     w_t: jax.Array,
+    model_idx: jax.Array | None = None,
     *,
     mesh=None,
     bits: int,
     offset: int = 0,
     stride: int = 1,
     pad: int = 0,
+    bb: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """``bitserial_conv1d_batched`` with the batch axis sharded over
     ``mesh`` (weights replicated, one launch per shard)."""
-    kw = dict(bits=bits, offset=offset, stride=stride, pad=pad,
+    kw = dict(bits=bits, offset=offset, stride=stride, pad=pad, bb=bb,
               interpret=interpret)
     if mesh is None or _data_size(mesh) == 1:
-        return bitserial_conv1d_batched(x_u, w_t, **kw)
+        return bitserial_conv1d_batched(x_u, w_t, model_idx, **kw)
     bspec, rep = _batch_spec(mesh)
+    if model_idx is not None:
+        fn = lambda x, w, mi: bitserial_conv1d_batched(x, w, mi, **kw)
+        return _shard_map()(
+            fn, mesh=mesh, in_specs=(bspec, rep, bspec), out_specs=bspec,
+            check_rep=False,
+        )(x_u, w_t, model_idx)
     fn = lambda x, w: bitserial_conv1d_batched(x, w, **kw)
     return _shard_map()(
         fn, mesh=mesh, in_specs=(bspec, rep), out_specs=bspec,
@@ -421,21 +468,33 @@ def bitserial_conv1d_batched_sharded(
 # Hop megakernel entry points (repro.stream fused hop)
 # ---------------------------------------------------------------------------
 
-def _mega_prep(stages, thrs, flips, fc_thrs, fc_flips):
+def _mega_prep(stages, thrs, flips, fc_thrs, fc_flips, pooled=False):
     geoms = tuple(_mega.stage_geom(st) for st in stages)
-    thr_p = tuple(
-        jnp.asarray(t, jnp.float32).reshape(1, -1) for t in thrs
-    )
-    flip_p = tuple(
-        jnp.asarray(f).astype(jnp.int32).reshape(1, -1) for f in flips
-    )
-    fct_p = tuple(
-        jnp.asarray(t, jnp.float32).reshape(1, -1) for t in fc_thrs
-    )
-    fcf_p = tuple(
-        jnp.asarray(f).astype(jnp.int32).reshape(1, -1) for f in fc_flips
-    )
+
+    def _sa(x, dtype):
+        x = jnp.asarray(x).astype(dtype)
+        if pooled:  # (K, C) tenant stack -> (K, 1, C)
+            return x.reshape(x.shape[0], 1, -1)
+        return x.reshape(1, -1)
+
+    thr_p = tuple(_sa(t, jnp.float32) for t in thrs)
+    flip_p = tuple(_sa(f, jnp.int32) for f in flips)
+    fct_p = tuple(_sa(t, jnp.float32) for t in fc_thrs)
+    fcf_p = tuple(_sa(f, jnp.int32) for f in fc_flips)
     return geoms, thr_p, flip_p, fct_p, fcf_p
+
+
+def _block_model_idx(model_idx, b, bb, pad_b):
+    """(B,) per-slot tenant ids -> (B // bb, 1) per-block ids.
+
+    Slot blocks are single-tenant by placement (the scheduler sorts slot
+    blocks by tenant at pack time), so the block id is its first row's id;
+    tail padding rows inherit the last real block's id harmlessly (their
+    outputs are masked/sliced)."""
+    mi = jnp.asarray(model_idx, jnp.int32)
+    if pad_b:
+        mi = jnp.pad(mi, ((0, pad_b),))
+    return mi.reshape(-1, bb)[:, :1]
 
 
 def hop_megakernel(
@@ -450,6 +509,7 @@ def hop_megakernel(
     fc_ws: tuple[jax.Array, ...] = (),
     fc_thrs: tuple[jax.Array, ...] = (),
     fc_flips: tuple[jax.Array, ...] = (),
+    model_idx: jax.Array | None = None,
     *,
     stages,
     emit: bool,
@@ -461,14 +521,18 @@ def hop_megakernel(
 
     audio (B, hop, Cin0) codes; mask (B,) advance flags; tails/pendings
     one per conv stage (zero-width entries pass through untouched); gap
-    (B, C) counts.  ``stages`` is the plan's ConvStage tuple.  Returns
+    (B, C) counts.  ``stages`` is the plan's ConvStage tuple.  With
+    ``model_idx`` ((B,) int32 per-slot tenant ids, constant within each
+    ``bb`` slot block) the weight operands are pooled (K, ...) stacks and
+    the launch stays ONE dispatch regardless of K.  Returns
     ``(tails, pendings, gap)`` plus int32 logits when ``emit`` (the ghost
     flush + classifier ride in the SAME launch).  Bit-exact with the
     per-stage path — kernels/hop_megakernel.py is the contract.
     """
     interpret = default_interpret() if interpret is None else interpret
+    pooled = model_idx is not None
     geoms, thr_p, flip_p, fct_p, fcf_p = _mega_prep(
-        stages, thrs, flips, fc_thrs, fc_flips
+        stages, thrs, flips, fc_thrs, fc_flips, pooled
     )
     b = gap.shape[0]
     bb = _mega.DEFAULT_BB if bb is None else bb
@@ -488,10 +552,11 @@ def hop_megakernel(
         mask = jnp.pad(mask.astype(jnp.int32), ((0, pad_b),))
         t_in = [padb(t) for t in t_in]
         p_in = [padb(p) for p in p_in]
+    mi = _block_model_idx(model_idx, b, bb, pad_b) if pooled else None
     out = _mega.hop_megakernel_packed(
         audio, mask, tuple(t_in), tuple(p_in), gap,
         tuple(jnp.asarray(w, jnp.int32) for w in ws), thr_p, flip_p,
-        tuple(jnp.asarray(w, jnp.int32) for w in fc_ws), fct_p, fcf_p,
+        tuple(jnp.asarray(w, jnp.int32) for w in fc_ws), fct_p, fcf_p, mi,
         geoms=geoms, emit=emit, fc_raw=tuple(fc_raw), bb=bb,
         interpret=interpret,
     )
@@ -520,6 +585,7 @@ def hop_megakernel_sharded(
     fc_ws: tuple[jax.Array, ...] = (),
     fc_thrs: tuple[jax.Array, ...] = (),
     fc_flips: tuple[jax.Array, ...] = (),
+    model_idx: jax.Array | None = None,
     *,
     mesh=None,
     stages,
@@ -530,20 +596,36 @@ def hop_megakernel_sharded(
 ):
     """``hop_megakernel`` with per-slot state sharded over ``mesh``: each
     shard runs ONE fused launch on its local slot rows with replicated
-    weights — the per-hop dispatch count is 1 per shard, emit included."""
+    weights (the whole (K, ...) pool replicates exactly like the single
+    weight set) — the per-hop dispatch count is 1 per shard, emit
+    included, regardless of K."""
     kw = dict(stages=stages, emit=emit, fc_raw=fc_raw, bb=bb,
               interpret=interpret)
     if mesh is None or _data_size(mesh) == 1:
         return hop_megakernel(audio, mask, tails, pendings, gap, ws, thrs,
-                              flips, fc_ws, fc_thrs, fc_flips, **kw)
+                              flips, fc_ws, fc_thrs, fc_flips, model_idx,
+                              **kw)
     bspec, rep = _batch_spec(mesh)
     nt, npd, ns, nf = len(tails), len(pendings), len(ws), len(fc_ws)
-    fn = lambda a, m, t, p, g, w, th, fl, fw, ft, ff: hop_megakernel(
-        a, m, t, p, g, w, th, fl, fw, ft, ff, **kw
-    )
     out_specs = ((bspec,) * nt, (bspec,) * npd, bspec)
     if emit:
         out_specs = out_specs + (bspec,)
+    if model_idx is not None:
+        fn = lambda a, m, t, p, g, w, th, fl, fw, ft, ff, mi: hop_megakernel(
+            a, m, t, p, g, w, th, fl, fw, ft, ff, mi, **kw
+        )
+        return _shard_map()(
+            fn, mesh=mesh,
+            in_specs=(bspec, bspec, (bspec,) * nt, (bspec,) * npd, bspec,
+                      (rep,) * ns, (rep,) * ns, (rep,) * ns,
+                      (rep,) * nf, (rep,) * nf, (rep,) * nf, bspec),
+            out_specs=out_specs, check_rep=False,
+        )(audio, mask, tuple(tails), tuple(pendings), gap, tuple(ws),
+          tuple(thrs), tuple(flips), tuple(fc_ws), tuple(fc_thrs),
+          tuple(fc_flips), model_idx)
+    fn = lambda a, m, t, p, g, w, th, fl, fw, ft, ff: hop_megakernel(
+        a, m, t, p, g, w, th, fl, fw, ft, ff, **kw
+    )
     return _shard_map()(
         fn, mesh=mesh,
         in_specs=(bspec, bspec, (bspec,) * nt, (bspec,) * npd, bspec,
@@ -565,6 +647,7 @@ def finalize_megakernel(
     fc_ws: tuple[jax.Array, ...],
     fc_thrs: tuple[jax.Array, ...],
     fc_flips: tuple[jax.Array, ...],
+    model_idx: jax.Array | None = None,
     *,
     stages,
     fc_raw: tuple[bool, ...],
@@ -573,8 +656,9 @@ def finalize_megakernel(
 ) -> jax.Array:
     """Standalone ghost-flush + classifier launch (hop-boundary peeks)."""
     interpret = default_interpret() if interpret is None else interpret
+    pooled = model_idx is not None
     geoms, thr_p, flip_p, fct_p, fcf_p = _mega_prep(
-        stages, thrs, flips, fc_thrs, fc_flips
+        stages, thrs, flips, fc_thrs, fc_flips, pooled
     )
     b = gap.shape[0]
     bb = _mega.DEFAULT_BB if bb is None else bb
@@ -592,10 +676,11 @@ def finalize_megakernel(
         gap = padb(gap)
         t_in = [padb(t) for t in t_in]
         p_in = [padb(p) for p in p_in]
+    mi = _block_model_idx(model_idx, b, bb, pad_b) if pooled else None
     out = _mega.finalize_megakernel_packed(
         tuple(t_in), tuple(p_in), gap,
         tuple(jnp.asarray(w, jnp.int32) for w in ws), thr_p, flip_p,
-        tuple(jnp.asarray(w, jnp.int32) for w in fc_ws), fct_p, fcf_p,
+        tuple(jnp.asarray(w, jnp.int32) for w in fc_ws), fct_p, fcf_p, mi,
         geoms=geoms, fc_raw=tuple(fc_raw), bb=bb, interpret=interpret,
     )
     return out[:b] if pad_b else out
@@ -611,6 +696,7 @@ def finalize_megakernel_sharded(
     fc_ws: tuple[jax.Array, ...],
     fc_thrs: tuple[jax.Array, ...],
     fc_flips: tuple[jax.Array, ...],
+    model_idx: jax.Array | None = None,
     *,
     mesh=None,
     stages,
@@ -622,9 +708,23 @@ def finalize_megakernel_sharded(
     kw = dict(stages=stages, fc_raw=fc_raw, bb=bb, interpret=interpret)
     if mesh is None or _data_size(mesh) == 1:
         return finalize_megakernel(tails, pendings, gap, ws, thrs, flips,
-                                   fc_ws, fc_thrs, fc_flips, **kw)
+                                   fc_ws, fc_thrs, fc_flips, model_idx,
+                                   **kw)
     bspec, rep = _batch_spec(mesh)
     nt, npd, ns, nf = len(tails), len(pendings), len(ws), len(fc_ws)
+    if model_idx is not None:
+        fn = lambda t, p, g, w, th, fl, fw, ft, ff, mi: finalize_megakernel(
+            t, p, g, w, th, fl, fw, ft, ff, mi, **kw
+        )
+        return _shard_map()(
+            fn, mesh=mesh,
+            in_specs=((bspec,) * nt, (bspec,) * npd, bspec,
+                      (rep,) * ns, (rep,) * ns, (rep,) * ns,
+                      (rep,) * nf, (rep,) * nf, (rep,) * nf, bspec),
+            out_specs=bspec, check_rep=False,
+        )(tuple(tails), tuple(pendings), gap, tuple(ws), tuple(thrs),
+          tuple(flips), tuple(fc_ws), tuple(fc_thrs), tuple(fc_flips),
+          model_idx)
     fn = lambda t, p, g, w, th, fl, fw, ft, ff: finalize_megakernel(
         t, p, g, w, th, fl, fw, ft, ff, **kw
     )
@@ -682,20 +782,30 @@ def classifier_tail_sharded(
     fc_ws: tuple[jax.Array, ...],
     fc_thrs: tuple[jax.Array, ...],
     fc_flips: tuple[jax.Array, ...],
+    model_idx: jax.Array | None = None,
     *,
     mesh=None,
     out_raw: tuple[bool, ...],
+    bb: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """``classifier_tail`` over a mesh-sharded batch of GAP counts."""
+    kw = dict(out_raw=out_raw, bb=bb, interpret=interpret)
     if mesh is None or _data_size(mesh) == 1:
-        return classifier_tail(gap, fc_ws, fc_thrs, fc_flips,
-                               out_raw=out_raw, interpret=interpret)
+        return classifier_tail(gap, fc_ws, fc_thrs, fc_flips, model_idx,
+                               **kw)
     bspec, rep = _batch_spec(mesh)
     n = len(fc_ws)
-    fn = lambda g, ws, ts, fs: classifier_tail(
-        g, ws, ts, fs, out_raw=out_raw, interpret=interpret
-    )
+    if model_idx is not None:
+        fn = lambda g, ws, ts, fs, mi: classifier_tail(
+            g, ws, ts, fs, mi, **kw
+        )
+        return _shard_map()(
+            fn, mesh=mesh,
+            in_specs=(bspec, (rep,) * n, (rep,) * n, (rep,) * n, bspec),
+            out_specs=bspec, check_rep=False,
+        )(gap, tuple(fc_ws), tuple(fc_thrs), tuple(fc_flips), model_idx)
+    fn = lambda g, ws, ts, fs: classifier_tail(g, ws, ts, fs, **kw)
     return _shard_map()(
         fn, mesh=mesh,
         in_specs=(bspec, (rep,) * n, (rep,) * n, (rep,) * n),
@@ -707,33 +817,50 @@ def classifier_tail_sharded(
 # Fused classifier tail (repro.stream in-jit finalization)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("out_raw", "interpret"))
+@functools.partial(jax.jit, static_argnames=("out_raw", "bb", "interpret"))
 def classifier_tail(
     gap: jax.Array,
     fc_ws: tuple[jax.Array, ...],
     fc_thrs: tuple[jax.Array, ...],
     fc_flips: tuple[jax.Array, ...],
+    model_idx: jax.Array | None = None,
     *,
     out_raw: tuple[bool, ...],
+    bb: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """GAP counts -> raw logits: saturate at the 8-bit PWB ceiling, then the
     whole fc cascade fused in one kernel launch.
 
     gap (B, C) int32; fc_ws per-layer (Cin, Cout) ternary; fc_thrs/fc_flips
-    per-layer (Cout,) SA params.  Returns (B, n_classes) int32 raw logits —
-    bit-exact with ``StreamState.logits`` (integer thresholds make the
-    float32 compare exact; counts keep every product inside int32).
+    per-layer (Cout,) SA params.  With ``model_idx`` ((B,) int32 tenant
+    ids, constant per ``bb`` slot block) the fc params are pooled
+    (M, ...) stacks.  Returns (B, n_classes) int32 raw logits — bit-exact
+    with ``StreamState.logits`` (integer thresholds make the float32
+    compare exact; counts keep every product inside int32).
     """
     interpret = default_interpret() if interpret is None else interpret
+    pooled = model_idx is not None
     b = gap.shape[0]
-    bb = _pick_block(b, _conv.DEFAULT_BB)
+    bb = _pick_block(b, _conv.DEFAULT_BB if bb is None else bb)
     gap_p = _pad_axis(gap.astype(jnp.int32), bb, 0)
     ws = tuple(w.astype(jnp.int32) for w in fc_ws)
-    thrs = tuple(t.astype(jnp.float32).reshape(1, -1) for t in fc_thrs)
-    flips = tuple(f.astype(jnp.int32).reshape(1, -1) for f in fc_flips)
+    if pooled:
+        thrs = tuple(
+            t.astype(jnp.float32).reshape(t.shape[0], 1, -1)
+            for t in fc_thrs
+        )
+        flips = tuple(
+            f.astype(jnp.int32).reshape(f.shape[0], 1, -1) for f in fc_flips
+        )
+        mi = _block_model_idx(model_idx, b, bb, _round_up(b, bb) - b)
+    else:
+        thrs = tuple(t.astype(jnp.float32).reshape(1, -1) for t in fc_thrs)
+        flips = tuple(f.astype(jnp.int32).reshape(1, -1) for f in fc_flips)
+        mi = None
     out = _conv.classifier_tail_packed(
-        gap_p, ws, thrs, flips, out_raw=out_raw, bb=bb, interpret=interpret
+        gap_p, ws, thrs, flips, mi,
+        out_raw=out_raw, bb=bb, interpret=interpret,
     )
     return out[:b]
 

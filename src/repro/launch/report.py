@@ -169,6 +169,34 @@ def stream_lines(bench: dict) -> list[str]:
             f"{sk['floor_capacity']:.0f})"
             + (" (prior run)" if sk.get("carried_from_prior_run") else "")
         )
+    mt = bench.get("multi_tenant") or {}  # absent in pre-pool artifacts
+    per_k = mt.get("per_k") or {}
+    if per_k:
+        out += [
+            "",
+            f"multi-tenant weight pool at {mt.get('total_streams', '—')} "
+            "total streams (fused pool vs K separate schedulers):",
+            "",
+            "| K | hop p50 ms | launches/emit hop | stream-hops/s | "
+            "baseline hops/s | speedup |",
+            "|---|---|---|---|---|---|",
+        ]
+        for k, r in sorted(per_k.items(), key=lambda kv: int(kv[0])):
+            base = r.get("baseline") or {}
+            out.append(
+                f"| {k} | {_num(r, 'hop_ms_p50', '.3f')} "
+                f"| {_num(r, 'dispatches_per_emit_hop', '.0f')} "
+                f"| {_num(r, 'stream_hops_per_sec', '.0f')} "
+                f"| {_num(base, 'stream_hops_per_sec', '.0f')} "
+                f"| {_num(r, 'speedup_vs_separate', '.2f')}x |"
+            )
+        if isinstance(mt.get("speedup_at_k4"), (int, float)):
+            out.append(
+                f"\nK=4 fused vs separate: {mt['speedup_at_k4']:.2f}x "
+                f"(floor 2x: {'PASS' if mt.get('k4_target_met') else 'FAIL'}"
+                "; launches/hop K-independent: "
+                f"{bool(mt.get('launches_k_independent'))})"
+            )
     ov = bench.get("overlap") or {}
     if isinstance(ov.get("hidden_frac"), (int, float)):
         out.append(

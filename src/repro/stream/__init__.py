@@ -18,6 +18,14 @@ one pool per device — the paper's one-large-macro argument): pass
 shards its batch axis over the mesh's ``"data"`` axis with the weights
 replicated, bit-exactly (tests/test_stream_sharded.py).
 
+The batched step is also *multi-tenant*: construct with ``max_models=K``
+and ``register_model(id, weights, thresholds)`` admits up to K complete
+model variants (same plan geometry) into one stacked ``WeightPool``;
+streams bound to different tenants ride the SAME hop dispatch — the
+kernels gather each slot-block's weight planes by a per-slot model index,
+so launches/hop stay K-independent (docs/ARCHITECTURE.md, "Multi-tenant
+weight pools").
+
 The host ingest plane is struct-of-arrays: every stream's sample inbox is
 one row of a shared ``RingArena`` (uint8, widened to int32 only at pack
 time), so the steady-state hop packs all ready inboxes with one vectorized
@@ -79,7 +87,15 @@ from repro.stream.detector import (
 )
 from repro.stream.frontend import AudioFrontend, quantize_pcm
 from repro.stream.metrics import StreamMetrics, plan_hop_ledger
-from repro.stream.scheduler import HopBatch, StreamResult, StreamScheduler
+from repro.stream.scheduler import (
+    DEFAULT_MODEL,
+    HopBatch,
+    StreamResult,
+    StreamScheduler,
+    WeightPool,
+    param_cache_stats,
+    prepared_model_params,
+)
 from repro.stream.state import (
     FrameRing,
     RingArena,
@@ -93,6 +109,10 @@ from repro.stream.state import (
 __all__ = [
     "AsyncStreamScheduler",
     "AudioFrontend",
+    "DEFAULT_MODEL",
+    "WeightPool",
+    "param_cache_stats",
+    "prepared_model_params",
     "BatchedDetector",
     "Detection",
     "DetectorConfig",

@@ -255,6 +255,8 @@ class AsyncStreamScheduler(StreamScheduler):
                     hidden_s=(t_dispatch - t0) if was_busy else 0.0,
                 ))
                 self._dispatched_total += 1
+            else:
+                self._maybe_prewarm()  # starved turn: warm next capacity
         dispatched = packed is not None
         retired = None
         if len(self._inflight) > self._depth or (
@@ -304,6 +306,13 @@ class AsyncStreamScheduler(StreamScheduler):
     def add_stream(self, *args, **kwargs) -> int:
         with self._lock:  # placement/arena bookkeeping vs pump pushes
             return super().add_stream(*args, **kwargs)
+
+    def register_model(self, *args, **kwargs) -> int:
+        with self._lock:
+            # pool swap = epoch barrier: an in-flight hop still references
+            # the weight row an admission may overwrite (LRU eviction)
+            self._epoch_barrier()
+            return super().register_model(*args, **kwargs)
 
     def peek(self, sid: int) -> np.ndarray:
         self.flush_ingest()  # the contract covers "audio pushed so far"

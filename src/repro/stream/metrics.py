@@ -249,6 +249,14 @@ class StreamMetrics:
         # per-hop figure (``_BatchedModel.dispatches_per_hop``)
         self.device_dispatches_total = 0
         self._dispatches_per_hop = 0
+        # tenant weight pool: admissions/evictions plus per-model
+        # stream-hop counters.  Bounded — ``model_hops`` only holds
+        # RESIDENT variants (<= pool size); an evicted model's count
+        # retires into one scalar so always-on churn can't leak keys.
+        self.models_admitted = 0
+        self.models_evicted = 0
+        self.model_hops: collections.Counter = collections.Counter()
+        self.evicted_model_hops = 0
         self._t0 = time.perf_counter()
 
     def _hist(self, name: str) -> Histogram:
@@ -287,7 +295,8 @@ class StreamMetrics:
                 finalized: bool = True,
                 dispatch_s: float = 0.0, device_s: float = 0.0,
                 detector_s: float = 0.0, hidden_s: float = 0.0,
-                dispatches: int = 0) -> None:
+                dispatches: int = 0,
+                model_counts: dict[str, int] | None = None) -> None:
         """Record one batched hop: ``n_ready`` streams advanced in
         ``wall_s`` seconds of which ``host_pack_s`` was host-side batch
         packing; ``dispatch_s``/``device_s``/``detector_s`` are the
@@ -299,9 +308,11 @@ class StreamMetrics:
         reported by the async plane's pipelined dispatch.  ``dispatches``
         is the per-shard device-launch (``pallas_call``) count for this
         hop — a static plan+backend figure (``dispatches_per_hop``), 0
-        for plain-XLA backends.  Aggregate-only — the hot path never
-        walks per-stream counter objects (that was the pre-arena serial
-        floor)."""
+        for plain-XLA backends.  ``model_counts`` (tenant pools only)
+        says how many of this hop's stream-hops each resident model
+        advanced — one small dict add per hop, K-bounded.
+        Aggregate-only — the hot path never walks per-stream counter
+        objects (that was the pre-arena serial floor)."""
         if shard_counts is None:
             # only unambiguous without a mesh; sharded callers must say
             # which shard advanced what or shard_summary would lie
@@ -328,6 +339,8 @@ class StreamMetrics:
         else:
             self._shard_hops += np.asarray(shard_counts, np.int64)
         self._frames_emitted += n_ready * frames_each
+        if model_counts:
+            self.model_hops.update(model_counts)
         _charge_scaled(self.ledger, self._hop_ledger, n_ready)
         if finalized:
             _charge_scaled(self.ledger, self._tail_ledger, n_ready)
@@ -349,6 +362,17 @@ class StreamMetrics:
         slot rows crossing shard blocks."""
         self.rebalances += 1
         self.rows_migrated += n_moves
+
+    def on_model_admit(self, model_id: str) -> None:
+        """One tenant variant admitted to the weight pool."""
+        self.models_admitted += 1
+        self.model_hops.setdefault(model_id, 0)
+
+    def on_model_evict(self, model_id: str) -> None:
+        """One tenant variant evicted (LRU): its hop count retires into
+        the scalar so ``model_hops`` stays bounded by pool size."""
+        self.models_evicted += 1
+        self.evicted_model_hops += self.model_hops.pop(model_id, 0)
 
     def on_push_fold(self, samples_total: int, chunks_total: int) -> None:
         """Hop-boundary fold of the arena's monotone push counters (two
@@ -465,6 +489,18 @@ class StreamMetrics:
             "device_dispatches_total": float(self.device_dispatches_total),
         }
 
+    def tenant_summary(self) -> dict[str, object]:
+        """Weight-pool accounting: admissions/evictions plus stream-hops
+        advanced per resident tenant.  ``per_model`` is bounded by the
+        pool's ``max_models`` — evicted tenants' hop counts retire into
+        the ``evicted_model_hops`` scalar instead of growing the dict."""
+        return {
+            "models_admitted": float(self.models_admitted),
+            "models_evicted": float(self.models_evicted),
+            "evicted_model_hops": float(self.evicted_model_hops),
+            "per_model": {m: int(c) for m, c in self.model_hops.items()},
+        }
+
     def phase_summary(self) -> dict[str, dict[str, float]]:
         """Per-phase hop breakdown (pack / dispatch / device / detector):
         quantiles in ms plus each phase's share of total hop wall time.
@@ -544,7 +580,8 @@ class StreamMetrics:
                                     *self._phase_hist.values()))
         n += self._shard_hops.nbytes
         n += 64 * (len(self.streams) + len(self.retired)
-                   + len(self.capacity_events) + len(self._closed_order))
+                   + len(self.capacity_events) + len(self._closed_order)
+                   + len(self.model_hops))
         return n
 
     def energy_summary(self, params: EnergyParams | None = None) -> dict[str, float]:

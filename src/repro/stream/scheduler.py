@@ -68,6 +68,7 @@ exact fallback for mid-hop peeks over leftover sub-hop samples.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 
@@ -101,6 +102,187 @@ from repro.stream.state import (
 from repro.utils.logging import get_logger
 
 log = get_logger("stream")
+
+#: pool row 0 always holds the scheduler's construction weights
+DEFAULT_MODEL = "default"
+
+# ---------------------------------------------------------------------------
+# Memoized parameter prep (weights dict -> device-ready arrays)
+# ---------------------------------------------------------------------------
+#
+# Building a _BatchedModel converts every layer's ternary weights and SA
+# thresholds into device arrays; re-constructing a scheduler over the
+# same exported model (K-tenant admission, bench baselines, test
+# fixtures) used to redo that prep — and the wp/wn plane packing it
+# feeds — from scratch every time.  The cache keys on the *identity* of
+# the weights/thresholds dicts plus the plan geometry, holds strong
+# references to the keyed dicts (so an id can never be recycled under
+# us; an identity check guards the lookup anyway), and is bounded LRU.
+
+_PARAM_CACHE: collections.OrderedDict = collections.OrderedDict()
+_PARAM_CACHE_MAX = 64
+_param_cache_hits = 0
+_param_cache_misses = 0
+
+
+def prepared_model_params(plan: StreamPlan, weights, thresholds) -> dict:
+    """Device-ready per-stage params for one model variant, memoized by
+    ``(id(weights), id(thresholds), plan geometry)``.
+
+    Returns ``{"w", "thr", "flip", "fc_w", "fc_thr", "fc_flip"}`` —
+    exactly the arrays ``_BatchedModel`` loads — so pool admission,
+    scheduler reconstruction, and grow/shrink cycles over an unchanged
+    variant never re-run the conversion (or the wp/wn packing derived
+    from it downstream).
+    """
+    global _param_cache_hits, _param_cache_misses
+    key = (id(weights), id(thresholds), plan.convs, plan.fcs)
+    hit = _PARAM_CACHE.get(key)
+    if (hit is not None and hit["weights"] is weights
+            and hit["thresholds"] is thresholds):
+        _param_cache_hits += 1
+        _PARAM_CACHE.move_to_end(key)
+        return hit
+    _param_cache_misses += 1
+    stages = plan.convs
+    prep = {
+        # strong refs pin the keyed ids for the cache's lifetime
+        "weights": weights,
+        "thresholds": thresholds,
+        "w": [
+            jnp.asarray(weights[st.layer_idx].reshape(st.k, st.cin, st.cout),
+                        jnp.int32) for st in stages
+        ],
+        "thr": [jnp.asarray(thresholds[st.layer_idx][0], jnp.float32)
+                for st in stages],
+        "flip": [jnp.asarray(thresholds[st.layer_idx][1], bool)
+                 for st in stages],
+        "fc_w": tuple(jnp.asarray(weights[st.layer_idx], jnp.int32)
+                      for st in plan.fcs),
+        "fc_thr": tuple(jnp.asarray(thresholds[st.layer_idx][0],
+                                    jnp.float32) for st in plan.fcs),
+        "fc_flip": tuple(jnp.asarray(thresholds[st.layer_idx][1],
+                                     jnp.int32) for st in plan.fcs),
+    }
+    _PARAM_CACHE[key] = prep
+    while len(_PARAM_CACHE) > _PARAM_CACHE_MAX:
+        _PARAM_CACHE.popitem(last=False)
+    return prep
+
+
+def param_cache_stats() -> dict[str, int]:
+    """Hit/miss counters for the memoized parameter prep (tests)."""
+    return {
+        "hits": _param_cache_hits,
+        "misses": _param_cache_misses,
+        "size": len(_PARAM_CACHE),
+    }
+
+
+class WeightPool:
+    """K complete model variants sharing one plan geometry, one device.
+
+    The pool owns the *host* side of multi-tenancy: which model ids are
+    resident, which pool row (0..max_models-1) each occupies, how many
+    live streams pin each variant, and LRU admission/eviction.  Row
+    indices are stable for a variant's whole residency and the row count
+    is FIXED at ``max_models`` from construction, so the device-side
+    ``(K, ...)`` weight stacks never change shape — admission is a row
+    write, never a retrace.
+
+    Row 0 conventionally holds the scheduler's default model
+    (``DEFAULT_MODEL``), admitted at construction and never evicted
+    while default-bound streams exist (refcounting covers it like any
+    other variant).
+    """
+
+    def __init__(self, max_models: int) -> None:
+        assert max_models >= 1, max_models
+        self.max_models = max_models
+        self._index: dict[str, int] = {}
+        self._lru: collections.OrderedDict = collections.OrderedDict()
+        self._weights: dict[str, dict] = {}
+        self._thresholds: dict[str, dict] = {}
+        self._refs: dict[str, int] = {}
+        self._free = list(range(max_models - 1, -1, -1))  # pop() -> row 0
+        self.admits = 0
+        self.evictions = 0
+
+    def __contains__(self, model_id: str) -> bool:
+        return model_id in self._index
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    def models(self) -> list[tuple[str, int]]:
+        """Resident variants as ``(model_id, pool row)``, row order."""
+        return sorted(self._index.items(), key=lambda kv: kv[1])
+
+    def index_of(self, model_id: str) -> int:
+        return self._index[model_id]
+
+    def refcount(self, model_id: str) -> int:
+        return self._refs[model_id]
+
+    def params_for(self, model_id: str):
+        """The pool-held (weights, thresholds) host copies."""
+        return self._weights[model_id], self._thresholds[model_id]
+
+    def admit(self, model_id: str, weights, thresholds
+              ) -> tuple[int, str | None]:
+        """Bind a variant to a pool row; returns ``(row, evicted_id)``.
+
+        A resident id is an LRU touch (its stored params stay — the
+        caller re-registers, the pool does not re-copy).  When full, the
+        least-recently-used variant with NO live streams is evicted;
+        if every row is pinned, MemoryError.
+        """
+        if model_id in self._index:
+            self._lru.move_to_end(model_id)
+            return self._index[model_id], None
+        evicted = None
+        if self._free:
+            row = self._free.pop()
+        else:
+            victim = next(
+                (m for m in self._lru if self._refs[m] == 0), None
+            )
+            if victim is None:
+                raise MemoryError(
+                    f"weight pool full: all {self.max_models} variants "
+                    "have live streams; close streams or raise max_models"
+                )
+            row = self._evict(victim)
+            evicted = victim
+            self.evictions += 1
+        # store the caller's mappings as-is: the memoized prep
+        # (prepared_model_params) keys on their identity, so re-admitting
+        # the same arrays — here or in another scheduler — never re-packs
+        self._weights[model_id] = weights
+        self._thresholds[model_id] = thresholds
+        self._index[model_id] = row
+        self._refs[model_id] = 0
+        self._lru[model_id] = None
+        self.admits += 1
+        return row, evicted
+
+    def _evict(self, model_id: str) -> int:
+        row = self._index.pop(model_id)
+        del self._weights[model_id]
+        del self._thresholds[model_id]
+        del self._refs[model_id]
+        del self._lru[model_id]
+        return row
+
+    def acquire(self, model_id: str) -> int:
+        """Pin a variant for one joining stream; returns its row."""
+        self._refs[model_id] += 1
+        self._lru.move_to_end(model_id)
+        return self._index[model_id]
+
+    def release(self, model_id: str) -> None:
+        self._refs[model_id] -= 1
+        assert self._refs[model_id] >= 0, model_id
 
 
 @dataclasses.dataclass
@@ -136,6 +318,7 @@ class _Stream:
     events: list[Detection]
     primed: bool = False
     stamp: int = 0  # emit-step from which cached hop logits cover this slot
+    model: str = DEFAULT_MODEL  # tenant variant this stream computes with
 
 
 def _next_pow2(n: int) -> int:
@@ -164,33 +347,47 @@ class _BatchedModel:
 
     def __init__(self, plan: StreamPlan, weights, thresholds,
                  backend: str, interpret: bool | None, mesh=None,
-                 donate: bool = False) -> None:
+                 donate: bool = False, pool_size: int | None = None,
+                 tenant_block: int | None = None,
+                 params: dict | None = None) -> None:
         self.plan = plan
         self.backend = backend
         self.interpret = interpret
         self.mesh = mesh
-        stages = plan.convs
-        self._w = [
-            jnp.asarray(weights[st.layer_idx].reshape(st.k, st.cin, st.cout),
-                        jnp.int32) for st in stages
-        ]
-        self._thr = [jnp.asarray(thresholds[st.layer_idx][0], jnp.float32)
-                     for st in stages]
-        self._flip = [jnp.asarray(thresholds[st.layer_idx][1], bool)
-                      for st in stages]
-        self._wsum = [jnp.sum(w, axis=(0, 1)) for w in self._w]  # offset fold
-        self._fc_w = tuple(jnp.asarray(weights[st.layer_idx], jnp.int32)
-                           for st in plan.fcs)
-        self._fc_thr = tuple(jnp.asarray(thresholds[st.layer_idx][0],
-                                         jnp.float32) for st in plan.fcs)
-        self._fc_flip = tuple(jnp.asarray(thresholds[st.layer_idx][1],
-                                          jnp.int32) for st in plan.fcs)
+        self.pool_size = pool_size
+        self._tenant_block = tenant_block
+        prep = params if params is not None else prepared_model_params(
+            plan, weights, thresholds
+        )
+        self._w = list(prep["w"])
+        self._thr = list(prep["thr"])
+        self._flip = list(prep["flip"])
+        self._fc_w = tuple(prep["fc_w"])
+        self._fc_thr = tuple(prep["fc_thr"])
+        self._fc_flip = tuple(prep["fc_flip"])
         self._fc_raw = tuple(st.out_raw for st in plan.fcs)
+        if pool_size is not None:
+            # tenant pool: axis 0 stacks K complete variants.  Unfilled
+            # rows hold the default model, so the stack SHAPES are fixed
+            # at max_models from construction — admitting a variant is a
+            # row write (set_model_row), never a retrace.
+            stack = lambda t: jnp.stack([t] * pool_size)  # noqa: E731
+            self._w = [stack(w) for w in self._w]
+            self._thr = [stack(t) for t in self._thr]
+            self._flip = [stack(f) for f in self._flip]
+            self._fc_w = tuple(stack(w) for w in self._fc_w)
+            self._fc_thr = tuple(stack(t) for t in self._fc_thr)
+            self._fc_flip = tuple(stack(f) for f in self._fc_flip)
+        # offset fold (per tenant row when pooled)
+        self._wsum = [
+            jnp.sum(w, axis=(1, 2) if pool_size is not None else (0, 1))
+            for w in self._w
+        ]
         if mesh is not None:
             # one macro, many shards: weights live replicated on every
-            # device; only per-stream state is sharded
-            rep = NamedSharding(mesh, P())
-            put = lambda t: jax.device_put(t, rep)  # noqa: E731
+            # device (the whole (K, ...) pool replicates exactly like
+            # the single weight set); only per-stream state is sharded
+            put = self._rep_put
             self._w = [put(w) for w in self._w]
             self._thr = [put(t) for t in self._thr]
             self._flip = [put(f) for f in self._flip]
@@ -210,6 +407,12 @@ class _BatchedModel:
         )
         self.finalize = jax.jit(self._finalize)
 
+    def _rep_put(self, t: jax.Array) -> jax.Array:
+        """Replicate a weight array across the mesh (identity without)."""
+        if self.mesh is None:
+            return t
+        return jax.device_put(t, NamedSharding(self.mesh, P()))
+
     def _pin(self, x: jax.Array) -> jax.Array:
         """Constrain the leading (batch) axis to the mesh's data sharding."""
         if self.mesh is None:
@@ -219,20 +422,85 @@ class _BatchedModel:
             x, NamedSharding(self.mesh, spec)
         )
 
+    # -- tenant pool device side ---------------------------------------------
+
+    def set_model_row(self, idx: int, weights, thresholds) -> None:
+        """Write one tenant variant into pool row ``idx`` (admission).
+
+        Row updates keep every stacked shape fixed, so the jitted step's
+        shape-keyed cache survives; under a mesh the updated stacks
+        re-replicate like the originals.  The variant must share the
+        plan geometry (same spec/hop) — shapes are asserted by the
+        ``.at[idx].set`` writes themselves.
+        """
+        assert self.pool_size is not None, "not a pooled model"
+        assert 0 <= idx < self.pool_size, (idx, self.pool_size)
+        prep = prepared_model_params(self.plan, weights, thresholds)
+        put = self._rep_put
+        for i in range(len(self.plan.convs)):
+            self._w[i] = put(self._w[i].at[idx].set(prep["w"][i]))
+            self._thr[i] = put(self._thr[i].at[idx].set(prep["thr"][i]))
+            self._flip[i] = put(self._flip[i].at[idx].set(prep["flip"][i]))
+            self._wsum[i] = put(jnp.sum(self._w[i], axis=(1, 2)))
+        self._fc_w = tuple(
+            put(w.at[idx].set(v)) for w, v in zip(self._fc_w, prep["fc_w"])
+        )
+        self._fc_thr = tuple(
+            put(t.at[idx].set(v))
+            for t, v in zip(self._fc_thr, prep["fc_thr"])
+        )
+        self._fc_flip = tuple(
+            put(f.at[idx].set(v))
+            for f, v in zip(self._fc_flip, prep["fc_flip"])
+        )
+
+    def _bb(self, b: int) -> int | None:
+        """Tenant-aligned batch block for the pooled kernels.
+
+        Placement keeps each ``min(tenant_block, shard_capacity)`` slot
+        block single-model, so forcing the kernel's batch block to the
+        same size keeps every grid block's weight gather one row.  None
+        (backend default) when un-pooled.
+        """
+        if self.pool_size is None:
+            return None
+        S = 1 if self.mesh is None else dp_size(self.mesh)
+        return min(self._tenant_block, max(1, b // S))
+
+    def _block_gather(self, stack: jax.Array, model_idx: jax.Array
+                      ) -> tuple[jax.Array, int]:
+        """One weight row per tenant block instead of per slot.
+
+        Placement keeps every block single-model (``_sync_model_rows``),
+        so the naive per-slot gather — B full weight copies driving a
+        per-example batched matmul — collapses to one gather per block
+        and a per-block matmul: tb-fold fewer, tb-fold larger GEMMs.
+        Exact: the contractions are int32, so regrouping rows into
+        blocks cannot change a single accumulation.
+        """
+        tb = self._bb(model_idx.shape[0])
+        return stack[model_idx.reshape(-1, tb)[:, 0]], tb
+
     # -- shared conv math ----------------------------------------------------
 
-    def _conv_raw(self, i: int, window: jax.Array, n_conv: int) -> jax.Array:
-        """(B, len, Cin) window -> (B, n_conv, Cout) raw popcount diff."""
+    def _conv_raw(self, i: int, window: jax.Array, n_conv: int,
+                  model_idx: jax.Array | None = None) -> jax.Array:
+        """(B, len, Cin) window -> (B, n_conv, Cout) raw popcount diff.
+        With ``model_idx`` the weights are the pooled (K, ...) stacks —
+        one gather per tenant block inside the kernel, one per-row
+        gather on the jnp path."""
         st = self.plan.convs[i]
+        w = self._w[i]
         if st.in_bits > 1:
             # bit-serial first layer; offset folds out after accumulation.
             # ONE launch accumulates every bit plane in-kernel (PR 8) —
             # the fallback path no longer pays per-plane dispatch.
             if self.backend == "pallas":
                 return ops.bitserial_conv1d_batched_sharded(
-                    window.astype(jnp.uint32), self._w[i], mesh=self.mesh,
-                    bits=st.in_bits, offset=st.in_offset, stride=st.stride,
-                    pad=0, interpret=self.interpret,
+                    window.astype(jnp.uint32), w, model_idx,
+                    mesh=self.mesh, bits=st.in_bits, offset=st.in_offset,
+                    stride=st.stride, pad=0,
+                    bb=self._bb(window.shape[0]), interpret=self.interpret,
                 )
             xi = window.astype(jnp.int32) - st.in_offset
             taps = [
@@ -240,32 +508,52 @@ class _BatchedModel:
                 for t in range(st.k)
             ]
             xs = jnp.stack(taps, axis=1)  # (B, K, n_conv, Cin)
-            return jnp.einsum("bknc,kco->bno", xs, self._w[i])
+            if model_idx is not None:
+                wg, tb = self._block_gather(w, model_idx)
+                xg = xs.reshape(-1, tb, *xs.shape[1:])
+                return jnp.einsum("gtknc,gkco->gtno", xg, wg).reshape(
+                    xs.shape[0], n_conv, -1)
+            return jnp.einsum("bknc,kco->bno", xs, w)
         if self.backend == "pallas":
             return ops.bnn_conv1d_batched_sharded(
-                window.astype(jnp.uint32), self._w[i], mesh=self.mesh,
-                stride=st.stride, pad=0, mode="raw", interpret=self.interpret,
+                window.astype(jnp.uint32), w, None, None, model_idx,
+                mesh=self.mesh, stride=st.stride, pad=0, mode="raw",
+                bb=self._bb(window.shape[0]), interpret=self.interpret,
             )
         taps = [
             window[:, t : t + (n_conv - 1) * st.stride + 1 : st.stride]
             for t in range(st.k)
         ]
         xs = jnp.stack(taps, axis=1).astype(jnp.int32)
-        return jnp.einsum("bknc,kco->bno", xs, self._w[i])
+        if model_idx is not None:
+            wg, tb = self._block_gather(w, model_idx)
+            xg = xs.reshape(-1, tb, *xs.shape[1:])
+            return jnp.einsum("gtknc,gkco->gtno", xg, wg).reshape(
+                xs.shape[0], n_conv, -1)
+        return jnp.einsum("bknc,kco->bno", xs, w)
 
-    def _sa(self, i: int, raw: jax.Array) -> jax.Array:
+    def _sa(self, i: int, raw: jax.Array,
+            model_idx: jax.Array | None = None) -> jax.Array:
         """SA binarization, executor-exact: integer thresholds make the
         float32 compare knife-edge free."""
-        ge = raw.astype(jnp.float32) >= self._thr[i][None, None, :]
-        return jnp.where(
-            self._flip[i][None, None, :], ~ge, ge
-        ).astype(jnp.int32)
+        if model_idx is not None:
+            thr = self._thr[i][model_idx][:, None, :]
+            flip = self._flip[i][model_idx][:, None, :]
+        else:
+            thr = self._thr[i][None, None, :]
+            flip = self._flip[i][None, None, :]
+        ge = raw.astype(jnp.float32) >= thr
+        return jnp.where(flip, ~ge, ge).astype(jnp.int32)
 
     # -- the hop -------------------------------------------------------------
 
-    def _step(self, audio, mask, tails, pendings, gap, *, emit: bool):
+    def _step(self, audio, mask, tails, pendings, gap, model_idx=None,
+              *, emit: bool):
         """One batched hop; with ``emit`` the in-jit finalization tail also
-        returns per-slot finalized logits + posteriors.  Shapes static."""
+        returns per-slot finalized logits + posteriors.  Shapes static.
+        ``model_idx`` ((B,) int32, pooled models only) selects each
+        slot's tenant variant — constant per tenant block by placement,
+        so the launch count stays K-independent."""
         plan = self.plan
         stages = plan.convs
         if self.backend == "megakernel":
@@ -279,9 +567,10 @@ class _BatchedModel:
             out = ops.hop_megakernel_sharded(
                 audio, mask.astype(jnp.int32), tuple(tails), tuple(pendings),
                 gap, tuple(self._w), tuple(self._thr), tuple(self._flip),
-                self._fc_w, self._fc_thr, self._fc_flip,
+                self._fc_w, self._fc_thr, self._fc_flip, model_idx,
                 mesh=self.mesh, stages=stages, emit=emit,
-                fc_raw=self._fc_raw, interpret=self.interpret,
+                fc_raw=self._fc_raw, bb=self._bb(gap.shape[0]),
+                interpret=self.interpret,
             )
             new_tails = tuple(self._pin(t) for t in out[0])
             new_pendings = tuple(self._pin(p) for p in out[1])
@@ -296,9 +585,9 @@ class _BatchedModel:
         new_tails, new_pendings = [], []
         for i, st in enumerate(stages):
             window = jnp.concatenate([tails[i], cur], axis=1)
-            raw = self._conv_raw(i, window, st.n_conv)
+            raw = self._conv_raw(i, window, st.n_conv, model_idx)
             new_tails.append(window[:, st.n_conv * st.stride :])
-            y = self._sa(i, raw)
+            y = self._sa(i, raw, model_idx)
             if st.pool > 1:
                 frames = (
                     jnp.concatenate([pendings[i], y], axis=1)
@@ -335,12 +624,12 @@ class _BatchedModel:
         # finalization tail on the merged state: masked-out rows hold their
         # previous (still steady) state, so every primed slot's logits are
         # valid — ready rows are simply the ones the scheduler reads
-        logits, post = self._finalize(*state)
+        logits, post = self._finalize(*state, model_idx)
         return (*state, logits, post)
 
     # -- in-jit finalization tail --------------------------------------------
 
-    def _finalize(self, tails, pendings, gap):
+    def _finalize(self, tails, pendings, gap, model_idx=None):
         """Logits/posteriors as if every stream ended at this hop boundary.
 
         A *ghost* end-of-stream flush — statically sized by the plan's
@@ -354,9 +643,10 @@ class _BatchedModel:
             logits = self._pin(ops.finalize_megakernel_sharded(
                 tuple(tails), tuple(pendings), gap,
                 tuple(self._w), tuple(self._thr), tuple(self._flip),
-                self._fc_w, self._fc_thr, self._fc_flip,
+                self._fc_w, self._fc_thr, self._fc_flip, model_idx,
                 mesh=self.mesh, stages=self.plan.convs,
-                fc_raw=self._fc_raw, interpret=self.interpret,
+                fc_raw=self._fc_raw, bb=self._bb(gap.shape[0]),
+                interpret=self.interpret,
             ))
             post = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
             return logits, post
@@ -376,7 +666,8 @@ class _BatchedModel:
                 )
             if st.flush_conv > 0:
                 window = jnp.concatenate(pieces, axis=1)
-                y = self._sa(i, self._conv_raw(i, window, st.flush_conv))
+                y = self._sa(i, self._conv_raw(i, window, st.flush_conv,
+                                               model_idx), model_idx)
             else:
                 y = jnp.zeros((B, 0, st.cout), jnp.int32)
             frames = jnp.concatenate([pendings[i], y], axis=1)
@@ -385,28 +676,37 @@ class _BatchedModel:
                 B, st.flush_out, st.pool, st.cout
             ).max(axis=2)
         gap_f = jnp.minimum(gap + cur.sum(axis=1, dtype=jnp.int32), 255)
-        logits = self._pin(self._classifier(gap_f))
+        logits = self._pin(self._classifier(gap_f, model_idx))
         post = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
         return logits, post
 
-    def _classifier(self, gap_f: jax.Array) -> jax.Array:
+    def _classifier(self, gap_f: jax.Array,
+                    model_idx: jax.Array | None = None) -> jax.Array:
         """Saturated GAP counts (B, C) -> raw logits (B, n_classes)."""
         if self.backend == "pallas":
             return ops.classifier_tail_sharded(
-                gap_f, self._fc_w, self._fc_thr, self._fc_flip,
+                gap_f, self._fc_w, self._fc_thr, self._fc_flip, model_idx,
                 mesh=self.mesh, out_raw=self._fc_raw,
-                interpret=self.interpret,
+                bb=self._bb(gap_f.shape[0]), interpret=self.interpret,
             )
         h = gap_f
         for j, st in enumerate(self.plan.fcs):
-            raw = h @ self._fc_w[j]
+            if model_idx is not None:
+                wg, tb = self._block_gather(self._fc_w[j], model_idx)
+                hg = h.reshape(-1, tb, h.shape[1])
+                raw = jnp.einsum("gtc,gco->gto", hg, wg).reshape(
+                    h.shape[0], -1)
+                thr = self._fc_thr[j][model_idx]
+                flip = self._fc_flip[j][model_idx]
+            else:
+                raw = h @ self._fc_w[j]
+                thr = self._fc_thr[j][None, :]
+                flip = self._fc_flip[j][None, :]
             if st.out_raw:
                 h = raw
             else:
-                ge = raw.astype(jnp.float32) >= self._fc_thr[j][None, :]
-                h = jnp.where(
-                    self._fc_flip[j][None, :] != 0, ~ge, ge
-                ).astype(jnp.int32)
+                ge = raw.astype(jnp.float32) >= thr
+                h = jnp.where(flip != 0, ~ge, ge).astype(jnp.int32)
         return h
 
     def dispatches_per_hop(self, emit: bool) -> int:
@@ -474,6 +774,9 @@ class StreamScheduler:
         obs: Observability | None = None,
         clock=time.perf_counter,
         donate_buffers: bool = False,
+        max_models: int = 1,
+        tenant_block: int = 8,
+        prewarm: bool = False,
     ) -> None:
         assert backend in ("jnp", "pallas", "megakernel"), backend
         # every hop stamp (metrics, trace spans) reads this clock, so the
@@ -504,9 +807,22 @@ class StreamScheduler:
         self.obs = obs if obs is not None else Observability.create()
         self.metrics = StreamMetrics(self.plan, sample_rate, n_shards=S,
                                      registry=self.obs.registry)
+        # tenant weight pool: with max_models > 1 the device weights are
+        # (K, ...) stacks and each stream binds a registered variant at
+        # join time; row 0 always holds the construction weights
+        assert max_models >= 1, max_models
+        self._pool = WeightPool(max_models) if max_models > 1 else None
+        self._tenant_block = tenant_block
+        if self._pool is not None:
+            assert tenant_block >= 1 and tenant_block & (tenant_block - 1) \
+                == 0, f"tenant_block {tenant_block} not a power of two"
+            self._pool.admit(DEFAULT_MODEL, self.weights, self.thresholds)
+        self._params = prepared_model_params(self.plan, weights, thresholds)
         self._model = _BatchedModel(
             self.plan, self.weights, thresholds, backend, interpret, mesh,
             donate=donate_buffers,
+            pool_size=max_models if max_models > 1 else None,
+            tenant_block=tenant_block, params=self._params,
         )
 
         self._min_capacity = (
@@ -520,10 +836,22 @@ class StreamScheduler:
         )
         assert self._min_capacity <= cap0 <= capacity, (cap0, capacity)
         assert cap0 % S == 0
+        if self._pool is not None:
+            # tenant blocks only nest across resizes when every per-shard
+            # capacity the pool can visit is a power of two
+            for c in (self._min_capacity, cap0, capacity):
+                sc = c // S
+                assert sc & (sc - 1) == 0, (
+                    f"tenant pooling needs pow-2 per-shard capacities; "
+                    f"got {sc} (capacity {c} over {S} shards)"
+                )
         # batched state lives device-resident between hops; host copies are
         # made only on join/leave or fallback peeks — never the hot loop
         self._capacity = cap0
-        self._placement = SlotPlacement(S, cap0 // S)
+        self._placement = SlotPlacement(
+            S, cap0 // S,
+            tenant_block=tenant_block if self._pool is not None else None,
+        )
         self._tails = [
             self._shard(jnp.zeros((cap0, st.tail, st.cin), jnp.int32))
             for st in self.plan.convs
@@ -553,6 +881,12 @@ class StreamScheduler:
         self._slot_sid = np.full(cap0, -1, np.int64)
         self._primed_mask = np.zeros(cap0, bool)
         self._frames_v = np.zeros(cap0, np.int64)  # frames per slot
+        # per-slot tenant rows (pool row 0 = default model); staged to the
+        # device with each hop when pooled, remapped with every resize/
+        # rebalance like the other slot-indexed vectors
+        self._model_idx_v = np.zeros(cap0, np.int32)
+        self._model_rows_dirty = False
+        self._model_idx_dev = None  # cached device upload of the rows
         self._streams: dict[int, _Stream] = {}
         self._unprimed: set[int] = set()  # empty in steady state
         self._next_sid = 0
@@ -567,6 +901,10 @@ class StreamScheduler:
         self._emit_step = 0
         self._emit_cache: np.ndarray | None = None
         self._emit_cache_step = -1
+        # idle-time jit pre-warm of the next pow-2 capacity (satellite of
+        # the tenant-pool PR: grow spikes hide behind starved steps)
+        self._prewarm_enabled = prewarm
+        self._warmed: set[tuple[int, bool]] = set()
 
     # -- elastic slot pool ---------------------------------------------------
 
@@ -635,6 +973,8 @@ class StreamScheduler:
         self._slot_sid = remap_rows(self._slot_sid, remap, new_cap, fill=-1)
         self._primed_mask = remap_rows(self._primed_mask, remap, new_cap)
         self._frames_v = remap_rows(self._frames_v, remap, new_cap)
+        self._model_idx_v = remap_rows(self._model_idx_v, remap, new_cap)
+        self._model_rows_dirty = True
         for s in self._streams.values():
             s.slot = remap[s.slot]
             s.frontend._slot = s.slot
@@ -657,8 +997,15 @@ class StreamScheduler:
         # crowded shard happens to sit (an all-zero occupancy floors at
         # one empty local slot, i.e. min_capacity wins).
         sc = max(sc, min_sc, _next_pow2(max(self._placement.occupancy())))
-        if S * sc < self._capacity:
-            self._resize(S * sc)
+        while S * sc < self._capacity:
+            try:
+                self._resize(S * sc)
+                return
+            except ValueError:
+                # tenant-block packing can refuse a depth occupancy alone
+                # would allow (blocks never split across models); retry
+                # shallower.  Un-pooled placement never raises here.
+                sc *= 2
 
     def _maybe_rebalance(self) -> bool:
         """Migrate-on-idle: level shard occupancy with cross-shard slot
@@ -706,6 +1053,8 @@ class StreamScheduler:
         self._slot_sid = remap_rows(self._slot_sid, remap, cap, fill=-1)
         self._primed_mask = remap_rows(self._primed_mask, remap, cap)
         self._frames_v = remap_rows(self._frames_v, remap, cap)
+        self._model_idx_v = remap_rows(self._model_idx_v, remap, cap)
+        self._model_rows_dirty = True
         for s in self._streams.values():
             s.slot = remap[s.slot]
             s.frontend._slot = s.slot
@@ -717,23 +1066,107 @@ class StreamScheduler:
             occupancy_after=list(self._placement.occupancy()),
         )
 
+    # -- tenant weight pool --------------------------------------------------
+
+    @property
+    def models(self) -> list[tuple[str, int]]:
+        """Resident pool variants as ``(model_id, pool row)`` pairs."""
+        if self._pool is None:
+            return [(DEFAULT_MODEL, 0)]
+        return self._pool.models()
+
+    def register_model(self, model_id: str, weights, thresholds) -> int:
+        """Admit one tenant variant into the weight pool; returns its row.
+
+        The variant must share the default model's plan geometry (same
+        spec, same hop).  Admission writes one row of the device-resident
+        ``(K, ...)`` stacks — shapes never change, so the jitted step's
+        cache survives.  When the pool is full, the least-recently-used
+        variant with NO live streams is evicted (MemoryError when every
+        row is pinned).  Re-admitting a resident id is an LRU touch.
+        """
+        if self._pool is None:
+            raise ValueError(
+                "single-model scheduler: construct with max_models > 1 "
+                "to enable the tenant weight pool"
+            )
+        if model_id in self._pool:
+            row, _ = self._pool.admit(model_id, weights, thresholds)
+            return row
+        row, evicted = self._pool.admit(model_id, weights, thresholds)
+        w, t = self._pool.params_for(model_id)
+        self._model.set_model_row(row, w, t)
+        if evicted is not None:
+            self.metrics.on_model_evict(evicted)
+            self.obs.events.emit("model_evict", model=evicted, row=row)
+        self.metrics.on_model_admit(model_id)
+        self.obs.events.emit("model_admit", model=model_id, row=row,
+                             evicted=evicted)
+        return row
+
+    def _stream_params(self, s: _Stream):
+        """The weights/thresholds the stream's slot computes with."""
+        if self._pool is None or s.model == DEFAULT_MODEL:
+            return self.weights, self.thresholds
+        return self._pool.params_for(s.model)
+
+    def _sync_model_rows(self) -> None:
+        """Rebuild the per-slot tenant rows block-uniformly from the live
+        streams.  The kernels gather ONE weight row per tenant block, so
+        every slot of a block — free slots included — must carry the
+        block's bound row: a freed or remapped slot left stale (or reset
+        to 0) would steer its whole block to the wrong weights.  Coalesced
+        by a dirty flag so joins/closes/resizes pay it once per hop."""
+        if self._pool is None or not self._model_rows_dirty:
+            return
+        v = np.zeros(self._capacity, np.int32)
+        tb = min(self._tenant_block, self._placement.shard_capacity)
+        for s in self._streams.values():
+            b0 = (s.slot // tb) * tb
+            v[b0:b0 + tb] = self._pool.index_of(s.model)
+        self._model_idx_v = v
+        self._model_rows_dirty = False
+        self._model_idx_dev = None  # rows changed: next hop re-uploads
+
     # -- stream lifecycle ----------------------------------------------------
 
     def add_stream(self, sid: int | None = None,
-                   frontend_cfg: FrontendConfig | None = None) -> int:
+                   frontend_cfg: FrontendConfig | None = None,
+                   model: str | None = None) -> int:
         """Claim a slot for a new stream on the least-loaded shard (growing
-        the pool if needed); returns the stream id."""
+        the pool if needed); returns the stream id.  With a tenant pool,
+        ``model`` binds the stream to a registered variant (default: the
+        construction weights); placement keeps every ``tenant_block``
+        slot block single-model, so the batched hop's per-block weight
+        gather stays one row."""
         sid = self._next_sid if sid is None else sid
         assert sid not in self._streams, f"stream {sid} already exists"
-        slot = self._placement.alloc(sid)
-        if slot is None:
+        if self._pool is not None:
+            model_id = DEFAULT_MODEL if model is None else model
+            if model_id not in self._pool:
+                raise KeyError(
+                    f"unknown model {model_id!r}; register_model() first"
+                )
+            midx = self._pool.acquire(model_id)
+        else:
+            if model is not None:
+                raise ValueError(
+                    "model binding needs a tenant pool (max_models > 1)"
+                )
+            model_id, midx = DEFAULT_MODEL, 0
+        slot = self._placement.alloc(sid, model=model_id)
+        while slot is None:
             if self._capacity >= self.max_capacity:
+                if self._pool is not None:
+                    self._pool.release(model_id)
                 raise MemoryError(
                     f"all {self.max_capacity} stream slots busy; "
                     "close a stream first"
                 )
+            # one grow may still not open a compatible tenant block (a
+            # one-block shard bound to another model), so keep doubling
             self._resize(min(self._capacity * 2, self.max_capacity))
-            slot = self._placement.alloc(sid)
+            slot = self._placement.alloc(sid, model=model_id)
         self._next_sid = max(self._next_sid, sid) + 1
         self._streams[sid] = _Stream(
             sid=sid,
@@ -741,8 +1174,11 @@ class StreamScheduler:
             frontend=AudioFrontend(frontend_cfg, arena=self._arena,
                                    slot=slot),
             events=[],
+            model=model_id,
         )
         self._slot_sid[slot] = sid
+        self._model_idx_v[slot] = midx
+        self._model_rows_dirty = True  # block fill happens at sync
         self._detector.reset_slot(slot)
         self._unprimed.add(sid)
         self.metrics.on_join(sid)
@@ -847,21 +1283,36 @@ class StreamScheduler:
         # priming consumed a non-hop-multiple; realign the inboxes so
         # every future hop window is one contiguous block
         self._arena.rebase_batch(slots)
-        steady = prime_batch(self.plan, self.weights, self.thresholds,
-                             samples)
-        jslots = jnp.asarray(slots)
-        for i in range(len(self.plan.convs)):
-            self._tails[i] = self._tails[i].at[jslots].set(
-                jnp.asarray(steady["tails"][i])
-            )
-            if self._pendings[i].shape[1]:
-                self._pendings[i] = self._pendings[i].at[jslots].set(
-                    jnp.asarray(steady["pendings"][i])
+        # one vectorized warm-up per tenant model (a single group without
+        # a pool): each group's rows land via the same batched scatters
+        if self._pool is None:
+            groups = [(self.weights, self.thresholds,
+                       np.arange(len(sids), dtype=np.int64))]
+        else:
+            by_model: dict[str, list[int]] = {}
+            for j, sid in enumerate(sids):
+                by_model.setdefault(self._streams[sid].model, []).append(j)
+            groups = [
+                (*self._stream_params(self._streams[sids[pos[0]]]),
+                 np.asarray(pos, np.int64))
+                for pos in by_model.values()
+            ]
+        for w, t, pos in groups:
+            steady = prime_batch(self.plan, w, t, samples[pos])
+            gslots = slots[pos]
+            jslots = jnp.asarray(gslots)
+            for i in range(len(self.plan.convs)):
+                self._tails[i] = self._tails[i].at[jslots].set(
+                    jnp.asarray(steady["tails"][i])
                 )
-        self._gap = self._gap.at[jslots].set(
-            jnp.asarray(steady["gap"].astype(np.int32))
-        )
-        self._frames_v[slots] = steady["frames"]
+                if self._pendings[i].shape[1]:
+                    self._pendings[i] = self._pendings[i].at[jslots].set(
+                        jnp.asarray(steady["pendings"][i])
+                    )
+            self._gap = self._gap.at[jslots].set(
+                jnp.asarray(steady["gap"].astype(np.int32))
+            )
+            self._frames_v[gslots] = steady["frames"]
         self._primed_mask[slots] = True
         for sid in sids:
             s = self._streams[sid]
@@ -893,7 +1344,8 @@ class StreamScheduler:
 
     def _extract_slot(self, s: _Stream, host=None) -> StreamState:
         tails, pendings, gap = host if host is not None else self._host_state()
-        st = StreamState(self.plan, self.weights, self.thresholds)
+        w, t = self._stream_params(s)
+        st = StreamState(self.plan, w, t)
         st.import_steady(
             [t[s.slot] for t in tails],
             [p[s.slot] for p in pendings],
@@ -950,6 +1402,15 @@ class StreamScheduler:
             self._shard(jnp.asarray(ready_mask)),
             tuple(self._tails), tuple(self._pendings), self._gap,
         )
+        if self._pool is not None:
+            self._sync_model_rows()
+            if self._model_idx_dev is None:
+                # steady state reuses one device copy: the rows only
+                # move on join/close/resize, not per hop
+                self._model_idx_dev = self._shard(
+                    jnp.asarray(self._model_idx_v))
+            args = args + (self._model_idx_dev,)
+        n_entries = self._jit_entries()
         if self.emit_logits:
             tails, pendings, gap, logits, post = self._model.step(
                 *args, emit=True
@@ -957,10 +1418,24 @@ class StreamScheduler:
         else:
             tails, pendings, gap = self._model.step(*args, emit=False)
             logits = post = None
+        if n_entries is not None and self._jit_entries() != n_entries:
+            # this hop traced a new (capacity, emit) shape — the compile
+            # spike idle pre-warming exists to hide (the multi-tenant
+            # suite pins the post-grow hop clean when prewarm=True)
+            self.obs.trace.add("compile", self._clock(), 0.0,
+                               capacity=self._capacity)
         self._tails = list(tails)
         self._pendings = list(pendings)
         self._gap = gap
         return logits, post
+
+    def _jit_entries(self) -> int | None:
+        """Jit-cache entry count of the batched step (None when the jax
+        version exposes no cache introspection)."""
+        try:
+            return self._model.step._cache_size()
+        except AttributeError:  # pragma: no cover - jax-version dependent
+            return None
 
     def _fold_hop(self, ready_slots, shard_counts, logits_h, post_h,
                   t0, t_pack, t_dispatch, t_device,
@@ -1004,13 +1479,21 @@ class StreamScheduler:
             # detector phase is hidden under device compute
             hidden_s += t_detector - t_device
         n_disp = self._model.dispatches_per_hop(self.emit_logits)
+        model_counts = None
+        if self._pool is not None:
+            mc = np.bincount(self._model_idx_v[ready_slots],
+                             minlength=self._pool.max_models)
+            model_counts = {
+                m: int(mc[row]) for m, row in self._pool.models()
+                if mc[row]
+            }
         self.metrics.on_step(
             ready_slots.size, self.plan.frames_per_hop,
             t_detector - t0, host_pack_s=t_pack - t0,
             shard_counts=shard_counts.tolist(), finalized=self.emit_logits,
             dispatch_s=t_dispatch - t_pack, device_s=t_device - t_dispatch,
             detector_s=t_detector - t_device, hidden_s=hidden_s,
-            dispatches=n_disp,
+            dispatches=n_disp, model_counts=model_counts,
         )
         # fold the arena's push-side counters into the metrics at the hop
         # boundary: two scalar reads, so neither the push path nor this
@@ -1057,6 +1540,7 @@ class StreamScheduler:
         self._hop_barriers()
         packed = self._pack_ready()
         if packed is None:
+            self._maybe_prewarm()  # starved step = idle; warm the grow
             return None
         ready_slots, ready_mask, audio, shard_counts, t0, t_pack = packed
         logits, post = self._dispatch_hop(ready_mask, audio)
@@ -1075,6 +1559,46 @@ class StreamScheduler:
         t_device = self._clock()
         return self._fold_hop(ready_slots, shard_counts, logits_h, post_h,
                               t0, t_pack, t_dispatch, t_device)
+
+    # -- idle-time jit pre-warm ----------------------------------------------
+
+    def _maybe_prewarm(self) -> None:
+        """Compile the NEXT pow-2 capacity's hop while starved, so the
+        first hop after a grow pays no compile spike (``prewarm=True``;
+        the trace stays free of ``compile`` events across the resize —
+        pinned by tests/test_multitenant.py)."""
+        if not self._prewarm_enabled:
+            return
+        nxt = min(self._capacity * 2, self.max_capacity)
+        if nxt > self._capacity:
+            self._warm_capacity(nxt)
+
+    def _warm_capacity(self, cap: int) -> None:
+        """Run the jitted step once on zero dummies at ``cap`` slots —
+        same shapes/dtypes/shardings as a real hop, so jit's shape-keyed
+        cache is hot before the resize ever happens."""
+        key = (cap, self.emit_logits)
+        if key in self._warmed:
+            return
+        self._warmed.add(key)
+        t0 = self._clock()
+        plan = self.plan
+        z = lambda shape, dt: self._shard(jnp.zeros(shape, dt))  # noqa: E731
+        args = (
+            z((cap, plan.hop_samples), jnp.int32),      # pack_hops dtype
+            z((cap,), bool),
+            tuple(z((cap, st.tail, st.cin), jnp.int32)
+                  for st in plan.convs),
+            tuple(z((cap, st.phase, st.cout), jnp.int32)
+                  for st in plan.convs),
+            z((cap, plan.gap_channels), jnp.int32),
+        )
+        if self._pool is not None:
+            args = args + (z((cap,), jnp.int32),)
+        out = self._model.step(*args, emit=self.emit_logits)
+        jax.block_until_ready(out)
+        self.obs.trace.add("prewarm", t0, self._clock() - t0, capacity=cap)
+        self.obs.events.emit("prewarm", capacity=cap)
 
     def step(self) -> list[tuple[int, int, np.ndarray | None, Detection | None]]:
         """Advance every stream that has a full hop buffered.
@@ -1145,9 +1669,13 @@ class StreamScheduler:
             if (self._emit_cache is not None
                     and s.stamp <= self._emit_cache_step):
                 return self._emit_cache[s.slot].copy()
-            logits, _ = self._model.finalize(
-                tuple(self._tails), tuple(self._pendings), self._gap
-            )
+            fargs = (tuple(self._tails), tuple(self._pendings), self._gap)
+            if self._pool is not None:
+                self._sync_model_rows()
+                fargs = fargs + (
+                    self._shard(jnp.asarray(self._model_idx_v)),
+                )
+            logits, _ = self._model.finalize(*fargs)
             return np.asarray(logits[s.slot])
         return self._peek_fallback(s)
 
@@ -1155,7 +1683,8 @@ class StreamScheduler:
         if s.primed:
             st = self._extract_slot(s)
         else:
-            st = StreamState(self.plan, self.weights, self.thresholds)
+            w, t = self._stream_params(s)
+            st = StreamState(self.plan, w, t)
         leftover = s.frontend.peek_all() if len(s.frontend) else None
         return st.peek_logits(leftover)
 
@@ -1171,7 +1700,8 @@ class StreamScheduler:
         if s.primed:
             st = self._extract_slot(s)
         else:
-            st = StreamState(self.plan, self.weights, self.thresholds)
+            w, t = self._stream_params(s)
+            st = StreamState(self.plan, w, t)
         st.advance(s.frontend.pop_all(), flush=True)
         logits = st.logits()
         # one last detector update with the flushed logits (host softmax),
@@ -1185,12 +1715,16 @@ class StreamScheduler:
             s.events.append(det)
             self.metrics.on_detection(sid)
         self._placement.free(s.slot)
+        if self._pool is not None:
+            self._pool.release(s.model)  # unpin; LRU may now evict it
         self._clear_slot(s.slot)  # scrub so the next tenant starts clean
         self._arena.clear_slot(s.slot)
         self._detector.reset_slot(s.slot)
         self._slot_sid[s.slot] = -1
         self._primed_mask[s.slot] = False
         self._frames_v[s.slot] = 0
+        self._model_rows_dirty = True  # never zero the slot: its block
+        # may still be bound to a tenant; sync rebuilds block-uniformly
         self.metrics.on_close(sid, frames_out=st.frames,
                               samples_in=samples_in, chunks_in=chunks_in)
         self.obs.events.emit("close", sid=sid, frames=st.frames,

@@ -1,0 +1,395 @@
+"""Multi-tenant weight pool (stream/scheduler.WeightPool) oracle suite.
+
+K complete model variants share one plan geometry and ONE batched hop
+dispatch: each slot carries an int32 model index and the kernels gather
+that slot-block's weight planes from a stacked ``(K, ...)`` pool.  The
+bar is strict: a mixed-tenant batch must be bit-exact with K independent
+single-tenant schedulers slot-for-slot — through ragged joins, closes,
+elastic resizes, the async plane, and sharded meshes — while the traced
+device-launch count stays K-independent (1 steady / <=2 emit hop on the
+megakernel, exactly as the single-model scheduler).
+
+Also covers the satellite surfaces: LRU admission/eviction with
+refcounts, packed-plane memoization (``param_cache_stats``), idle jit
+prewarm (post-grow hop has no compile event in the trace), and the
+per-tenant metrics split (``tenant_summary``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compiler, executor
+from repro.kernels import dispatch
+from repro.launch.mesh import make_stream_mesh
+from repro.models import kws
+from repro.stream import (
+    DEFAULT_MODEL,
+    AsyncStreamScheduler,
+    StreamScheduler,
+    WeightPool,
+    param_cache_stats,
+)
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as hyp_st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is optional
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return kws.build_kws_smoke_spec()
+
+
+@pytest.fixture(scope="module")
+def variants(spec):
+    """Four complete tenant variants of the same smoke geometry: distinct
+    init seeds -> distinct ternary weights + SA thresholds."""
+    out = {}
+    for name, seed in [(DEFAULT_MODEL, 0), ("b", 7), ("c", 11), ("d", 13)]:
+        params = kws.init_kws_params(jax.random.PRNGKey(seed), spec)
+        out[name] = kws.export_kws(params, spec)
+    return out
+
+
+def _clip(spec, seed, n=None):
+    return np.random.default_rng(seed).integers(
+        0, 256, (n or spec.in_len,)
+    ).astype(np.uint8)
+
+
+def _mesh(n):
+    if jax.device_count() < n:
+        pytest.skip(
+            f"needs {n} devices (XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n})"
+        )
+    return make_stream_mesh(n)
+
+
+def _pooled(spec, variants, *, max_models=4, backend="megakernel", cls=None,
+            **kw):
+    w0, t0 = variants[DEFAULT_MODEL]
+    s = (cls or StreamScheduler)(
+        spec, w0, t0, max_models=max_models, tenant_block=2,
+        backend=backend, **kw)
+    for name in list(variants)[1:max_models]:
+        s.register_model(name, *variants[name])
+    return s
+
+
+def _feed(s, sid, audio, chunk=320):
+    for j in range(0, len(audio), chunk):
+        s.push_audio(sid, audio[j:j + chunk])
+
+
+def _drain(s):
+    out = s.run_until_starved()
+    if hasattr(s, "drain"):
+        s.drain()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mixed-tenant bit-exactness: fused pool == K single-tenant schedulers
+#                              == offline executor, per slot
+# ---------------------------------------------------------------------------
+
+def _check_mixed(spec, variants, seed, backend, cls=StreamScheduler,
+                 mesh=None):
+    """One randomized mixed-tenant scenario: K in {1,2,4} tenants, random
+    per-stream binding, ragged clip lengths, a mid-scenario close wave
+    (shrink pressure) and a second join wave (grow pressure).  Every
+    surviving stream's peek/close logits must equal a single-tenant
+    scheduler fed identically, and the close-out logits must equal the
+    offline executor on the full clip."""
+    rng = np.random.default_rng(seed)
+    K = int(rng.choice([1, 2, 4]))
+    names = list(variants)[:K]
+    s = _pooled(spec, variants, max_models=max(K, 2), backend=backend,
+                cls=cls, capacity=16, hop_frames=2, mesh=mesh)
+    binding = [str(rng.choice(names)) for _ in range(6)]
+    clips = [_clip(spec, 100 * seed + i, 480 + 160 * int(rng.integers(0, 4)))
+             for i in range(6)]
+    sids = [s.add_stream(model=m) for m in binding]
+    for sid, a in zip(sids, clips):
+        _feed(s, sid, a[: len(a) // 2])
+    _drain(s)
+    closed = {i: s.close_stream(sids[i]).logits
+              for i in range(0, 6, 3)}  # ragged closes -> shrink pressure
+    for i in range(6, 10):  # second wave -> grow pressure
+        binding.append(str(rng.choice(names)))
+        clips.append(_clip(spec, 100 * seed + i, 640))
+        sids.append(s.add_stream(model=binding[i]))
+        _feed(s, sids[i], clips[i])
+    for i in range(6):
+        if i not in closed:
+            _feed(s, sids[i], clips[i][len(clips[i]) // 2:])
+    _drain(s)
+    results = dict(closed)
+    for i in range(10):
+        if i not in results:
+            results[i] = s.close_stream(sids[i]).logits
+    if hasattr(s, "shutdown"):
+        s.shutdown()
+    # oracle 1: one single-tenant scheduler per stream, fed identically
+    for i in range(10):
+        w, t = variants[binding[i]]
+        consumed = len(clips[i]) if i not in closed else len(clips[i]) // 2
+        ref = StreamScheduler(spec, w, t, capacity=4, hop_frames=2,
+                              backend="jnp")
+        sid = ref.add_stream()
+        _feed(ref, sid, clips[i][:consumed])
+        ref.run_until_starved()
+        np.testing.assert_array_equal(
+            results[i], ref.close_stream(sid).logits,
+            err_msg=f"stream {i} tenant {binding[i]}")
+        # oracle 2: the offline executor on the exact consumed clip
+        spec_i = dataclasses.replace(spec, in_len=consumed)
+        prog = compiler.compile_model(spec_i, w, t)
+        off = executor.Executor(prog).run(
+            clips[i][:consumed][:, None].astype(np.uint8)).output.ravel()
+        np.testing.assert_array_equal(results[i], off)
+
+
+@pytest.mark.parametrize("backend", ("jnp", "pallas", "megakernel"))
+def test_mixed_tenant_bitexact(spec, variants, backend):
+    _check_mixed(spec, variants, seed=1, backend=backend)
+
+
+@pytest.mark.parametrize("seed", range(2, 5))
+def test_mixed_tenant_bitexact_seeds(spec, variants, seed):
+    _check_mixed(spec, variants, seed=seed, backend="megakernel")
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(seed=hyp_st.integers(min_value=10, max_value=10_000))
+    def test_mixed_tenant_hypothesis(seed):
+        """Property form: any drawn seed (-> any K, binding, raggedness)
+        must be fused-pool-vs-reference bit-exact."""
+        spec = kws.build_kws_smoke_spec()
+        variants = {}
+        for name, s_ in [(DEFAULT_MODEL, 0), ("b", 7), ("c", 11), ("d", 13)]:
+            p = kws.init_kws_params(jax.random.PRNGKey(s_), spec)
+            variants[name] = kws.export_kws(p, spec)
+        _check_mixed(spec, variants, seed=seed, backend="megakernel")
+
+
+def test_mixed_tenant_async_matches_sync(spec, variants):
+    """The async plane (epoch barriers on register_model/resize) is
+    bit-identical to the synchronous pooled scheduler."""
+    _check_mixed(spec, variants, seed=6, backend="megakernel",
+                 cls=AsyncStreamScheduler)
+
+
+@pytest.mark.parametrize("n_shards", (2,))
+def test_mixed_tenant_sharded(spec, variants, n_shards):
+    """Tenant-blocked placement keeps every kernel block single-model on
+    a sharded mesh too (per-shard pow-2 capacities, replicated pool)."""
+    _check_mixed(spec, variants, seed=7, backend="megakernel",
+                 mesh=_mesh(n_shards))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch accounting: launches/hop is K-independent
+# ---------------------------------------------------------------------------
+
+def _traced_dispatches(sched, emit: bool) -> int:
+    """pallas_calls captured by one fresh trace of the pooled hop step."""
+    m = sched._model
+    plan = sched.plan
+    B = sched.capacity
+    args = (
+        jnp.zeros((B, plan.hop_samples), jnp.int32),
+        jnp.zeros((B,), bool),
+        tuple(jnp.zeros((B, st.tail, st.cin), jnp.int32)
+              for st in plan.convs),
+        tuple(jnp.zeros((B, st.phase, st.cout), jnp.int32)
+              for st in plan.convs),
+        jnp.zeros((B, plan.gap_channels), jnp.int32),
+        jnp.zeros((B,), jnp.int32),  # model_idx
+    )
+    jax.clear_caches()
+    with dispatch.counting() as traced:
+        jax.eval_shape(lambda *a: m._step(*a, emit=emit), *args)
+    return traced()
+
+
+@pytest.mark.parametrize("backend", ("jnp", "pallas", "megakernel"))
+@pytest.mark.parametrize("K", (1, 4, 8))
+def test_dispatches_per_hop_k_independent(spec, backend, K):
+    """The traced launch count of a K-tenant hop equals the single-model
+    scheduler's static accounting for every backend — the pool rides the
+    same batched dispatch, it never fans out per tenant.  At K=8 the
+    megakernel still fuses to ONE launch per hop, emit included."""
+    params = kws.init_kws_params(jax.random.PRNGKey(0), spec)
+    w0, t0 = kws.export_kws(params, spec)
+    base = StreamScheduler(spec, w0, t0, capacity=16, initial_capacity=16,
+                           min_capacity=16, hop_frames=2, backend=backend)
+    s = StreamScheduler(spec, w0, t0, capacity=16, initial_capacity=16,
+                        min_capacity=16, hop_frames=2, backend=backend,
+                        max_models=K if K > 1 else 2, tenant_block=2)
+    for emit in (False, True):
+        static = base._model.dispatches_per_hop(emit)
+        assert s._model.dispatches_per_hop(emit) == static
+        assert _traced_dispatches(s, emit) == static
+    if backend == "megakernel":
+        assert s._model.dispatches_per_hop(False) == 1
+        assert s._model.dispatches_per_hop(True) <= 2
+
+
+# ---------------------------------------------------------------------------
+# WeightPool admission / LRU eviction / refcounts
+# ---------------------------------------------------------------------------
+
+def test_pool_lru_eviction_and_refcounts(spec, variants):
+    w0, t0 = variants[DEFAULT_MODEL]
+    s = StreamScheduler(spec, w0, t0, capacity=16, max_models=2,
+                        tenant_block=2)
+    sid0 = s.add_stream()  # pins DEFAULT_MODEL (refcount 1)
+    s.register_model("b", *variants["b"])
+    s.register_model("c", *variants["c"])  # evicts b: only refcount-0 row
+    assert [m for m, _ in s.models] == [DEFAULT_MODEL, "c"]
+    sidc = s.add_stream(model="c")
+    with pytest.raises(MemoryError, match="weight pool full"):
+        s.register_model("d", *variants["d"])  # every row pinned
+    s.close_stream(sidc)  # c's refcount -> 0
+    row = s.register_model("d", *variants["d"])
+    assert [m for m, _ in s.models] == [DEFAULT_MODEL, "d"]
+    assert row == 1  # reuses c's freed row, never grows the stack
+    with pytest.raises(KeyError, match="unknown model"):
+        s.add_stream(model="nope")
+    s.close_stream(sid0)
+    ts = s.metrics.tenant_summary()
+    assert ts["models_admitted"] == 3 and ts["models_evicted"] == 2
+
+
+def test_pool_readmit_is_touch_not_swap(spec, variants):
+    """Re-registering a resident tenant must not re-pack or move rows —
+    it only refreshes LRU recency."""
+    w0, t0 = variants[DEFAULT_MODEL]
+    s = StreamScheduler(spec, w0, t0, capacity=16, max_models=3,
+                        tenant_block=2)
+    r1 = s.register_model("b", *variants["b"])
+    s.register_model("c", *variants["c"])
+    assert s.register_model("b", *variants["b"]) == r1  # touch
+    # now default is LRU -> next admission evicts it, not b
+    s.register_model("d", *variants["d"])
+    assert DEFAULT_MODEL not in dict(s.models)
+    assert dict(s.models).keys() == {"b", "c", "d"}
+    with pytest.raises(KeyError):  # default evicted: unbound joins fail
+        s.add_stream()
+
+
+def test_single_model_scheduler_rejects_tenancy(spec, variants):
+    w0, t0 = variants[DEFAULT_MODEL]
+    s = StreamScheduler(spec, w0, t0, capacity=4)
+    with pytest.raises(ValueError, match="max_models"):
+        s.register_model("b", *variants["b"])
+    with pytest.raises(ValueError, match="tenant pool"):
+        s.add_stream(model="b")
+    assert s.models == [(DEFAULT_MODEL, 0)]
+
+
+def test_weight_pool_unit(spec, variants):
+    """WeightPool standalone: rows are stable while referenced, eviction
+    is LRU among refcount-0 variants only."""
+    pool = WeightPool(2)
+    r0, ev = pool.admit("a", *variants[DEFAULT_MODEL])
+    assert (r0, ev) == (0, None)
+    r1, ev = pool.admit("b", *variants["b"])
+    assert (r1, ev) == (1, None)
+    pool.acquire("b")
+    r2, ev = pool.admit("c", *variants["c"])
+    assert (r2, ev) == (0, "a")  # a was LRU and unreferenced
+    pool.release("b")
+    assert pool.refcount("b") == 0
+    assert len(pool) == 2 and "a" not in pool
+
+
+# ---------------------------------------------------------------------------
+# Satellite: packed-plane memoization
+# ---------------------------------------------------------------------------
+
+def test_param_cache_memoizes_packing(spec, variants):
+    """Grow/shrink and pool admission re-use packed planes: the second
+    scheduler built from the same (weights, thresholds, plan) objects is
+    a pure cache hit, and resizes never re-pack at all."""
+    w0, t0 = variants[DEFAULT_MODEL]
+    before = param_cache_stats()
+    s1 = StreamScheduler(spec, w0, t0, capacity=8, max_models=2,
+                         tenant_block=2)
+    s1.register_model("b", *variants["b"])
+    mid = param_cache_stats()
+    assert mid["misses"] >= before["misses"]
+    s2 = StreamScheduler(spec, w0, t0, capacity=8, max_models=2,
+                         tenant_block=2)
+    s2.register_model("b", *variants["b"])
+    after = param_cache_stats()
+    assert after["misses"] == mid["misses"]  # same arrays: all hits
+    assert after["hits"] >= mid["hits"] + 2
+    # elastic resize packs nothing: force a grow and compare miss count
+    sids = [s2.add_stream() for _ in range(8)]
+    assert param_cache_stats()["misses"] == after["misses"]
+    for sid in sids:
+        s2.close_stream(sid)
+    assert param_cache_stats()["misses"] == after["misses"]
+
+
+# ---------------------------------------------------------------------------
+# Satellite: idle jit prewarm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cls", (StreamScheduler, AsyncStreamScheduler))
+def test_prewarm_post_grow_hop_has_no_compile_event(spec, variants, cls):
+    """With prewarm=True, a starved turn warms the next pow-2 capacity,
+    so the first hop after a grow must NOT log a compile trace event."""
+    s = _pooled(spec, variants, max_models=2, backend="megakernel",
+                cls=cls, capacity=32, hop_frames=2, prewarm=True)
+    sids = [s.add_stream(model=m) for m in (None, "b")]
+    for j, sid in enumerate(sids):
+        _feed(s, sid, _clip(spec, 20 + j, 960))
+    _drain(s)
+    s.step_batch()  # starved turn -> _maybe_prewarm fires
+    assert s.obs.trace.spans("prewarm"), "starved turn did not prewarm"
+    warmed_caps = {c for c, _ in s._warmed}
+    sids += [s.add_stream(model="b") for _ in range(3)]  # forces a grow
+    assert s.capacity in warmed_caps
+    before = len(s.obs.trace.spans("compile"))
+    for j, sid in enumerate(sids[2:]):
+        _feed(s, sid, _clip(spec, 30 + j, 640))
+    _drain(s)
+    grown = [c for c in s.obs.trace.spans("compile")[before:]
+             if c["args"]["capacity"] == s.capacity]
+    assert not grown, f"post-grow hop recompiled: {grown}"
+    if hasattr(s, "shutdown"):
+        s.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Per-tenant metrics
+# ---------------------------------------------------------------------------
+
+def test_tenant_metrics_split(spec, variants):
+    s = _pooled(spec, variants, max_models=4, backend="jnp", capacity=8,
+                hop_frames=2)
+    sids = {m: s.add_stream(model=m) for m in (None, "b", "c")}
+    for j, sid in enumerate(sids.values()):
+        _feed(s, sid, _clip(spec, 40 + j, 960))
+    _drain(s)
+    ts = s.metrics.tenant_summary()
+    per = ts["per_model"]
+    assert per[DEFAULT_MODEL] > 0 and per["b"] > 0 and per["c"] > 0
+    assert per[DEFAULT_MODEL] == per["b"] == per["c"]  # same clip length
+    assert sum(per.values()) == s.metrics.stream_hops_total
+    assert ts["models_admitted"] == 3.0  # b, c, d (d idle: no hops row)
+    # the summary() contract is untouched by tenancy
+    assert {"streams", "steps", "device_dispatches_per_hop"} <= set(
+        s.metrics.summary())
