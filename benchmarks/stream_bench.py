@@ -97,6 +97,8 @@ CHURN_CAP = 32
 TENANT_KS = (1, 2, 4, 8)  # pool sizes swept at fixed total streams
 TENANT_TOTAL = 16            # fixed across K; same total in smoke + full
 TENANT_ROUNDS = 2 if SMOKE else 10
+LM_ELASTIC_SLOTS = (4, 8, 16)  # slot-pool ceilings for the LM decode split
+LM_ELASTIC_WAVES = 2
 SHARD_TOTAL = 1024        # the ROADMAP "1k+ concurrent streams" target
 SHARD_CONFIGS = (1, 2, 8)
 SHARD_TIMED_ROUNDS = 2 if SMOKE else 6
@@ -588,6 +590,80 @@ def _multi_tenant(spec, weights, thresholds) -> dict[str, object]:
     }
 
 
+def _lm_elastic(events) -> dict[str, object]:
+    """LM decode on the shared slot pool: tokens/s under grow/shrink churn.
+
+    The serving engine rides the same ``repro.runtime.SlotPool`` as the
+    streaming scheduler; this split measures continuous-batching decode
+    throughput at slot-pool ceilings {4, 8, 16}.  Each config starts the
+    pool at 2 slots and feeds waves of mixed-length requests: admission
+    doubles capacity up to the ceiling (``lm_resize`` grow, emitted by the
+    pool), the short tail finishing and the end-of-wave drain shrink it
+    back (``lm_resize`` shrink) — so every timed wave crosses at least one
+    grow and one shrink mid-decode.  Throughput is generated tokens over
+    wall; resize lifecycle counts come from the pool's own event stream
+    (landing in the shared lifecycle JSONL artifact).
+    """
+    from repro.configs.base import get_arch
+    from repro.models import api
+    from repro.serve.engine import Engine, Request
+
+    cfg = get_arch("qwen3-0.6b", smoke=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    max_new = 4 if SMOKE else 8
+    configs: dict[str, dict] = {}
+
+    def wave(eng, rid0: int, n_req: int) -> tuple[int, int]:
+        for i in range(n_req):
+            eng.submit(Request(
+                rid=rid0 + i,
+                prompt=np.arange(6, dtype=np.int32) + rid0 + i,
+                # alternate short/long so finishes skew occupancy and the
+                # shrink path runs while the long half still decodes
+                max_new_tokens=2 if i % 2 else max_new,
+            ))
+        done = eng.run_until_drained_async()
+        return rid0 + n_req, sum(len(r.out_tokens) for r in done)
+
+    for slots in LM_ELASTIC_SLOTS:
+        obs = Observability(registry=MetricsRegistry(), trace=Tracer(),
+                            events=events)
+        eng = Engine(cfg, params, batch_slots=2, max_seq=64, obs=obs,
+                     max_slots=slots, min_slots=2)
+        # untimed warm wave: compiles decode at every pow-2 capacity the
+        # elastic pool visits, so the timed waves measure the runtime,
+        # not jit
+        rid, _ = wave(eng, 0, 2 * slots)
+        seq0 = events.seq
+        tokens = 0
+        t0 = time.perf_counter()
+        for _ in range(LM_ELASTIC_WAVES):
+            rid, t = wave(eng, rid, 2 * slots)
+            tokens += t
+        wall = time.perf_counter() - t0
+        resizes = [e for e in events.tail()
+                   if e["event"] == "lm_resize" and e["seq"] >= seq0]
+        grew = [e for e in resizes if e["new"] > e["old"]]
+        shrank = [e for e in resizes if e["new"] < e["old"]]
+        configs[str(slots)] = {
+            "tokens": tokens,
+            "wall_s": wall,
+            "tokens_per_sec": tokens / wall,
+            "requests": rid,
+            "resizes_grow": len(grew),
+            "resizes_shrink": len(shrank),
+            "peak_capacity": max((e["new"] for e in grew), default=2),
+            "final_capacity": eng.slots,
+        }
+    return {
+        "arch": "qwen3-0.6b (smoke)",
+        "min_slots": 2,
+        "waves": LM_ELASTIC_WAVES,
+        "max_new_tokens": max_new,
+        "configs": configs,
+    }
+
+
 def _sharded_sweep(spec, weights, thresholds) -> dict[str, object] | None:
     """>=1024 streams on one logical pool across 1/2/8 shards.
 
@@ -718,6 +794,7 @@ def run() -> list[str]:
         skewed = prev.get("skewed_churn")
         if skewed is not None:
             skewed = {**skewed, "carried_from_prior_run": True}
+    lm_elastic = _lm_elastic(events)
     events.flush()
     event_counts = events.counts()
     events.close()
@@ -796,6 +873,10 @@ def run() -> list[str]:
         # launches/hop + speedup vs K separate schedulers (CI asserts
         # the >=2x bar at K=4 on the committed full-run artifact)
         "multi_tenant": multi_tenant,
+        # the LM engine on the same shared SlotPool: decode tokens/s at
+        # slot ceilings {4,8,16} under grow/shrink churn (lm_resize
+        # lifecycle asserted by CI from the shared event log)
+        "lm_elastic": lm_elastic,
         "sharded": sharded,
         # shrink-floor capacity with vs without the cross-shard rebalance
         # plane under one-shard-skewed leave churn (CI asserts on this)
@@ -847,6 +928,13 @@ def run() -> list[str]:
     if prev_p50:
         out.append(row("stream.hop_p50_vs_prev", f"{hop_speedup:.2f}",
                        "x prior committed BENCH_stream.json"))
+    for s, c in sorted(lm_elastic["configs"].items(),
+                       key=lambda kv: int(kv[0])):
+        out.append(row(
+            f"stream.lm_elastic_s{s}", f"{c['tokens_per_sec']:.1f}",
+            f"LM decode tok/s, slot ceiling {s}; grow {c['resizes_grow']} "
+            f"shrink {c['resizes_shrink']}, peak cap {c['peak_capacity']}",
+        ))
     if sharded_skipped:
         out.append(row(
             "stream.sharded", "SKIP",

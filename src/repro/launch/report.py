@@ -197,6 +197,27 @@ def stream_lines(bench: dict) -> list[str]:
                 "; launches/hop K-independent: "
                 f"{bool(mt.get('launches_k_independent'))})"
             )
+    lm = bench.get("lm_elastic") or {}  # absent in pre-runtime artifacts
+    lm_cfg = lm.get("configs") or {}
+    if lm_cfg:
+        out += [
+            "",
+            f"LM decode on the shared slot pool ({lm.get('arch', '—')}, "
+            f"pool starts at {lm.get('min_slots', '—')} slots, "
+            "grow/shrink churn per wave):",
+            "",
+            "| slot ceiling | tokens/s | grows | shrinks | peak cap | "
+            "final cap |",
+            "|---|---|---|---|---|---|",
+        ]
+        for s, r in sorted(lm_cfg.items(), key=lambda kv: int(kv[0])):
+            out.append(
+                f"| {s} | {_num(r, 'tokens_per_sec', '.1f')} "
+                f"| {_num(r, 'resizes_grow', '.0f')} "
+                f"| {_num(r, 'resizes_shrink', '.0f')} "
+                f"| {_num(r, 'peak_capacity', '.0f')} "
+                f"| {_num(r, 'final_capacity', '.0f')} |"
+            )
     ov = bench.get("overlap") or {}
     if isinstance(ov.get("hidden_frac"), (int, float)):
         out.append(

@@ -1,0 +1,50 @@
+"""One generic continuous-batching runtime, many workloads.
+
+The slot-pool plane extracted from the KWS streaming scheduler (PRs 2-9)
+and shared with the LM serving engine — the software twin of the paper's
+one-large-programmable-macro argument (§II-A):
+
+  * :mod:`repro.runtime.pool` — :class:`SlotPool`: slot<->tenant binding,
+    pow-2 elastic grow/shrink with a ``min_capacity`` floor, idle-time
+    prewarm, pool-emitted lifecycle observability;
+  * :mod:`repro.runtime.placement` — :class:`SlotPlacement`: slot->shard
+    mapping over contiguous per-shard blocks, cross-shard rebalance
+    planning, single-model tenant blocks;
+  * :mod:`repro.runtime.remap` — the row-remap contract (host
+    ``remap_rows``, device ``remap_device_rows``/``perm_keep``);
+  * :mod:`repro.runtime.async_plane` — :class:`InFlightQueue` (double
+    buffering, deferred FIFO fold, epoch barriers) and
+    :class:`IngestPump`.
+
+Workloads implement the small :class:`SlotPoolClient` surface (state
+pytree + slot axes + shard/remap hooks); everything structural — elastic
+capacity, mesh sharding of the slot axis, migrate-on-idle rebalance,
+epoch-barrier-correct async — comes from here.  New workloads must build
+on this package rather than re-implementing slot logic (enforced by
+tests/test_no_dup_runtime.py).
+
+See docs/RUNTIME.md for the contracts and a doctested two-workload
+quickstart.
+"""
+from repro.runtime.async_plane import InFlightQueue, IngestPump
+from repro.runtime.placement import SlotPlacement
+from repro.runtime.pool import (
+    SlotPool,
+    SlotPoolClient,
+    infer_slot_axes,
+    next_pow2,
+)
+from repro.runtime.remap import perm_keep, remap_device_rows, remap_rows
+
+__all__ = [
+    "InFlightQueue",
+    "IngestPump",
+    "SlotPlacement",
+    "SlotPool",
+    "SlotPoolClient",
+    "infer_slot_axes",
+    "next_pow2",
+    "perm_keep",
+    "remap_device_rows",
+    "remap_rows",
+]

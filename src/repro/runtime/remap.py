@@ -1,0 +1,78 @@
+"""Row-remap contract of the slot-pool plane: host and device halves.
+
+Every structural pool operation (elastic resize, cross-shard rebalance)
+reduces to ONE slot remap ``{old_slot: new_slot}`` that the workload's
+state must ride through:
+
+  * **host half** — :func:`remap_rows` reindexes any numpy per-slot plane
+    (bookkeeping vectors, detector state, the ``RingArena``'s
+    ``apply_remap`` is built on the same contract) with one vectorized
+    gather; rows without a surviving tenant reset to ``fill``.
+  * **device half** — :func:`remap_device_rows` permutes the slot axis of
+    a device-resident state array.  For the canonical leading-axis layout
+    it is exactly ``kernels.ops.remap_slot_rows`` (standalone because
+    ``pallas_call`` is GSPMD-opaque — the partitioner must be free to
+    lower cross-shard rows into collectives); for workloads whose slot
+    axis is interior (the LM engine's ``(reps, batch, ...)`` KV cache) the
+    same gather runs through a moveaxis.
+  * :func:`perm_keep` converts the remap dict into the dense
+    ``(perm, keep)`` arrays the device gather consumes: ``out[i] =
+    x[perm[i]] where keep[i] else 0``.
+
+``SlotPool`` drives both halves; workloads only declare which axis of
+each state leaf is the slot axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+__all__ = ["remap_rows", "perm_keep", "remap_device_rows"]
+
+
+def remap_rows(a: np.ndarray, remap: dict[int, int], new_rows: int,
+               fill=0) -> np.ndarray:
+    """Reindex the leading axis through a slot remap (one vectorized
+    gather); rows without a surviving tenant reset to ``fill``."""
+    out = np.full((new_rows,) + a.shape[1:], fill, a.dtype)
+    if remap:
+        olds = np.fromiter(remap.keys(), np.int64, len(remap))
+        news = np.fromiter(remap.values(), np.int64, len(remap))
+        out[news] = a[olds]
+    return out
+
+
+def perm_keep(remap: dict[int, int],
+              capacity: int) -> tuple[np.ndarray, np.ndarray]:
+    """Densify ``{old_slot: new_slot}`` into the ``(perm, keep)`` pair of
+    the device gather: ``perm[new] = old`` for every surviving tenant,
+    ``keep`` False rows scrub to zero."""
+    perm = np.arange(capacity, dtype=np.int64)
+    keep = np.zeros(capacity, bool)
+    for old, new in remap.items():
+        perm[new] = old
+        keep[new] = True
+    return perm, keep
+
+
+def remap_device_rows(x: jax.Array, perm: np.ndarray, keep: np.ndarray,
+                      *, axis: int = 0, mesh=None) -> jax.Array:
+    """Permute the slot ``axis`` of one device state array: ``out[i] =
+    x[perm[i]] where keep[i] else 0`` along that axis.
+
+    ``axis == 0`` is the canonical layout and dispatches to
+    ``ops.remap_slot_rows`` (which also re-pins the result onto the
+    mesh's data-axis sharding).  Interior axes run the identical gather
+    through a moveaxis; the caller re-settles sharding (the pool calls
+    the workload's ``shard`` hook).
+    """
+    if axis == 0:
+        return ops.remap_slot_rows(x, perm, keep, mesh=mesh)
+    m = jnp.moveaxis(x, axis, 0)
+    out = jnp.take(m, jnp.asarray(perm, jnp.int32), axis=0)
+    k = jnp.asarray(keep, bool).reshape((-1,) + (1,) * (m.ndim - 1))
+    out = jnp.where(k, out, jnp.zeros_like(out))
+    return jnp.moveaxis(out, 0, axis)

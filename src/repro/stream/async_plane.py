@@ -43,75 +43,19 @@ overlap, since one hop's compute already hides the next hop's host work.
 from __future__ import annotations
 
 import dataclasses
-import queue
 import threading
 
 import jax
 import numpy as np
 
+# the double-buffered in-flight queue, epoch-barrier protocol, and the
+# ingest pump are the generic async plane (shared with the LM engine);
+# IngestPump is re-exported because this module is its historical home
+from repro.runtime.async_plane import InFlightQueue, IngestPump
 from repro.stream.detector import Detection
 from repro.stream.scheduler import HopBatch, StreamResult, StreamScheduler
 
 __all__ = ["AsyncStreamScheduler", "IngestPump"]
-
-_SENTINEL = object()
-
-
-class IngestPump:
-    """Background ingest worker: queued ``(sids, chunks)`` batches land
-    in the arena from a daemon thread via ``apply_fn`` (which must take
-    the scheduler's ingest lock).  ``submit`` never blocks on the
-    device; ``flush`` waits until every queued push has landed and
-    re-raises the first error a push hit (unknown sid, arena overflow —
-    all raised *before* any sample lands, so a failed push never
-    half-applies)."""
-
-    def __init__(self, apply_fn) -> None:
-        self._apply = apply_fn
-        self._q: queue.Queue = queue.Queue()
-        self._err: BaseException | None = None
-        self.pushed_batches = 0
-        self._thread = threading.Thread(
-            target=self._run, name="ingest-pump", daemon=True
-        )
-        self._thread.start()
-
-    def _run(self) -> None:
-        while True:
-            item = self._q.get()
-            try:
-                if item is _SENTINEL:
-                    return
-                sids, chunks = item
-                try:
-                    self._apply(sids, chunks)
-                    self.pushed_batches += 1
-                except BaseException as e:  # surfaced at the next flush
-                    if self._err is None:
-                        self._err = e
-            finally:
-                self._q.task_done()
-
-    def submit(self, sids, chunks) -> None:
-        self._q.put((list(sids), list(chunks)))
-
-    def flush(self) -> None:
-        """Barrier: every push submitted before this call has landed (or
-        failed).  Raises the first deferred push error, once."""
-        self._q.join()
-        if self._err is not None:
-            err, self._err = self._err, None
-            raise err
-
-    def close(self) -> None:
-        """Flush, then stop the worker thread (errors still surface)."""
-        self._q.join()
-        self._q.put(_SENTINEL)
-        self._q.join()
-        self._thread.join(timeout=10.0)
-        if self._err is not None:
-            err, self._err = self._err, None
-            raise err
 
 
 @dataclasses.dataclass
@@ -158,13 +102,19 @@ class AsyncStreamScheduler(StreamScheduler):
         super().__init__(*args, **kwargs)
         assert pipeline_depth >= 1, pipeline_depth
         self._depth = pipeline_depth
-        self._inflight: list[_InFlight] = []
+        self._inflight = InFlightQueue(self._retire_inflight,
+                                       depth=pipeline_depth)
         self._dispatched_total = 0
         # serializes arena/placement/bookkeeping mutations between the
         # main thread (pack/fold/lifecycle) and the pump (push scatter);
         # the device queue itself needs no lock — only the main thread
         # dispatches
         self._lock = threading.RLock()
+        # declare the epoch barrier to the slot pool: EVERY structural
+        # mutation (grow-on-alloc, shrink-on-close, cross-shard
+        # rebalance) drains the pipeline first, on every path, instead of
+        # per-call-site overrides
+        self._slots.pre_structural = self._pre_structural
         self._pump = IngestPump(self._apply_push) if use_pump else None
 
     # -- ingest (pumped) -----------------------------------------------------
@@ -196,13 +146,13 @@ class AsyncStreamScheduler(StreamScheduler):
         """Dispatched hops whose fold has not retired yet."""
         return len(self._inflight)
 
-    def _retire_one(self) -> HopBatch:
-        """Fence on the oldest in-flight hop and run its deferred fold.
-        The fence blocks OUTSIDE the ingest lock so pushes keep landing
-        while the device finishes; the fold itself (detector, metrics,
-        events, emit cache) runs under the lock, in FIFO dispatch order.
-        """
-        f = self._inflight.pop(0)
+    def _retire_inflight(self, f: _InFlight, still_in_flight: bool
+                         ) -> HopBatch:
+        """Retire function the ``InFlightQueue`` drives: fence on one hop
+        and run its deferred fold.  The fence blocks OUTSIDE the ingest
+        lock so pushes keep landing while the device finishes; the fold
+        itself (detector, metrics, events, emit cache) runs under the
+        lock, in FIFO dispatch order."""
         if f.logits is not None:
             jax.block_until_ready(f.logits)
             logits_h = np.asarray(f.logits)  # one bulk transfer per hop
@@ -217,16 +167,26 @@ class AsyncStreamScheduler(StreamScheduler):
             return self._fold_hop(
                 f.ready_slots, f.shard_counts, logits_h, post_h,
                 f.t0, f.t_pack, f.t_dispatch, t_device,
-                hidden_s=f.hidden_s, fold_hidden=bool(self._inflight),
+                hidden_s=f.hidden_s, fold_hidden=still_in_flight,
             )
+
+    def _retire_one(self) -> HopBatch:
+        """Fence on the oldest in-flight hop and run its deferred fold."""
+        return self._inflight.retire_oldest()
 
     def _epoch_barrier(self) -> None:
         """Retire every in-flight hop.  Callers then hold the invariant
         the synchronous scheduler has between steps: all folds applied,
         no future references any slot row — so resize / rebalance /
         priming / teardown remaps run exactly as they do synchronously."""
-        while self._inflight:
-            self._retire_one()
+        self._inflight.barrier()
+
+    def _pre_structural(self) -> None:
+        """SlotPool hook: a structural slot mutation is about to run —
+        drain the pipeline so a remap never invalidates in-flight row
+        indices (the epoch-barrier protocol, declared once)."""
+        with self._lock:
+            self._epoch_barrier()
 
     def _advance(self) -> tuple[bool, HopBatch | None]:
         """One pipeline turn: dispatch a hop if any stream is ready, and
@@ -246,7 +206,7 @@ class AsyncStreamScheduler(StreamScheduler):
                 was_busy = bool(self._inflight)
                 logits, post = self._dispatch_hop(ready_mask, audio)
                 t_dispatch = self._clock()
-                self._inflight.append(_InFlight(
+                self._inflight.push(_InFlight(
                     ready_slots=ready_slots, shard_counts=shard_counts,
                     logits=logits, post=post,
                     t0=t0, t_pack=t_pack, t_dispatch=t_dispatch,
@@ -258,11 +218,11 @@ class AsyncStreamScheduler(StreamScheduler):
             else:
                 self._maybe_prewarm()  # starved turn: warm next capacity
         dispatched = packed is not None
-        retired = None
-        if len(self._inflight) > self._depth or (
-                not dispatched and self._inflight):
-            retired = self._retire_one()
-        return dispatched, retired
+        # depth policy (retire at most one per turn): the queue retires
+        # once the pipeline is past its depth, or when starved and hops
+        # remain to drain
+        retired_list = self._inflight.settle(dispatched, max_retire=1)
+        return dispatched, (retired_list[0] if retired_list else None)
 
     # -- public stepping -----------------------------------------------------
 
@@ -297,11 +257,10 @@ class AsyncStreamScheduler(StreamScheduler):
                 return self._dispatched_total - before
 
     # -- epoch-barrier lifecycle overrides -----------------------------------
-
-    def _resize(self, new_cap: int) -> None:
-        with self._lock:
-            self._epoch_barrier()  # remaps must never race an in-flight hop
-            super()._resize(new_cap)
+    #
+    # resize and rebalance need NO overrides here: the SlotPool calls
+    # ``_pre_structural`` (declared in __init__) before every structural
+    # mutation, whichever path reaches it.
 
     def add_stream(self, *args, **kwargs) -> int:
         with self._lock:  # placement/arena bookkeeping vs pump pushes

@@ -89,9 +89,12 @@ from repro.stream.detector import (
 )
 from repro.stream.frontend import AudioFrontend, FrontendConfig
 from repro.stream.metrics import StreamMetrics
+from repro.runtime.pool import SlotPool
+# the pow-2 helper moved into the generic runtime with the slot pool; the
+# historical name is re-exported because benches/tests import it from here
+from repro.runtime.pool import next_pow2 as _next_pow2  # noqa: F401
 from repro.stream.state import (
     RingArena,
-    SlotPlacement,
     StreamPlan,
     StreamState,
     plan_stream,
@@ -319,10 +322,6 @@ class _Stream:
     primed: bool = False
     stamp: int = 0  # emit-step from which cached hop logits cover this slot
     model: str = DEFAULT_MODEL  # tenant variant this stream computes with
-
-
-def _next_pow2(n: int) -> int:
-    return 1 << max(0, n - 1).bit_length()
 
 
 def _mesh_data_axes(mesh):
@@ -793,10 +792,6 @@ class StreamScheduler:
         else:
             self.n_shards = 1
         S = self.n_shards
-        assert capacity % S == 0, (
-            f"capacity {capacity} not a multiple of {S} mesh shards"
-        )
-        self.max_capacity = capacity
         self.backend = backend
         self.detector_cfg = detector_cfg or DetectorConfig()
         self.emit_logits = emit_logits
@@ -825,33 +820,28 @@ class StreamScheduler:
             tenant_block=tenant_block, params=self._params,
         )
 
-        self._min_capacity = (
-            min_capacity if min_capacity is not None
-            else S * min(2, capacity // S)
+        # the generic slot-pool plane (repro.runtime): slot<->sid binding,
+        # per-shard pow-2 elastic resize, cross-shard rebalance, idle-time
+        # prewarm, and the resize/rebalance observability all live there —
+        # this scheduler is one SlotPool *client* (the KWS workload), the
+        # LM serving engine is another.  The client surface is the
+        # device_state/slot_axes/shard/apply_host_remap methods below.
+        self._slots = SlotPool(
+            self, capacity,
+            initial_capacity=initial_capacity,
+            min_capacity=min_capacity,
+            n_shards=S, mesh=mesh,
+            tenant_block=tenant_block if self._pool is not None else None,
+            rebalance_threshold=rebalance_threshold,
+            obs=self.obs,
+            on_resize=self.metrics.on_resize,
+            on_rebalance=self.metrics.on_rebalance,
+            prewarm=prewarm,
+            clock=self._clock,
         )
-        assert S <= self._min_capacity <= capacity
-        assert self._min_capacity % S == 0
-        cap0 = initial_capacity if initial_capacity is not None else (
-            self._min_capacity
-        )
-        assert self._min_capacity <= cap0 <= capacity, (cap0, capacity)
-        assert cap0 % S == 0
-        if self._pool is not None:
-            # tenant blocks only nest across resizes when every per-shard
-            # capacity the pool can visit is a power of two
-            for c in (self._min_capacity, cap0, capacity):
-                sc = c // S
-                assert sc & (sc - 1) == 0, (
-                    f"tenant pooling needs pow-2 per-shard capacities; "
-                    f"got {sc} (capacity {c} over {S} shards)"
-                )
+        cap0 = self._slots.capacity
         # batched state lives device-resident between hops; host copies are
         # made only on join/leave or fallback peeks — never the hot loop
-        self._capacity = cap0
-        self._placement = SlotPlacement(
-            S, cap0 // S,
-            tenant_block=tenant_block if self._pool is not None else None,
-        )
         self._tails = [
             self._shard(jnp.zeros((cap0, st.tail, st.cin), jnp.int32))
             for st in self.plan.convs
@@ -890,10 +880,6 @@ class StreamScheduler:
         self._streams: dict[int, _Stream] = {}
         self._unprimed: set[int] = set()  # empty in steady state
         self._next_sid = 0
-        if rebalance_threshold is not None:
-            assert rebalance_threshold >= 1, rebalance_threshold
-        self._rebalance_threshold = rebalance_threshold
-        self._skew_dirty = False  # set on close; checked at hop boundaries
         # hop-boundary peeks are served from the last emit step's logits:
         # _finalize covers EVERY primed slot (masked rows hold steady
         # state), so the row stays valid until the slot is rewritten on
@@ -902,21 +888,48 @@ class StreamScheduler:
         self._emit_cache: np.ndarray | None = None
         self._emit_cache_step = -1
         # idle-time jit pre-warm of the next pow-2 capacity (satellite of
-        # the tenant-pool PR: grow spikes hide behind starved steps)
-        self._prewarm_enabled = prewarm
+        # the tenant-pool PR: grow spikes hide behind starved steps);
+        # the dedup set lives here because its key includes emit_logits
         self._warmed: set[tuple[int, bool]] = set()
 
-    # -- elastic slot pool ---------------------------------------------------
+    # -- elastic slot pool (delegated to repro.runtime.SlotPool) -------------
 
     @property
     def capacity(self) -> int:
         """Current pool size (<= ``max_capacity``)."""
-        return self._capacity
+        return self._slots.capacity
 
     @property
     def shard_capacity(self) -> int:
         """Current per-shard pool size (== ``capacity`` with no mesh)."""
-        return self._placement.shard_capacity
+        return self._slots.shard_capacity
+
+    @property
+    def max_capacity(self) -> int:
+        """Capacity ceiling the elastic pool doubles toward."""
+        return self._slots.max_capacity
+
+    # internal aliases kept for the concurrency suite and subclasses: the
+    # pool owns the state; these names predate the runtime extraction
+    @property
+    def _capacity(self) -> int:
+        return self._slots.capacity
+
+    @property
+    def _min_capacity(self) -> int:
+        return self._slots.min_capacity
+
+    @property
+    def _placement(self):
+        return self._slots.placement
+
+    @property
+    def _skew_dirty(self) -> bool:
+        return self._slots.skew_dirty
+
+    @_skew_dirty.setter
+    def _skew_dirty(self, v: bool) -> None:
+        self._slots.skew_dirty = v
 
     def _shard(self, x):
         """Settle an array's batch axis onto the mesh's data sharding."""
@@ -925,49 +938,29 @@ class StreamScheduler:
         spec = P(self._baxes, *([None] * (x.ndim - 1)))
         return jax.device_put(x, NamedSharding(self.mesh, spec))
 
-    def _resize(self, new_cap: int) -> None:
-        """Per-shard pad/slice of the batched state to ``new_cap`` slots.
+    # -- SlotPool client surface (see repro.runtime.pool.SlotPoolClient) ----
 
-        Rows travel unchanged and never cross shard blocks (a slot's math
-        never depends on the batch size or its neighbors), so resizes are
-        invisible to the streams riding through them and cost zero
-        collective communication; jit re-traces once per capacity visited.
-        """
-        old = self._capacity
-        if new_cap == old:
-            return
-        with self.obs.trace.span("resize", old=old, new=new_cap):
-            self._resize_inner(new_cap)
+    def device_state(self):
+        """The per-slot device pytree the pool resizes/remaps: conv tails,
+        pool pendings, GAP counters (slot axis 0 everywhere)."""
+        return (tuple(self._tails), tuple(self._pendings), self._gap)
 
-    def _resize_inner(self, new_cap: int) -> None:
-        old = self._capacity
-        S = self.n_shards
-        old_sc, new_sc = old // S, new_cap // S
-        trail = lambda a: ((0, 0),) * (a.ndim - 1)  # noqa: E731
-        if new_cap > old:
-            remap = self._placement.grow(new_sc)
+    def set_device_state(self, state) -> None:
+        tails, pendings, gap = state
+        self._tails = list(tails)
+        self._pendings = list(pendings)
+        self._gap = gap
 
-            def adjust(a):
-                a2 = a.reshape(S, old_sc, *a.shape[1:])
-                a2 = jnp.pad(a2, ((0, 0), (0, new_sc - old_sc)) + trail(a))
-                return self._shard(a2.reshape(S * new_sc, *a.shape[1:]))
-        else:
-            # compact tenants out of each shard's doomed upper slots, then
-            # slice every shard block; vacated destinations are already
-            # zero (scrubbed on close)
-            moves, remap = self._placement.shrink(new_sc)
+    def slot_axes(self):
+        n = len(self.plan.convs)
+        return ((0,) * n, (0,) * n, 0)
 
-            def adjust(a):
-                for dst, src in moves:
-                    a = a.at[dst].set(a[src])
-                a2 = a.reshape(S, old_sc, *a.shape[1:])[:, :new_sc]
-                return self._shard(a2.reshape(S * new_sc, *a.shape[1:]))
+    def shard(self, x, axis: int = 0):
+        return self._shard(x)
 
-        self._tails = [adjust(t) for t in self._tails]
-        self._pendings = [adjust(p) for p in self._pendings]
-        self._gap = adjust(self._gap)
-        # the host-side ingest plane rides the same placement remap, so a
-        # stream's inbox/detector/bookkeeping rows stay glued to its slot
+    def apply_host_remap(self, remap: dict[int, int], new_cap: int) -> None:
+        """Ride the host-side ingest plane through a slot remap, so a
+        stream's inbox/detector/bookkeeping rows stay glued to its slot."""
         self._arena.apply_remap(remap, new_cap)
         self._detector.apply_remap(remap, new_cap)
         self._slot_sid = remap_rows(self._slot_sid, remap, new_cap, fill=-1)
@@ -979,92 +972,9 @@ class StreamScheduler:
             s.slot = remap[s.slot]
             s.frontend._slot = s.slot
         self._emit_cache = None  # cached rows are indexed by old slots
-        self._capacity = new_cap
-        self.metrics.on_resize(new_cap)
-        self.obs.events.emit("resize", old=old, new=new_cap,
-                             active=len(self._streams), shards=S)
 
-    def _maybe_shrink(self) -> None:
-        S = self.n_shards
-        sc = self._capacity // S
-        min_sc = self._min_capacity // S
-        while sc > min_sc and len(self._streams) <= (S * sc) // 4:
-            sc //= 2
-        # floors: the configured minimum, and — because shrink compaction
-        # is per-shard — the fullest shard's tenant count.  The rebalance
-        # plane levels occupancy at hop boundaries, so under churn this
-        # floor settles at ceil(active / S) instead of wherever the most
-        # crowded shard happens to sit (an all-zero occupancy floors at
-        # one empty local slot, i.e. min_capacity wins).
-        sc = max(sc, min_sc, _next_pow2(max(self._placement.occupancy())))
-        while S * sc < self._capacity:
-            try:
-                self._resize(S * sc)
-                return
-            except ValueError:
-                # tenant-block packing can refuse a depth occupancy alone
-                # would allow (blocks never split across models); retry
-                # shallower.  Un-pooled placement never raises here.
-                sc *= 2
-
-    def _maybe_rebalance(self) -> bool:
-        """Migrate-on-idle: level shard occupancy with cross-shard slot
-        moves when churn has skewed it past ``rebalance_threshold``.
-
-        Runs only at hop boundaries (never inside the steady hot path).
-        The device half is one ``ops.remap_slot_rows`` gather per state
-        array — rows travel unchanged, so the migration is bit-invisible
-        to the streams riding through it; the host half is the same
-        ``remap_rows``/``apply_remap`` path every resize already takes.
-        Returns True when any row moved (the caller then re-checks the
-        shrink, whose per-shard floor the migration just lifted).
-        """
-        thr = self._rebalance_threshold
-        if self.n_shards == 1 or thr is None:
-            return False
-        occ = self._placement.occupancy()
-        if max(occ) - min(occ) <= thr:
-            return False
-        moves, remap = self._placement.rebalance()
-        if not moves:
-            return False
-        with self.obs.trace.span("rebalance", moves=len(moves)):
-            self._execute_rebalance(moves, remap, occ)
-        return True
-
-    def _execute_rebalance(self, moves, remap, occ) -> None:
-        cap = self._capacity
-        perm = np.arange(cap, dtype=np.int64)
-        keep = np.zeros(cap, bool)
-        for old, new in remap.items():
-            perm[new] = old
-            keep[new] = True
-        self._tails = [
-            ops.remap_slot_rows(t, perm, keep, mesh=self.mesh)
-            for t in self._tails
-        ]
-        self._pendings = [
-            ops.remap_slot_rows(p, perm, keep, mesh=self.mesh)
-            for p in self._pendings
-        ]
-        self._gap = ops.remap_slot_rows(self._gap, perm, keep, mesh=self.mesh)
-        self._arena.apply_remap(remap, cap)
-        self._detector.apply_remap(remap, cap)
-        self._slot_sid = remap_rows(self._slot_sid, remap, cap, fill=-1)
-        self._primed_mask = remap_rows(self._primed_mask, remap, cap)
-        self._frames_v = remap_rows(self._frames_v, remap, cap)
-        self._model_idx_v = remap_rows(self._model_idx_v, remap, cap)
-        self._model_rows_dirty = True
-        for s in self._streams.values():
-            s.slot = remap[s.slot]
-            s.frontend._slot = s.slot
-        self._emit_cache = None  # cached rows are indexed by old slots
-        self.metrics.on_rebalance(len(moves))
-        self.obs.events.emit(
-            "rebalance", moves=len(moves), shards=self.n_shards,
-            occupancy_before=list(occ),
-            occupancy_after=list(self._placement.occupancy()),
-        )
+    def warm(self, capacity: int) -> None:
+        self._warm_capacity(capacity)
 
     # -- tenant weight pool --------------------------------------------------
 
@@ -1154,19 +1064,14 @@ class StreamScheduler:
                     "model binding needs a tenant pool (max_models > 1)"
                 )
             model_id, midx = DEFAULT_MODEL, 0
-        slot = self._placement.alloc(sid, model=model_id)
-        while slot is None:
-            if self._capacity >= self.max_capacity:
-                if self._pool is not None:
-                    self._pool.release(model_id)
-                raise MemoryError(
-                    f"all {self.max_capacity} stream slots busy; "
-                    "close a stream first"
-                )
-            # one grow may still not open a compatible tenant block (a
-            # one-block shard bound to another model), so keep doubling
-            self._resize(min(self._capacity * 2, self.max_capacity))
-            slot = self._placement.alloc(sid, model=model_id)
+        try:
+            # grow-on-demand alloc (pow-2 doubling to the ceiling) is the
+            # pool's; it raises MemoryError when every slot stays busy
+            slot = self._slots.alloc(sid, model=model_id)
+        except MemoryError:
+            if self._pool is not None:
+                self._pool.release(model_id)
+            raise
         self._next_sid = max(self._next_sid, sid) + 1
         self._streams[sid] = _Stream(
             sid=sid,
@@ -1360,13 +1265,10 @@ class StreamScheduler:
         the migration may unpin) and the mass-join primer.  The async
         plane only calls this behind an epoch barrier (no hop in flight),
         so a slot remap can never invalidate in-flight row indices."""
-        if self._skew_dirty:
-            # hop boundary: leave churn since the last hop may have
-            # skewed the shards — migrate-on-idle, then re-check the
-            # shrink the migration may have unpinned
-            self._skew_dirty = False
-            if self._maybe_rebalance():
-                self._maybe_shrink()
+        # leave churn since the last hop may have skewed the shards —
+        # the pool migrates-on-idle, then re-checks the shrink the
+        # migration may have unpinned
+        self._slots.hop_barrier()
         if self._unprimed:
             self._prime_ready()  # numpy warm-up, excluded from step timing
 
@@ -1566,12 +1468,9 @@ class StreamScheduler:
         """Compile the NEXT pow-2 capacity's hop while starved, so the
         first hop after a grow pays no compile spike (``prewarm=True``;
         the trace stays free of ``compile`` events across the resize —
-        pinned by tests/test_multitenant.py)."""
-        if not self._prewarm_enabled:
-            return
-        nxt = min(self._capacity * 2, self.max_capacity)
-        if nxt > self._capacity:
-            self._warm_capacity(nxt)
+        pinned by tests/test_multitenant.py).  The pool picks the target
+        capacity and calls back into ``warm``."""
+        self._slots.maybe_prewarm()
 
     def _warm_capacity(self, cap: int) -> None:
         """Run the jitted step once on zero dummies at ``cap`` slots —
@@ -1714,7 +1613,7 @@ class StreamScheduler:
             det = Detection(sid, int(f_cls[0]), st.frames, float(f_score[0]))
             s.events.append(det)
             self.metrics.on_detection(sid)
-        self._placement.free(s.slot)
+        self._slots.free(s.slot)  # also marks the pool skew-dirty
         if self._pool is not None:
             self._pool.release(s.model)  # unpin; LRU may now evict it
         self._clear_slot(s.slot)  # scrub so the next tenant starts clean
@@ -1732,8 +1631,7 @@ class StreamScheduler:
         # a leave can skew the shards; the migration itself waits for the
         # next hop boundary (migrate-on-idle), but the shrink runs now so
         # an emptying pool releases capacity without needing another hop
-        self._skew_dirty = True
-        self._maybe_shrink()
+        self._slots.maybe_shrink()
         return StreamResult(
             stream_id=sid,
             logits=logits,

@@ -1,4 +1,15 @@
-"""Batched serving engine on the shared continuous-batching runtime.
+"""Frozen pre-runtime-port serving engine (parity oracle).
+
+Verbatim copy of src/repro/serve/engine.py as of PR 9, BEFORE the engine
+was ported onto the shared continuous-batching runtime (repro.runtime).
+tests/test_runtime_pool.py decodes the same request schedules through
+this oracle and the ported engine and asserts token identity — the port
+must change WHERE the slot machinery lives, never WHAT it computes.
+Do not edit except to keep imports resolving.
+
+Original module docstring:
+
+Batched serving engine: prefill + decode with continuous batching.
 
 The engine owns one jitted prefill function and one jitted decode step per
 (arch, batch-slot geometry).  Requests enter a queue; free batch slots are
@@ -9,18 +20,6 @@ dry-run (launch/dryrun.py lowers exactly ``self.decode_step``).
 
 Slot state is the stacked cache pytree from models.api.init_decode_state;
 per-slot fill is a dynamic-update into the batch axis.
-
-Everything *structural* about the slot plane — slot <-> request binding,
-pow-2 elastic grow/shrink, mesh sharding of the batch axis, the epoch
-barrier that drains in-flight decode ticks before any slot remap — comes
-from :class:`repro.runtime.SlotPool`; the engine is a pool *client*
-(state pytree + slot axes + shard/remap hooks) exactly like the KWS
-streaming scheduler.  The pool emits the ``lm_resize`` / ``lm_rebalance``
-lifecycle events.  By default (``max_slots=None``) the pool is pinned at
-``batch_slots`` and the engine behaves exactly like the fixed-capacity
-pre-port engine, token for token (tests/test_runtime_pool.py pins this
-against a frozen copy); pass ``max_slots``/``min_slots`` for elastic
-capacity and ``mesh`` to shard the slot axis across devices.
 """
 from __future__ import annotations
 
@@ -30,13 +29,10 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.launch.mesh import dp_axes, dp_size
 from repro.models import api
 from repro.obs import Observability
-from repro.runtime import InFlightQueue, SlotPool, infer_slot_axes
 from repro.serve import sampler
 from repro.utils.logging import get_logger
 
@@ -56,16 +52,12 @@ class Request:
 class Engine:
     def __init__(self, cfg: ArchConfig, params, batch_slots: int = 4,
                  max_seq: int = 128, seed: int = 0,
-                 obs: Observability | None = None,
-                 max_slots: int | None = None,
-                 min_slots: int | None = None,
-                 mesh=None):
+                 obs: Observability | None = None):
         self.cfg = cfg
         self.params = params
+        self.slots = batch_slots
         self.max_seq = max_seq
         self.key = jax.random.PRNGKey(seed)
-        self.mesh = mesh
-        self._baxes = dp_axes(mesh) if mesh is not None else None
 
         # same observability plane as the streaming runtime: prefill and
         # decode-tick latencies land in bounded histograms, spans cover
@@ -76,91 +68,17 @@ class Engine:
         self._decode_hist = self.obs.registry.histogram("serve.decode_tick_s")
         self._decode = jax.jit(api.decode_fn(cfg))
         self._prefill_one = jax.jit(self._make_prefill())
-
-        # the slot axis of every cache leaf, inferred by shape-diffing the
-        # state at two batch sizes (cache_len's shared scalar clock maps
-        # to -1: the pool never touches it, _install merges it via max)
-        self._cache_axes = infer_slot_axes(
-            lambda b: api.init_decode_state(cfg, b, max_seq))
-        # the generic slot plane: ``batch_slots`` is the initial capacity;
-        # with no ``max_slots`` the pool is pinned there (fixed-capacity
-        # pre-port behavior), otherwise it doubles on demand up to the
-        # ceiling and halves at quarter occupancy down to ``min_slots``
-        self._slots = SlotPool(
-            self, max_slots if max_slots is not None else batch_slots,
-            initial_capacity=batch_slots,
-            min_capacity=min_slots if min_slots is not None else min(
-                batch_slots, max_slots if max_slots is not None
-                else batch_slots),
-            n_shards=1 if mesh is None else dp_size(mesh),
-            mesh=mesh, obs=self.obs, event_prefix="lm_", noun="request",
-        )
-        self.state = jax.tree_util.tree_map(
-            lambda a, ax: a if ax < 0 else self.shard(a, ax),
-            api.init_decode_state(cfg, batch_slots, max_seq),
-            self._cache_axes,
-        )
+        self.state = api.init_decode_state(cfg, batch_slots, max_seq)
         self.slot_req: list[Request | None] = [None] * batch_slots
         self.slot_remaining = np.zeros(batch_slots, np.int32)
         self.queue: list[Request] = []
         # async decode plane (step_async): the last sampled token per
         # slot stays ON DEVICE so tick T+1 dispatches on tick T's
         # unforced future, and each tick's host copy retires one tick
-        # late — the runtime's InFlightQueue drives retirement, and its
-        # barrier is the pool's pre_structural hook, so a resize or
-        # rebalance on ANY path drains in-flight ticks first
+        # late — the double-buffered dispatch idiom of the streaming
+        # scheduler's AsyncStreamScheduler applied to LM decode
         self._last_tok = None           # (slots, 1) int32 device array
-        self._pending = InFlightQueue(self._retire_tick, depth=1)
-        self._barrier_finished: list[Request] = []
-
-    @property
-    def slots(self) -> int:
-        """Current slot capacity (elastic pools grow/shrink this)."""
-        return self._slots.capacity
-
-    # -- SlotPool client surface (see repro.runtime.pool.SlotPoolClient) ----
-
-    def device_state(self):
-        """The per-slot device pytree the pool resizes/remaps: the stacked
-        cache (slot axis 1: leaves are (reps, batch, ...)) plus the
-        device-resident async feedback token (slot axis 0)."""
-        return {"cache": self.state, "last": self._last_tok}
-
-    def set_device_state(self, state) -> None:
-        self.state = state["cache"]
-        self._last_tok = state["last"]
-
-    def slot_axes(self):
-        return {"cache": self._cache_axes,
-                "last": None if self._last_tok is None else 0}
-
-    def shard(self, x, axis: int = 0):
-        """Settle an array's slot ``axis`` onto the mesh's data sharding."""
-        if self.mesh is None:
-            return x
-        spec = [None] * x.ndim
-        spec[axis] = self._baxes
-        return jax.device_put(x, NamedSharding(self.mesh, P(*spec)))
-
-    def apply_host_remap(self, remap: dict[int, int], new_cap: int) -> None:
-        """Ride the host-side planes (request binding, budget counters)
-        through a slot remap — a request's bookkeeping stays glued to its
-        cache rows across grows, shrinks, and migrations."""
-        slot_req: list[Request | None] = [None] * new_cap
-        remaining = np.zeros(new_cap, np.int32)
-        for old, new in remap.items():
-            slot_req[new] = self.slot_req[old]
-            remaining[new] = self.slot_remaining[old]
-        self.slot_req = slot_req
-        self.slot_remaining = remaining
-
-    def pre_structural(self) -> None:
-        """Epoch barrier: the pool is about to resize or rebalance — fence
-        and fold every in-flight decode tick so the remap can never
-        invalidate in-flight slot rows.  Requests that finish inside the
-        barrier surface from the next ``step_async`` return."""
-        for finished in self._pending.barrier():
-            self._barrier_finished.extend(finished)
+        self._pending: list[tuple] = []  # (toks future, snapshot, t0)
 
     # -- prefill -------------------------------------------------------------
 
@@ -195,61 +113,48 @@ class Engine:
                              max_new=req.max_new_tokens)
 
     def _fill_slots(self) -> None:
-        while self.queue:
-            try:
-                # least-loaded placement; an elastic pool grows (pow-2,
-                # epoch-barriered) on demand up to its ceiling
-                slot = self._slots.alloc(self.queue[0].rid)
-            except MemoryError:
-                break  # every slot busy at the ceiling: stay queued
-            req = self.queue.pop(0)
-            with self.obs.trace.span("prefill", rid=req.rid,
-                                     tokens=len(req.prompt)):
-                t0 = time.perf_counter()
-                st1 = api.init_decode_state(self.cfg, 1, self.max_seq)
-                st1, last_logits = self._prefill_one(
-                    self.params, st1, jnp.asarray(req.prompt),
-                    len(req.prompt)
-                )
-                tok = int(
-                    sampler.greedy(last_logits[None], self.cfg.vocab)[0]
-                )
-                self._prefill_hist.record(time.perf_counter() - t0)
-            req.out_tokens.append(tok)
-            self._install(slot, st1)
-            if self._last_tok is not None:
-                # keep the device-resident feedback token in sync so
-                # the next async dispatch feeds the prefill's token
-                self._last_tok = self._last_tok.at[slot, 0].set(tok)
-            self.slot_req[slot] = req
-            self.slot_remaining[slot] = req.max_new_tokens - 1
-            self.obs.events.emit("lm_slot_fill", slot=slot, rid=req.rid,
-                                 prompt_tokens=len(req.prompt))
-            log.info("slot %d <- request %d (prompt %d toks)",
-                     slot, req.rid, len(req.prompt))
+        for slot in range(self.slots):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                with self.obs.trace.span("prefill", rid=req.rid,
+                                         tokens=len(req.prompt)):
+                    t0 = time.perf_counter()
+                    st1 = api.init_decode_state(self.cfg, 1, self.max_seq)
+                    st1, last_logits = self._prefill_one(
+                        self.params, st1, jnp.asarray(req.prompt),
+                        len(req.prompt)
+                    )
+                    tok = int(
+                        sampler.greedy(last_logits[None], self.cfg.vocab)[0]
+                    )
+                    self._prefill_hist.record(time.perf_counter() - t0)
+                req.out_tokens.append(tok)
+                self._install(slot, st1)
+                if self._last_tok is not None:
+                    # keep the device-resident feedback token in sync so
+                    # the next async dispatch feeds the prefill's token
+                    self._last_tok = self._last_tok.at[slot, 0].set(tok)
+                self.slot_req[slot] = req
+                self.slot_remaining[slot] = req.max_new_tokens - 1
+                self.obs.events.emit("lm_slot_fill", slot=slot, rid=req.rid,
+                                     prompt_tokens=len(req.prompt))
+                log.info("slot %d <- request %d (prompt %d toks)",
+                         slot, req.rid, len(req.prompt))
 
     def _install(self, slot: int, st1) -> None:
         """Copy a 1-batch cache pytree into batch row ``slot``."""
-        def put(full, one, ax):
-            if ax < 0:
-                return jnp.maximum(full, one)  # cache_len: shared clock
-            idx = [slice(None)] * full.ndim
-            idx[ax] = slice(slot, slot + 1)
-            return self.shard(full.at[tuple(idx)].set(one), ax)
+        def put(full, one):
+            if full.ndim == 0:
+                return jnp.maximum(full, one)  # cache_len: shared scalar clock
+            # find the batch axis: st1 has size-1 where full has slots
+            for ax in range(full.ndim):
+                if full.shape[ax] == self.slots and one.shape[ax] == 1:
+                    idx = [slice(None)] * full.ndim
+                    idx[ax] = slice(slot, slot + 1)
+                    return full.at[tuple(idx)].set(one)
+            return full
 
-        self.state = jax.tree_util.tree_map(
-            put, self.state, st1, self._cache_axes)
-
-    def _release(self, slot: int) -> None:
-        """Vacate a finished request's slot and let the pool do its
-        structural housekeeping: rebalance-on-skew at this tick boundary
-        (sharded pools), then the shrink churn may have unpinned."""
-        self.slot_req[slot] = None
-        self._slots.free(slot)
-
-    def _tick_barrier(self) -> None:
-        self._slots.hop_barrier()
-        self._slots.maybe_shrink()
+        self.state = jax.tree_util.tree_map(put, self.state, st1)
 
     # -- decode tick -----------------------------------------------------------
 
@@ -259,13 +164,13 @@ class Engine:
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return []
-        last = self.shard(jnp.asarray(
+        last = jnp.asarray(
             [
                 (r.out_tokens[-1] if r is not None and r.out_tokens else 0)
                 for r in self.slot_req
             ],
             jnp.int32,
-        )[:, None])
+        )[:, None]
         with self.obs.trace.span("decode", active=len(active)):
             t0 = time.perf_counter()
             logits, self.state = self._decode(self.params, self.state, last)
@@ -282,11 +187,9 @@ class Engine:
             if self.slot_remaining[slot] <= 0:
                 req.done = True
                 finished.append(req)
-                self._release(slot)
+                self.slot_req[slot] = None
                 self.obs.events.emit("lm_finish", rid=req.rid, slot=slot,
                                      tokens=len(req.out_tokens))
-        if finished:
-            self._tick_barrier()
         return finished
 
     def run_until_drained(self, max_ticks: int = 1000) -> list[Request]:
@@ -313,21 +216,21 @@ class Engine:
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if active:
             if self._last_tok is None:
-                self._last_tok = self.shard(jnp.asarray(
+                self._last_tok = jnp.asarray(
                     [
                         (r.out_tokens[-1]
                          if r is not None and r.out_tokens else 0)
                         for r in self.slot_req
                     ],
                     jnp.int32,
-                )[:, None])
+                )[:, None]
             with self.obs.trace.span("decode_dispatch", active=len(active)):
                 t0 = time.perf_counter()
                 logits, self.state = self._decode(
                     self.params, self.state, self._last_tok
                 )
                 toks = sampler.greedy(logits[:, -1], self.cfg.vocab)
-                self._last_tok = self.shard(toks[:, None].astype(jnp.int32))
+                self._last_tok = toks[:, None].astype(jnp.int32)
             # bookkeeping happens at dispatch — retirement counts are
             # static — but the token lands at retire, one tick later
             snapshot = []
@@ -337,29 +240,19 @@ class Engine:
                 finishing = self.slot_remaining[slot] <= 0
                 snapshot.append((slot, req, finishing))
                 if finishing:
-                    self._release(slot)  # refill next tick
-            self._pending.push((toks, snapshot, t0))
-        # finishes folded by an epoch barrier (a grow inside _fill_slots,
-        # a shrink/rebalance at the tick boundary) surface here
-        finished = self._take_barrier_finished()
+                    self.slot_req[slot] = None  # refill next tick
+            self._pending.append((toks, snapshot, t0))
+        finished: list[Request] = []
         # depth-1 pipeline: retire once a newer tick is executing (or
         # when idle, to drain)
-        for batch in self._pending.settle(bool(active), max_retire=None):
-            finished.extend(batch)
-        # structural housekeeping at the same tick boundary as the sync
-        # path (no-op unless a slot was freed); a rebalance or shrink here
-        # drains the in-flight tick first via the pool's pre_structural
-        self._tick_barrier()
+        while self._pending and (len(self._pending) > 1 or not active):
+            finished.extend(self._retire_tick())
         return finished
 
-    def _take_barrier_finished(self) -> list[Request]:
-        out, self._barrier_finished = self._barrier_finished, []
-        return out
-
-    def _retire_tick(self, item, still_in_flight: bool) -> list[Request]:
+    def _retire_tick(self) -> list[Request]:
         """Fence on the oldest in-flight tick and append its host-side
         tokens; emits ``lm_finish`` for requests that completed there."""
-        toks, snapshot, t0 = item
+        toks, snapshot, t0 = self._pending.pop(0)
         with self.obs.trace.span("decode_retire", n=len(snapshot)):
             toks_h = np.asarray(toks)  # fence + one bulk transfer
         self._decode_hist.record(time.perf_counter() - t0)
@@ -376,10 +269,9 @@ class Engine:
     def shutdown(self) -> list[Request]:
         """Retire every in-flight decode tick (the engine half of the
         async drain contract: nothing stays unfolded at teardown)."""
-        finished = self._take_barrier_finished()
-        for batch in self._pending.barrier():
-            finished.extend(batch)
-        self._tick_barrier()
+        finished: list[Request] = []
+        while self._pending:
+            finished.extend(self._retire_tick())
         return finished
 
     def run_until_drained_async(self, max_ticks: int = 1000

@@ -1,0 +1,95 @@
+"""Duplication guard: slot-pool logic lives ONLY in repro.runtime.
+
+The PR that extracted the generic continuous-batching plane moved
+``SlotPlacement``, the row-remap contract, the elastic resize /
+rebalance machinery, and the async in-flight queue + ingest pump into
+``src/repro/runtime/``.  The workloads — the KWS streaming scheduler and
+the LM serving engine — are *clients* of that plane.  This guard keeps
+it that way: a new private slot pool, resize loop, or placement class
+growing back inside a workload module fails here, statically, before it
+can drift from the shared one.
+"""
+import ast
+import pathlib
+
+import pytest
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+
+WORKLOAD_MODULES = [
+    SRC / "stream" / "scheduler.py",
+    SRC / "stream" / "state.py",
+    SRC / "stream" / "async_plane.py",
+    SRC / "serve" / "engine.py",
+]
+
+# names whose *definition* belongs to repro.runtime alone
+RUNTIME_CLASSES = {
+    "SlotPlacement", "SlotPool", "InFlightQueue", "IngestPump",
+}
+RUNTIME_FUNCTIONS = {
+    # placement / remap plane
+    "remap_rows", "remap_device_rows", "perm_keep",
+    # pool machinery (old private scheduler spellings included so the
+    # exact pre-extraction implementations cannot quietly return)
+    "next_pow2", "_next_pow2",
+    "alloc", "rebalance",
+    "_resize_inner", "_execute_rebalance",
+    "_maybe_shrink", "_maybe_rebalance",
+    "maybe_shrink", "maybe_rebalance",
+}
+
+
+def _defs(path):
+    tree = ast.parse(path.read_text(), filename=str(path))
+    classes, funcs = set(), set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            classes.add(node.name)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            funcs.add(node.name)
+    return tree, classes, funcs
+
+
+@pytest.mark.parametrize("path", WORKLOAD_MODULES,
+                         ids=lambda p: f"{p.parent.name}/{p.name}")
+def test_workload_defines_no_slot_pool_logic(path):
+    _, classes, funcs = _defs(path)
+    leaked = (classes & RUNTIME_CLASSES) | (funcs & RUNTIME_FUNCTIONS)
+    assert not leaked, (
+        f"{path.name} re-defines runtime-plane names {sorted(leaked)}; "
+        f"extend repro.runtime instead of forking it"
+    )
+
+
+@pytest.mark.parametrize("path", [
+    SRC / "stream" / "scheduler.py",
+    SRC / "stream" / "async_plane.py",
+    SRC / "serve" / "engine.py",
+], ids=lambda p: f"{p.parent.name}/{p.name}")
+def test_workload_imports_shared_runtime(path):
+    tree, _, _ = _defs(path)
+    imported = {
+        node.module
+        for node in ast.walk(tree)
+        if isinstance(node, ast.ImportFrom) and node.module
+    }
+    assert any(m == "repro.runtime" or m.startswith("repro.runtime.")
+               for m in imported), (
+        f"{path.name} no longer imports from repro.runtime — the workload "
+        f"must ride the shared slot plane"
+    )
+
+
+def test_runtime_package_owns_the_plane():
+    """The shared plane actually defines what the guard protects (guards
+    against renames silently voiding the checks above)."""
+    owned = set()
+    for mod in ("pool.py", "placement.py", "remap.py", "async_plane.py"):
+        _, classes, funcs = _defs(SRC / "runtime" / mod)
+        owned |= classes | funcs
+    assert RUNTIME_CLASSES <= owned
+    for name in ("remap_rows", "remap_device_rows", "perm_keep",
+                 "next_pow2", "alloc", "rebalance", "maybe_shrink",
+                 "maybe_rebalance"):
+        assert name in owned, name

@@ -1,0 +1,214 @@
+"""LM engine on the shared continuous-batching runtime (repro.runtime).
+
+The engine port's whole claim mirrors the async plane's: it changes WHERE
+the slot machinery lives — one generic ``SlotPool`` shared with the KWS
+streaming scheduler — never WHAT it computes.  This suite pins that:
+
+  * token parity: the ported engine (sync and ``step_async``) is
+    token-identical to the frozen pre-port engine vendored in
+    ``tests/_legacy_engine.py``, through slot refills and shutdown drain;
+  * elastic capacity: with ``max_slots``/``min_slots`` the pool doubles
+    on demand and halves at quarter occupancy *mid-decode*, emitting
+    ``lm_resize`` from the pool, with zero perturbation of any request's
+    tokens (rows travel unchanged through every pad/slice);
+  * sharded decode: under a 2-shard host mesh the slot axis shards over
+    the mesh's data axis and tokens match the unsharded engine;
+  * sharded rebalance: skewed finishes (one shard's requests all short)
+    trigger a cross-shard migration at a tick boundary — ``lm_rebalance``
+    emitted by the pool, with the event-payload completeness the report
+    pipeline relies on — again token-identically, sync and async.
+
+Runs on the CI multi-device leg (the sharded cases skip on 1-device
+hosts).
+"""
+import importlib.util
+import pathlib
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.models import api
+from repro.obs import Observability
+from repro.serve.engine import Engine, Request
+
+_SPEC = importlib.util.spec_from_file_location(
+    "legacy_engine", pathlib.Path(__file__).with_name("_legacy_engine.py"))
+legacy = importlib.util.module_from_spec(_SPEC)
+sys.modules["legacy_engine"] = legacy  # dataclass field resolution
+_SPEC.loader.exec_module(legacy)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_arch("qwen3-0.6b", smoke=True)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _submit(eng, lengths):
+    for i, n in enumerate(lengths):
+        eng.submit(Request(rid=i, prompt=np.arange(6, dtype=np.int32) + i,
+                           max_new_tokens=n))
+
+
+def _tokens(done):
+    return {r.rid: list(r.out_tokens) for r in done}
+
+
+def _run(eng, lengths, async_mode):
+    _submit(eng, lengths)
+    done = (eng.run_until_drained_async() if async_mode
+            else eng.run_until_drained())
+    assert not eng._pending
+    assert all(r.done for r in done)
+    return _tokens(done)
+
+
+# ---------------------------------------------------------------------------
+# Parity against the frozen pre-port engine
+# ---------------------------------------------------------------------------
+
+def test_engine_token_parity_with_frozen_oracle(lm):
+    """Sync and async decode through the pool-backed engine produce the
+    exact token streams of the pre-refactor engine, through refills,
+    uneven request lengths, and the shutdown drain."""
+    cfg, params = lm
+    lengths = [3, 5, 2, 4, 3]
+
+    def make(cls):
+        return cls(cfg, params, batch_slots=2, max_seq=32,
+                   obs=Observability.create(mirror_events=False))
+
+    oracle_sync = _run(make(legacy.Engine), lengths, async_mode=False)
+    oracle_asyn = _run(make(legacy.Engine), lengths, async_mode=True)
+    ported_sync = _run(make(Engine), lengths, async_mode=False)
+    ported_asyn = _run(make(Engine), lengths, async_mode=True)
+    assert set(ported_sync) == set(range(len(lengths)))
+    assert ported_sync == oracle_sync
+    assert ported_asyn == oracle_asyn
+    assert ported_sync == ported_asyn
+
+
+def test_engine_lifecycle_events_preserved(lm):
+    """The port keeps the engine's request-lifecycle event stream: every
+    request still gets lm_submit / lm_slot_fill / lm_finish."""
+    cfg, params = lm
+    obs = Observability.create(mirror_events=False)
+    eng = Engine(cfg, params, batch_slots=2, max_seq=32, obs=obs)
+    done = _run(eng, [3, 2, 3], async_mode=False)
+    assert set(done) == {0, 1, 2}
+    counts = obs.events.counts()
+    assert counts.get("lm_submit") == 3
+    assert counts.get("lm_slot_fill") == 3
+    assert counts.get("lm_finish") == 3
+
+
+# ---------------------------------------------------------------------------
+# Elastic capacity (grow/shrink mid-decode)
+# ---------------------------------------------------------------------------
+
+def test_engine_elastic_grow_shrink_mid_decode(lm):
+    """``max_slots`` turns the fixed pool elastic: admitting 6 requests
+    through a 2-slot pool doubles it to 8 on demand, and the short
+    requests finishing shrinks it back — all mid-decode, with the
+    surviving requests' tokens untouched (vs a fixed 8-slot oracle) and
+    ``lm_resize`` emitted by the pool with the full payload."""
+    cfg, params = lm
+    lengths = [8, 2, 7, 2, 6, 2]  # staggered: finishes straddle resizes
+
+    oracle = _run(
+        legacy.Engine(cfg, params, batch_slots=8, max_seq=32,
+                      obs=Observability.create(mirror_events=False)),
+        lengths, async_mode=False)
+
+    for async_mode in (False, True):
+        obs = Observability.create(mirror_events=False)
+        eng = Engine(cfg, params, batch_slots=2, max_seq=32, obs=obs,
+                     max_slots=8, min_slots=2)
+        assert eng.slots == 2
+        out = _run(eng, lengths, async_mode=async_mode)
+        assert out == oracle, f"async_mode={async_mode}"
+        resizes = [e for e in obs.events.tail() if e["event"] == "lm_resize"]
+        grew = [e for e in resizes if e["new"] > e["old"]]
+        shrank = [e for e in resizes if e["new"] < e["old"]]
+        assert grew and shrank, resizes
+        assert eng.slots < 8  # churn shrank the pool back down
+        for e in resizes:  # pool-emitted payload completeness
+            assert {"old", "new", "active", "shards"} <= set(e)
+
+
+def test_engine_ceiling_queues_instead_of_failing(lm):
+    """At the capacity ceiling the queue holds (continuous batching), and
+    every request still completes as slots vacate."""
+    cfg, params = lm
+    eng = Engine(cfg, params, batch_slots=1, max_seq=32, max_slots=2,
+                 obs=Observability.create(mirror_events=False))
+    out = _run(eng, [3, 3, 3, 3], async_mode=False)
+    assert set(out) == {0, 1, 2, 3}
+    assert all(len(t) == 3 for t in out.values())
+
+
+# ---------------------------------------------------------------------------
+# Sharded decode (CI multi-device leg)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >=2 devices (multi-device CI leg)")
+def test_engine_sharded_decode_smoke(lm):
+    """2-shard mesh: the cache's slot axis shards over the mesh's data
+    axis and decode is token-identical to the unsharded engine."""
+    from repro.launch.mesh import make_stream_mesh
+    cfg, params = lm
+    mesh = make_stream_mesh(2)
+    lengths = [3, 4, 2, 3, 4, 2]
+
+    def make(mesh_arg):
+        return Engine(cfg, params, batch_slots=4, max_seq=32, mesh=mesh_arg,
+                      obs=Observability.create(mirror_events=False))
+
+    base = _run(make(None), lengths, async_mode=False)
+    shard_sync = _run(make(mesh), lengths, async_mode=False)
+    shard_asyn = _run(make(mesh), lengths, async_mode=True)
+    assert shard_sync == base
+    assert shard_asyn == base
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >=2 devices (multi-device CI leg)")
+def test_engine_sharded_rebalance_event_complete(lm):
+    """Skewed finishes under a mesh: one shard's requests are all short,
+    so it empties while the other stays full — the pool migrates rows at
+    the tick boundary (``lm_rebalance`` with the complete payload the
+    report pipeline consumes) and every surviving request's tokens are
+    identical to the unsharded run.  This is the event-log completeness
+    gate for the multi-device CI leg."""
+    from repro.launch.mesh import make_stream_mesh
+    cfg, params = lm
+    mesh = make_stream_mesh(2)
+    # least-loaded placement alternates shards: even rids land on shard 0,
+    # odd on shard 1.  Short even requests empty shard 0 mid-decode.
+    lengths = [2, 8, 2, 8, 2, 8, 2, 8]
+
+    base = _run(
+        Engine(cfg, params, batch_slots=8, max_seq=32,
+               obs=Observability.create(mirror_events=False)),
+        lengths, async_mode=False)
+
+    for async_mode in (False, True):
+        obs = Observability.create(mirror_events=False)
+        eng = Engine(cfg, params, batch_slots=8, max_seq=32, mesh=mesh,
+                     obs=obs)
+        out = _run(eng, lengths, async_mode=async_mode)
+        assert out == base, f"async_mode={async_mode}"
+        rebs = [e for e in obs.events.tail()
+                if e["event"] == "lm_rebalance"]
+        assert rebs, "skewed finishes never triggered a migration"
+        for e in rebs:  # pool-emitted payload completeness
+            assert {"moves", "shards", "occupancy_before",
+                    "occupancy_after"} <= set(e)
+            assert e["shards"] == 2
+            assert max(e["occupancy_after"]) - min(e["occupancy_after"]) \
+                <= max(e["occupancy_before"]) - min(e["occupancy_before"])
